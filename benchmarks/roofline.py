@@ -1,0 +1,61 @@
+"""Roofline table builder: reads the dry-run JSON records (deliverable g)
+and emits the per-(arch x shape) three-term table + bottleneck."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_records(out_dir: str = "experiments/dryrun",
+                 tag: str = "singlepod") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"{tag}__*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def roofline_rows(out_dir: str = "experiments/dryrun",
+                  tag: str = "singlepod") -> List[Dict]:
+    rows = []
+    for rec in load_records(out_dir, tag):
+        if "skipped" in rec or "error" in rec:
+            rows.append({"bench": "roofline", "arch": rec["arch"],
+                         "shape": rec["shape"],
+                         "status": rec.get("skipped", "ERROR")})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "bench": "roofline", "arch": rec["arch"],
+            "shape": rec["shape"], "status": "ok",
+            "compute_s": round(r["compute_s"], 4),
+            "memory_s": round(r["memory_s"], 4),
+            "collective_s": round(r["collective_s"], 4),
+            "dominant": r["dominant"],
+            "useful_ratio": round(rec.get("useful_ratio", 0), 3),
+            "moe": rec.get("moe"),
+        })
+    return rows
+
+
+def markdown_table(tag: str = "singlepod",
+                   out_dir: str = "experiments/dryrun") -> str:
+    rows = roofline_rows(out_dir, tag)
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | useful |",
+             "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']} | — |")
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']} | "
+                f"{r['memory_s']} | {r['collective_s']} | {r['dominant']} "
+                f"| {r['useful_ratio']} |")
+    return "\n".join(lines)
+
+
+ALL = [roofline_rows]

@@ -1,0 +1,36 @@
+"""Benchmark runner: one function per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call empty for analytic
+benches; derived is a compact JSON of the row)."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main() -> None:
+    from benchmarks import microbench, paper_figures, roofline
+
+    rows = []
+    for fn in paper_figures.ALL:
+        rows.extend(fn())
+    for fn in microbench.ALL:
+        rows.extend(fn())
+    try:
+        rows.extend(roofline.roofline_rows())
+    except Exception as e:                        # dry-run not yet executed
+        print(f"# roofline records unavailable: {e}", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = r.pop("bench")
+        sub = "/".join(str(r[k]) for k in ("model", "arch", "variant",
+                                           "strategy", "B", "shape", "n",
+                                           "N")
+                       if k in r and r[k] is not None)
+        us = r.pop("us_per_call", "")
+        print(f"{name}:{sub},{us},{json.dumps(r, sort_keys=True)}")
+
+
+if __name__ == "__main__":
+    main()

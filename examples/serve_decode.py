@@ -1,0 +1,61 @@
+"""Serving example: prefill a batch of prompts, then batched decode with
+per-family KV caches (full / ring-buffer / MLA-compressed / SSM state).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch deepseek-v2-lite-16b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.api import get_model
+from repro.models.kv_cache import cache_bytes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-lite-16b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(cfg, key)
+
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.frontend == "audio_stub":
+        e = cfg.encoder
+        batch["frames"] = 0.02 * jax.random.normal(
+            key, (args.batch, e.context_len, e.d_model))
+
+    t0 = time.perf_counter()
+    logits, cache = model.prefill(
+        params, batch, cfg, max_len=args.prompt_len + args.gen,
+        dtype=jnp.float32)
+    print(f"prefill {args.prompt_len} tokens x {args.batch} seqs: "
+          f"{(time.perf_counter()-t0)*1e3:.0f}ms  "
+          f"cache={cache_bytes(cache['layers'])/2**20:.2f}MiB")
+
+    step = jax.jit(lambda p, c, t: model.decode_step(p, c, t, cfg))
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    dt = time.perf_counter() - t0
+    toks = jnp.concatenate(out, axis=1)
+    print(f"greedy-decoded {args.gen} tokens/seq in {dt*1e3:.0f}ms "
+          f"({args.gen*args.batch/dt:.1f} tok/s on CPU)")
+    print("sample token ids:", toks[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

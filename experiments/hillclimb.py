@@ -1,0 +1,133 @@
+"""Perf-iteration harness (§Perf): re-lower one cell under a knob change
+and report the roofline delta vs the recorded baseline.
+
+    PYTHONPATH=src python experiments/hillclimb.py jamba_scan
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import dataclasses
+import json
+import sys
+
+from repro.launch.dryrun import lower_cell
+
+
+def _moe(cfg, **kw):
+    return dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, **kw))
+
+
+ITERATIONS = {
+    # jamba train_4k -------------------------------------------------
+    "jamba_scan": dict(
+        arch="jamba-1.5-large-398b", shape="train_4k",
+        cfg_override=lambda c: _moe(c, pipeline_unroll=False),
+        hypothesis="scan-mode chunks accumulate expert-weight grads in "
+                   "the loop carry -> ONE dp-psum instead of one per "
+                   "chunk (n=16): collective_bytes down ~25%"),
+    "jamba_seqpar": dict(
+        arch="jamba-1.5-large-398b", shape="train_4k", seq_parallel=True,
+        hypothesis="seq-parallel residual: norms + residual math run "
+                   "S/16-sharded; fp32 norm-backward chains shrink 16x "
+                   "-> memory_s down >25%"),
+    "jamba_both": dict(
+        arch="jamba-1.5-large-398b", shape="train_4k", seq_parallel=True,
+        cfg_override=lambda c: _moe(c, pipeline_unroll=False),
+        hypothesis="combine scan chunks + seq-parallel"),
+    "jamba_n4": dict(
+        arch="jamba-1.5-large-398b", shape="train_4k",
+        cfg_override=lambda c: _moe(c, num_partitions=4),
+        hypothesis="fewer chunks (4 vs 16): less per-chunk psum traffic "
+                   "at the cost of coarser overlap"),
+    "jamba_scan_n4": dict(
+        arch="jamba-1.5-large-398b", shape="train_4k",
+        cfg_override=lambda c: _moe(c, num_partitions=4,
+                                    pipeline_unroll=False),
+        hypothesis="combine the two confirmed wins: scan buffers (mem "
+                   "-33%) + n=4 (coll -40%); expect both to compose"),
+    "jamba_n1_none": dict(
+        arch="jamba-1.5-large-398b", shape="train_4k",
+        cfg_override=lambda c: _moe(c, num_partitions=1,
+                                    memory_reuse_strategy="none"),
+        hypothesis="paper ablation: no pipelining, no reuse (FastMoE-"
+                   "style) — baseline for the paper-faithful comparison"),
+    "jamba_zero3": dict(
+        arch="jamba-1.5-large-398b", shape="train_4k",
+        cfg_override=lambda c: _moe(c, num_partitions=4,
+                                    pipeline_unroll=False),
+        hypothesis="explicit ZeRO-3 expert-weight gather: one RS of "
+                   "weight grads instead of per-chunk psums; composes "
+                   "with scan+n4"),
+    # arctic train_4k ------------------------------------------------
+    "arctic_scan": dict(
+        arch="arctic-480b", shape="train_4k",
+        cfg_override=lambda c: _moe(c, pipeline_unroll=False),
+        hypothesis="128-expert EP: per-chunk grad psums dominate "
+                   "collective_s (64s) -> scan mode"),
+    "arctic_seqattn_fix": dict(
+        arch="arctic-480b", shape="train_4k",
+        hypothesis="single-q-chunk flash for the 56-head seq-parallel "
+                   "fallback: scores stay S/16-sharded, killing the "
+                   "2240x 224MB per-tile ARs (collective_s -60%+) "
+                   "[+ ZeRO-3 gather now default]"),
+    "arctic_seqpar_scan": dict(
+        arch="arctic-480b", shape="train_4k", seq_parallel=True,
+        cfg_override=lambda c: _moe(c, pipeline_unroll=False),
+        hypothesis="scan chunks + seq-parallel residual"),
+    "arctic_capacity1": dict(
+        arch="arctic-480b", shape="train_4k",
+        cfg_override=lambda c: _moe(c, capacity_factor=1.0,
+                                    pipeline_unroll=False),
+        hypothesis="cf 1.25->1.0: A2A + expert GEMM bytes down 20%"),
+    # qwen2-vl train_4k ----------------------------------------------
+    "qwen2vl_seqpar": dict(
+        arch="qwen2-vl-2b", shape="train_4k", seq_parallel=True,
+        hypothesis="12 heads % 16 != 0 forces seq-sharded attention "
+                   "already; seq-parallel residual removes the gather/"
+                   "scatter churn around each block"),
+    "qwen2vl_remat_dots": dict(
+        arch="qwen2-vl-2b", shape="train_4k",
+        cfg_override=lambda c: dataclasses.replace(c,
+                                                   remat_policy="dots"),
+        hypothesis="2B model: full remat wastes recompute (useful 0.26); "
+                   "saving matmul outputs trades HBM for -25% flops"),
+    "qwen2vl_nothing": dict(
+        arch="qwen2-vl-2b", shape="train_4k",
+        cfg_override=lambda c: dataclasses.replace(c,
+                                                   remat_policy="nothing"),
+        hypothesis="2B params: no remat at all — activations fit; "
+                   "removes the whole recompute pass"),
+}
+
+
+def main():
+    names = sys.argv[1:] or list(ITERATIONS)
+    out_dir = "experiments/perf"
+    os.makedirs(out_dir, exist_ok=True)
+    for name in names:
+        it = ITERATIONS[name]
+        rec = lower_cell(it["arch"], it["shape"],
+                         cfg_override=it.get("cfg_override"),
+                         seq_parallel=it.get("seq_parallel", False))
+        rec["iteration"] = name
+        rec["hypothesis"] = it["hypothesis"]
+        base_path = (f"experiments/dryrun/singlepod__{it['arch']}__"
+                     f"{it['shape']}.json")
+        if os.path.exists(base_path):
+            base = json.load(open(base_path))
+            if "roofline" in base and "roofline" in rec:
+                rec["delta"] = {
+                    k: round(rec["roofline"][k] / max(base["roofline"][k],
+                                                      1e-12), 3)
+                    for k in ("compute_s", "memory_s", "collective_s")}
+        with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        r = rec.get("roofline", {})
+        print(f"{name:22s} comp={r.get('compute_s', 0):8.2f} "
+              f"mem={r.get('memory_s', 0):8.2f} "
+              f"coll={r.get('collective_s', 0):8.2f} "
+              f"delta={rec.get('delta')}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

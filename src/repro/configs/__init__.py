@@ -1,0 +1,46 @@
+"""Config registry: ``get_config("<arch-id>")`` and the shape table."""
+from repro.configs.base import (SHAPES, ArchConfig, AttentionConfig,
+                                EncoderConfig, MambaConfig, MLAConfig,
+                                MoEConfig, ShapeConfig, XLSTMConfig,
+                                applicable)
+
+from repro.configs.jamba_1_5_large_398b import CONFIG as _jamba
+from repro.configs.whisper_medium import CONFIG as _whisper
+from repro.configs.gemma3_12b import CONFIG as _gemma3
+from repro.configs.qwen1_5_110b import CONFIG as _qwen15
+from repro.configs.h2o_danube_1_8b import CONFIG as _danube
+from repro.configs.llama3_8b import CONFIG as _llama3
+from repro.configs.xlstm_1_3b import CONFIG as _xlstm
+from repro.configs.arctic_480b import CONFIG as _arctic
+from repro.configs.deepseek_v2_lite_16b import CONFIG as _dsv2
+from repro.configs.qwen2_vl_2b import CONFIG as _qwen2vl
+from repro.configs.paper_moe import MOE_BERT_L, MOE_GPT3_S, MOE_GPT3_XL
+
+ARCHS = {c.name: c for c in [
+    _jamba, _whisper, _gemma3, _qwen15, _danube, _llama3, _xlstm, _arctic,
+    _dsv2, _qwen2vl, MOE_GPT3_S, MOE_GPT3_XL, MOE_BERT_L,
+]}
+
+# The ten assigned architectures (the paper's own three are extras).
+ASSIGNED = (
+    "jamba-1.5-large-398b", "whisper-medium", "gemma3-12b", "qwen1.5-110b",
+    "h2o-danube-1.8b", "llama3-8b", "xlstm-1.3b", "arctic-480b",
+    "deepseek-v2-lite-16b", "qwen2-vl-2b",
+)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+__all__ = [
+    "ARCHS", "ASSIGNED", "SHAPES", "ArchConfig", "AttentionConfig",
+    "EncoderConfig", "MambaConfig", "MLAConfig", "MoEConfig", "ShapeConfig",
+    "XLSTMConfig", "applicable", "get_config", "list_archs",
+]

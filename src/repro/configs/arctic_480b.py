@@ -1,0 +1,27 @@
+"""Snowflake Arctic (480B): dense-MoE hybrid, 128 experts top-2 + dense
+residual on every layer.
+
+[hf:Snowflake/snowflake-arctic-base; hf] — 35L d_model=7168 56H (GQA kv=8)
+d_ff=4864 vocab=32000, MoE 128e top-2.
+"""
+from repro.configs.base import ArchConfig, AttentionConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    source="hf:Snowflake/snowflake-arctic-base; hf",
+    num_layers=35,
+    d_model=7168,
+    d_ff=4864,                       # dense residual FFN hidden
+    vocab_size=32000,
+    attn=AttentionConfig(num_heads=56, num_kv_heads=8, head_dim=128,
+                         rope_theta=10_000.0),
+    moe=MoEConfig(num_experts=128, top_k=2, d_expert=4864,
+                  dense_residual=True, moe_period=1),
+    block_pattern=("attn",),
+    ffn_act="silu",
+    gated_ffn=True,
+    norm="rmsnorm",
+    max_position=4096,
+    optimizer="adafactor",           # 480B: fp32 Adam does not fit
+)

@@ -1,0 +1,26 @@
+"""Qwen2-VL 2B: VLM decoder backbone with M-RoPE; vision frontend stubbed.
+
+[arXiv:2409.12191; hf] — 28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936. The vision tower is a STUB: input_specs() provides
+precomputed patch embeddings merged into the token sequence.
+"""
+from repro.configs.base import ArchConfig, AttentionConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    source="arXiv:2409.12191; hf",
+    num_layers=28,
+    d_model=1536,
+    d_ff=8960,
+    vocab_size=151936,
+    attn=AttentionConfig(num_heads=12, num_kv_heads=2, head_dim=128,
+                         qkv_bias=True, mrope=True, rope_theta=1_000_000.0),
+    block_pattern=("attn",),
+    ffn_act="silu",
+    gated_ffn=True,
+    norm="rmsnorm",
+    tie_embeddings=True,
+    max_position=131072,
+    frontend="vision_stub",
+)

@@ -1,0 +1,28 @@
+"""Whisper-medium: encoder-decoder audio model, conv frontend stubbed.
+
+[arXiv:2212.04356; unverified] — 24L d_model=1024 16H (kv=16) d_ff=4096
+vocab=51865. The conv frontend is a STUB: input_specs() provides
+precomputed frame embeddings (B, 1500, 1024) for the encoder.
+"""
+from repro.configs.base import ArchConfig, AttentionConfig, EncoderConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    kind="encdec",
+    source="arXiv:2212.04356; unverified",
+    num_layers=24,                   # decoder layers
+    d_model=1024,
+    d_ff=4096,
+    vocab_size=51865,
+    attn=AttentionConfig(num_heads=16, num_kv_heads=16, qkv_bias=True),
+    encoder=EncoderConfig(num_layers=24, context_len=1500,
+                          d_model=1024, num_heads=16, d_ff=4096),
+    block_pattern=("attn",),
+    ffn_act="gelu",
+    gated_ffn=False,
+    norm="layernorm",
+    positional="learned",
+    max_position=32768,              # decoder positions (shape-driven)
+    frontend="audio_stub",
+)

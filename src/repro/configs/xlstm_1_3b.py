@@ -1,0 +1,24 @@
+"""xLSTM-1.3B: sLSTM + mLSTM blocks (xLSTM[7:1]), no FFN (d_ff=0).
+
+[arXiv:2405.04517; unverified] — 48L d_model=2048 4H d_ff=0 vocab=50304.
+One sLSTM block per 8 (offset 0), seven mLSTM blocks. Blocks carry their
+own up/down projections (proj_factor), so there is no separate FFN.
+"""
+from repro.configs.base import ArchConfig, AttentionConfig, XLSTMConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    source="arXiv:2405.04517; unverified",
+    num_layers=48,
+    d_model=2048,
+    d_ff=0,                          # xLSTM blocks replace the FFN
+    vocab_size=50304,
+    attn=AttentionConfig(num_heads=4, num_kv_heads=4),   # mLSTM heads
+    xlstm=XLSTMConfig(slstm_period=8, slstm_offset=0,
+                      proj_factor_mlstm=2.0, conv1d_kernel=4),
+    block_pattern=("mlstm",),        # overridden per-layer by slstm_period
+    norm="layernorm",
+    positional="none",               # recurrence carries position
+    max_position=524288,
+)

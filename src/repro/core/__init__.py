@@ -1,0 +1,20 @@
+"""MPipeMoE core: adaptive pipelined expert parallelism + memory reuse."""
+from repro.core.granularity import GranularitySearcher
+from repro.core.memory_model import MoEMemory
+from repro.core.perf_model import (MoEWorkload, all_costs, cost,
+                                   select_strategy, stream_times)
+from repro.core.pipeline_moe import capacity_for, pipelined_moe
+from repro.core.pipeline_sim import simulate, sweep_partitions
+from repro.core.selector import make_searcher, moe_workload, resolve
+from repro.core.strategies import (host_offload_supported, remat_policy,
+                                   wrap_chunk)
+from repro.core.types import (Q_TABLE, TPU_V5E, HardwareSpec, Interference,
+                              Strategy)
+
+__all__ = [
+    "GranularitySearcher", "MoEMemory", "MoEWorkload", "Q_TABLE", "TPU_V5E",
+    "HardwareSpec", "Interference", "Strategy", "all_costs", "capacity_for",
+    "cost", "host_offload_supported", "make_searcher", "moe_workload",
+    "pipelined_moe", "remat_policy", "resolve", "select_strategy",
+    "simulate", "stream_times", "sweep_partitions", "wrap_chunk",
+]

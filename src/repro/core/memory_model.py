@@ -1,0 +1,74 @@
+"""Analytic memory-footprint model of an MoE layer (paper Eqs. 1–6).
+
+All quantities in *elements* by default (paper convention); multiply by
+``bytes_per`` for bytes. B is the token batch, M model dim, H hidden dim,
+E experts, n pipeline partitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEMemory:
+    b: int
+    m: int
+    h: int
+    e: int
+    n: int = 4
+    bytes_per: float = 4.0
+    optimizer_states: int = 4      # params + grads + adam m + adam v
+
+    # -- Eq. 1: model states -------------------------------------------
+    @property
+    def m_ms(self) -> float:
+        return self.optimizer_states * (self.e * self.m
+                                        + 2 * self.h * self.m)
+
+    # -- Eq. 2: activations (T_I, T_DI, T_DO, T_O are (B,M); T_M is (B,H))
+    @property
+    def m_act(self) -> float:
+        return 4 * self.b * self.m + self.b * self.h
+
+    # -- Eq. 3: temporary buffers (two adjacent gradient tensors live)
+    @property
+    def m_buf(self) -> float:
+        return self.b * self.m + self.b * self.h
+
+    # -- Eq. 4: with pipelining, peak temp = activations of the pipeline
+    @property
+    def m_buf_pipe(self) -> float:
+        return self.m_act_pipe
+
+    @property
+    def m_act_pipe(self) -> float:
+        return 4 * self.b * self.m + self.b * self.h
+
+    # -- Eq. 5: savings from sharing partition buffers.
+    # T_DI and T_DO shrink from m to 2m/n (double buffer), T_M to m/n.
+    @property
+    def delta_act(self) -> float:
+        return self.b * (2 * self.m * (self.n - 2) / self.n
+                         + self.h * (self.n - 1) / self.n)
+
+    @property
+    def delta_buf(self) -> float:
+        return self.delta_act
+
+    # -- Eq. 6: saving ratio -------------------------------------------
+    @property
+    def phi(self) -> float:
+        return ((self.delta_act + self.delta_buf)
+                / (self.m_ms + self.m_act_pipe + self.m_buf_pipe))
+
+    # -- convenience ----------------------------------------------------
+    def totals(self) -> dict:
+        scale = self.bytes_per
+        return {
+            "model_states": self.m_ms * scale,
+            "activations": self.m_act * scale,
+            "temp_buffers": self.m_buf * scale,
+            "act_reused": (self.m_act - self.delta_act) * scale,
+            "buf_reused": (self.m_buf_pipe - self.delta_buf) * scale,
+            "phi": self.phi,
+        }

@@ -1,0 +1,73 @@
+"""Adaptive runtime configuration (paper §III-C + §III-E).
+
+Resolves the two runtime knobs of MPipeMoE *before* jit (they are static
+shape/structure choices):
+
+* pipeline granularity ``n``  — Algorithm 1 over the injected measure
+  function (wall-clock on hardware; the pipeline simulator otherwise);
+* memory-reuse strategy       — Eq. 10 argmin, masked by hardware
+  capacities (no host offload => S1–S3 unavailable).
+
+Returns an updated ArchConfig; the training loop re-jits when the
+resolved (n, strategy) changes (compilation cache keyed by them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.granularity import GranularitySearcher
+from repro.core.perf_model import MoEWorkload, select_strategy
+from repro.core.pipeline_sim import simulate
+from repro.core.strategies import host_offload_supported
+from repro.core.types import HardwareSpec, Strategy
+
+
+def moe_workload(cfg: ArchConfig, local_tokens: int, ep_size: int,
+                 dtype_bytes: int = 2, dp: int = 16) -> MoEWorkload:
+    m = cfg.moe
+    return MoEWorkload(b=local_tokens, m=cfg.d_model, h=m.d_expert,
+                       k=m.top_k, ep=ep_size, dtype_bytes=dtype_bytes,
+                       gated=cfg.gated_ffn,
+                       e_local=max(1, m.num_experts // ep_size), dp=dp)
+
+
+def make_searcher(cfg: ArchConfig, ep_size: int, hw: HardwareSpec,
+                  measure_fn: Optional[Callable] = None,
+                  strategy: Strategy = Strategy.NONE, dp: int = 16
+                  ) -> GranularitySearcher:
+    if measure_fn is None:
+        def measure_fn(b: int, n: int) -> float:
+            return simulate(moe_workload(cfg, b, ep_size, dp=dp), hw, n,
+                            strategy)
+    return GranularitySearcher(measure_fn)
+
+
+def resolve(cfg: ArchConfig, *, local_tokens: int, ep_size: int,
+            hw: HardwareSpec, searcher: Optional[GranularitySearcher] = None,
+            allow_offload: Optional[bool] = None, dp: int = 16
+            ) -> ArchConfig:
+    """Fill in adaptive (n, strategy) -> concrete values in cfg.moe."""
+    if cfg.moe is None:
+        return cfg
+    m = cfg.moe
+    w = moe_workload(cfg, local_tokens, ep_size, dp=dp)
+
+    strategy = m.memory_reuse_strategy
+    if strategy == "adaptive":
+        if allow_offload is None:
+            allow_offload = hw.has_host_offload and host_offload_supported()
+        hw_eff = dataclasses.replace(hw, has_host_offload=allow_offload)
+        strategy = select_strategy(w, hw_eff).value
+
+    n = m.num_partitions
+    if n == 0:
+        searcher = searcher or make_searcher(cfg, ep_size, hw,
+                                             strategy=Strategy(strategy),
+                                             dp=dp)
+        n = searcher.best_n(local_tokens)
+
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(m, num_partitions=n,
+                                     memory_reuse_strategy=strategy))

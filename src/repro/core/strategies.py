@@ -1,0 +1,64 @@
+"""Memory-reuse strategies S1–S4 as JAX remat/offload policies.
+
+The per-chunk MoE function tags its residuals with
+``checkpoint_name(x, "t_di")`` / ``"t_m"``. Wrapping the chunk in
+``jax.checkpoint`` with the policies below yields the paper's exact
+restore semantics:
+
+* saved  -> resident in HBM (no reuse for that tensor)
+* offloaded -> copied to ``pinned_host`` in forward, fetched in backward
+* dropped -> rematerialized: ``t_di`` by re-running the dispatch
+  All-to-All (re-communication), ``t_m`` by re-running GEMM1 (recompute)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+
+from repro.core.types import Strategy
+
+NAMES = ("t_di", "t_m")
+
+
+def host_offload_supported() -> bool:
+    try:
+        dev = jax.devices()[0]
+        kinds = getattr(dev, "memory_kinds", None)
+        if callable(kinds):
+            kinds = kinds()
+        return kinds is not None and "pinned_host" in tuple(kinds)
+    except Exception:
+        return False
+
+
+@functools.lru_cache(maxsize=None)
+def remat_policy(strategy: Strategy, allow_offload: Optional[bool] = None):
+    """Return a jax.checkpoint policy, or None for Strategy.NONE-without-
+    wrapper semantics handled by the caller."""
+    if allow_offload is None:
+        allow_offload = host_offload_supported()
+    saves = strategy.saves
+    offloads = strategy.offloads
+    if offloads and not allow_offload:
+        # capacity-aware degradation (§III-E: hardware capacities are an
+        # input of the selector): offloaded tensors become device-saved.
+        saves = tuple(sorted(set(saves) | set(offloads)))
+        offloads = ()
+    if offloads:
+        return jax.checkpoint_policies.save_and_offload_only_these_names(
+            names_which_can_be_saved=list(saves),
+            names_which_can_be_offloaded=list(offloads),
+            offload_src="device", offload_dst="pinned_host")
+    return jax.checkpoint_policies.save_only_these_names(*saves)
+
+
+def wrap_chunk(fn: Callable, strategy: Strategy,
+               allow_offload: Optional[bool] = None) -> Callable:
+    """Apply the strategy's remat policy to a per-chunk function."""
+    if strategy == Strategy.NONE:
+        # no reuse: keep all residuals (no checkpoint wrapper)
+        return fn
+    return jax.checkpoint(fn, policy=remat_policy(strategy, allow_offload),
+                          prevent_cse=False)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticTokens
+
+__all__ = ["SyntheticTokens"]

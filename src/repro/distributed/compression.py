@@ -1,0 +1,50 @@
+"""Gradient compression for cross-pod reduction: int8 quantization with
+error feedback (residual carried to the next step so compression noise is
+unbiased over time). Used by the train loop's ``compress_grads`` option —
+cross-pod links are the scarcest bandwidth at 1000+ node scale.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True) if x.ndim else \
+        jnp.abs(x)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, error: Optional[dict]):
+    """grads + carried error -> (compressed-and-restored grads, new error).
+
+    The returned grads have passed through int8 round-trip (what the wire
+    would carry); the quantization residual becomes the next step's error
+    feedback. Leaves with ndim 0/1 pass through uncompressed.
+    """
+    if error is None:
+        error = jax.tree_util.tree_map(lambda g: jnp.zeros_like(
+            g, jnp.float32), grads)
+
+    def one(g, e):
+        if g.ndim < 2:
+            return g, jnp.zeros_like(g, jnp.float32)
+        x = g.astype(jnp.float32) + e
+        q, s = quantize_int8(x)
+        out = dequantize_int8(q, s)
+        return out.astype(g.dtype), x - out
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs])
+    new_e = jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs])
+    return new_g, new_e

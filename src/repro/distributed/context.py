@@ -1,0 +1,62 @@
+"""Distribution context threaded through model apply functions."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: "jax.sharding.Mesh"
+    dp_axes: Tuple[str, ...] = ("data",)
+    ep_axis: Optional[str] = "model"      # expert-parallel mesh axis
+    tp_axis: Optional[str] = "model"      # tensor-parallel mesh axis
+    seq_parallel: bool = False            # residual stream seq-sharded
+                                          # over tp (Korthikanti-style)
+
+    @property
+    def ep_size(self) -> int:
+        if self.ep_axis is None:
+            return 1
+        return self.mesh.shape[self.ep_axis]
+
+    @property
+    def tp_size(self) -> int:
+        if self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def dp_size(self) -> int:
+        out = 1
+        for a in self.dp_axes:
+            out *= self.mesh.shape[a]
+        return out
+
+    def constrain(self, x, dims: Tuple[Optional[str], ...]):
+        """Activation sharding constraint. dims entries: 'dp' | 'tp' |
+        None. Drops an entry when the dim isn't divisible (e.g. batch=1
+        at long-context decode). Without constraints, GSPMD propagates
+        FSDP weight shardings into activations and replicates the batch —
+        constraints force gather-at-use (ZeRO) semantics instead."""
+        import jax
+        from jax.sharding import PartitionSpec as P
+        entries = []
+        for size, d in zip(x.shape, dims):
+            ax = (self.dp_axes if d == "dp"
+                  else (self.tp_axis,) if d == "tp" and self.tp_axis
+                  else None)
+            if ax:
+                ext = 1
+                for a in ax:
+                    ext *= self.mesh.shape[a]
+                if ext == 0 or size % ext != 0:
+                    ax = None
+            entries.append(ax if ax is None or len(ax) > 1 else ax[0])
+        return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+def constrain(dist: Optional[DistContext], x, dims):
+    return x if dist is None else dist.constrain(x, dims)

@@ -1,0 +1,109 @@
+"""FlashAttention Pallas TPU kernel (forward).
+
+Grid (batch*q_heads, q_tiles, kv_tiles); kv is the innermost (sequential
+on TPU) axis, so the online-softmax running stats (m, l) and the output
+accumulator live in VMEM scratch across kv steps — scores never touch
+HBM. GQA is handled by the KV BlockSpec index maps (kv head = q head //
+group): no materialized repeat, the DMA just re-reads the shared head.
+Causal/sliding-window masking is positional; fully-masked tiles write
+nothing but are still visited (grid is static).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # [bq, D]
+    k = k_ref[0]                                   # [bk, D]
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < seq_k
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True,
+                           window: int = 0, block_q: int = 512,
+                           block_k: int = 512, interpret: bool = False):
+    """q: [BH, Sq, D]; k/v: [BKV, Sk, D] with BH = BKV * group.
+
+    Returns [BH, Sq, D]. Callers flatten (batch, heads) into dim 0; the
+    index maps route q-head h to kv-head h // group.
+    """
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    group = bh // bkv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    sq_p, sk_p = -(-sq // bq) * bq, -(-sk // bk) * bk
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0)))
+    grid = (bh, sq_p // bq, sk_p // bk)
+    scale = d ** -0.5
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, seq_k=sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

@@ -1,0 +1,25 @@
+"""Jit'd wrapper: [B,S,H,D]-layout entry point for the flash kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_k: int = 512):
+    """q: [B,Sq,Hq,D]; k/v: [B,Sk,Kv,D] -> [B,Sq,Hq,D]."""
+    b, sq, hq, d = q.shape
+    _, sk, kv, _ = k.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, sk, d)
+    out = flash_attention_kernel(qf, kf, vf, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=_interpret())
+    return out.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive softmax)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [BH, Sq, D]; k/v: [BKV, Sk, D] (BH = BKV * group)."""
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    g = bh // bkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=0)
+        v = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("hqd,htd->hqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("hqt,htd->hqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

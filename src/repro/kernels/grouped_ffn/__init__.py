@@ -1,0 +1,4 @@
+from repro.kernels.grouped_ffn.ops import grouped_ffn
+from repro.kernels.grouped_ffn.ref import grouped_ffn_ref
+
+__all__ = ["grouped_ffn", "grouped_ffn_ref"]

@@ -1,0 +1,94 @@
+"""Fused grouped expert FFN Pallas TPU kernel.
+
+The paper's expert stage C is a per-expert 2-GEMM FFN. On GPU, MPipeMoE
+keeps T_M (the hidden activation) in HBM and manages its reuse; the
+TPU-native adaptation goes further: GEMM1 -> activation -> GEMM2 are fused
+so each T_M *tile* lives only in VMEM and the full T_M never touches HBM
+in the forward pass — the kernel-level analogue of strategy S3/S4.
+
+Grid: (experts, token-tiles, hidden-tiles). The hidden dim is the
+innermost (sequential on TPU) axis and accumulates into the fp32 output
+tile, which Pallas keeps resident in VMEM across the accumulation.
+
+Block shapes are MXU-aligned (multiples of 128); VMEM budget per step:
+  x (bc x M) + w_up/w_gate/w_down (M x bh each) + out (bc x M)
+e.g. bc=128, bh=256, M=8192, bf16: 2+4+4+4+4 = ~18 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ACTS = {"silu": jax.nn.silu,
+         "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+         "relu": jax.nn.relu}
+
+
+def _kernel(x_ref, wu_ref, wd_ref, o_ref, *, act: str):
+    h = jnp.dot(x_ref[0], wu_ref[0], preferred_element_type=jnp.float32)
+    h = _ACTS[act](h)
+    contrib = jnp.dot(h.astype(x_ref.dtype), wd_ref[0],
+                      preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = contrib[None]
+
+    @pl.when(pl.program_id(2) > 0)
+    def _acc():
+        o_ref[...] += contrib[None]
+
+
+def _kernel_gated(x_ref, wu_ref, wg_ref, wd_ref, o_ref, *, act: str):
+    up = jnp.dot(x_ref[0], wu_ref[0], preferred_element_type=jnp.float32)
+    gate = jnp.dot(x_ref[0], wg_ref[0], preferred_element_type=jnp.float32)
+    h = _ACTS[act](gate) * up
+    contrib = jnp.dot(h.astype(x_ref.dtype), wd_ref[0],
+                      preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = contrib[None]
+
+    @pl.when(pl.program_id(2) > 0)
+    def _acc():
+        o_ref[...] += contrib[None]
+
+
+def grouped_ffn_kernel(x, w_up, w_gate, w_down, *, act: str = "silu",
+                       block_c: int = 128, block_h: int = 128,
+                       interpret: bool = False):
+    """x: [E, C, M]; w_up/w_gate: [E, M, H]; w_down: [E, H, M] -> [E, C, M]
+    (fp32 accumulator output; caller casts)."""
+    e, c, m = x.shape
+    h = w_up.shape[-1]
+    bc = min(block_c, c)
+    bh = min(block_h, h)
+    assert c % bc == 0 and h % bh == 0, (c, bc, h, bh)
+    grid = (e, c // bc, h // bh)
+
+    x_spec = pl.BlockSpec((1, bc, m), lambda e_, c_, h_: (e_, c_, 0))
+    wu_spec = pl.BlockSpec((1, m, bh), lambda e_, c_, h_: (e_, 0, h_))
+    wd_spec = pl.BlockSpec((1, bh, m), lambda e_, c_, h_: (e_, h_, 0))
+    o_spec = pl.BlockSpec((1, bc, m), lambda e_, c_, h_: (e_, c_, 0))
+
+    if w_gate is None:
+        return pl.pallas_call(
+            functools.partial(_kernel, act=act),
+            grid=grid,
+            in_specs=[x_spec, wu_spec, wd_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((e, c, m), jnp.float32),
+            interpret=interpret,
+        )(x, w_up, w_down)
+    return pl.pallas_call(
+        functools.partial(_kernel_gated, act=act),
+        grid=grid,
+        in_specs=[x_spec, wu_spec, wu_spec, wd_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((e, c, m), jnp.float32),
+        interpret=interpret,
+    )(x, w_up, w_gate, w_down)

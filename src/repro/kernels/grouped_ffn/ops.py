@@ -1,0 +1,60 @@
+"""Jit'd wrapper for the grouped expert FFN Pallas kernel.
+
+Pads the capacity dim to the token-tile multiple, dispatches to the
+kernel (interpret mode on CPU), casts the fp32 accumulator back, and
+carries a custom VJP whose backward uses the jnp reference (the paper's
+S3/S4 recompute semantics: T_M is rebuilt from T_DI, never stored).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grouped_ffn.kernel import grouped_ffn_kernel
+from repro.kernels.grouped_ffn.ref import grouped_ffn_ref, _ACTS
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def grouped_ffn(x, w_up, w_gate, w_down, act: str = "silu"):
+    e, c, m = x.shape
+    bc = 128 if c >= 128 else max(8, 1 << (c - 1).bit_length())
+    pad = (-c) % bc
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+    h = w_up.shape[-1]
+    bh = min(512, h)
+    while h % bh:
+        bh //= 2
+    out = grouped_ffn_kernel(xp, w_up, w_gate, w_down, act=act,
+                             block_c=bc, block_h=max(bh, 1),
+                             interpret=_interpret())
+    return out[:, :c].astype(x.dtype)
+
+
+def _fwd(x, w_up, w_gate, w_down, act):
+    return grouped_ffn(x, w_up, w_gate, w_down, act), \
+        (x, w_up, w_gate, w_down)
+
+
+def _bwd(act, res, g):
+    x, w_up, w_gate, w_down = res
+    # recompute T_M (paper's recompute restore) and differentiate the
+    # jnp reference — exact gradients, no stored hidden activation
+    def f(x_, wu_, wg_, wd_):
+        out = grouped_ffn_ref(x_, wu_, wg_, wd_, act=act)
+        return out.astype(x.dtype)
+    if w_gate is None:
+        _, vjp = jax.vjp(lambda a, b, d: f(a, b, None, d), x, w_up, w_down)
+        dx, dwu, dwd = vjp(g)
+        return dx, dwu, None, dwd
+    _, vjp = jax.vjp(f, x, w_up, w_gate, w_down)
+    return vjp(g)
+
+
+grouped_ffn.defvjp(_fwd, _bwd)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused grouped expert FFN kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {"silu": jax.nn.silu,
+         "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+         "relu": jax.nn.relu}
+
+
+def grouped_ffn_ref(x, w_up, w_gate, w_down, *, act: str = "silu"):
+    """x: [E, C, M]; w_up/w_gate: [E, M, H]; w_down: [E, H, M]."""
+    h = jnp.einsum("ecm,emh->ech", x.astype(jnp.float32),
+                   w_up.astype(jnp.float32))
+    if w_gate is not None:
+        g = jnp.einsum("ecm,emh->ech", x.astype(jnp.float32),
+                       w_gate.astype(jnp.float32))
+        h = _ACTS[act](g) * h
+    else:
+        h = _ACTS[act](h)
+    return jnp.einsum("ech,ehm->ecm", h, w_down.astype(jnp.float32))

@@ -1,0 +1,58 @@
+"""Top-k gating Pallas TPU kernel: fused softmax + iterative top-k.
+
+One pass over a [bt, E] logits tile in VMEM: fp32 softmax, then k
+(static, <= 8) argmax+mask iterations on the VPU — no [T,E] probs round
+trip to HBM between softmax and top-k, no XLA sort (top-k via k maxes is
+cheaper than a full sort for k << E).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(logits_ref, probs_ref, idx_ref, *, k: int, renorm: bool):
+    x = logits_ref[...].astype(jnp.float32)          # [bt, E]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    ex = jnp.exp(x - m)
+    probs = ex / jnp.sum(ex, axis=-1, keepdims=True)
+
+    work = probs
+    cols = jax.lax.broadcasted_iota(jnp.int32, work.shape, 1)
+    tops, idxs = [], []
+    for _ in range(k):
+        best = jnp.max(work, axis=-1)
+        bidx = jnp.argmax(work, axis=-1).astype(jnp.int32)
+        tops.append(best)
+        idxs.append(bidx)
+        work = jnp.where(cols == bidx[:, None], NEG, work)
+    top_p = jnp.stack(tops, axis=-1)                 # [bt, k]
+    top_i = jnp.stack(idxs, axis=-1)
+    if renorm and k > 1:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    probs_ref[...] = top_p
+    idx_ref[...] = top_i
+
+
+def topk_router_kernel(logits, k: int, *, renorm: bool = True,
+                       block_t: int = 256, interpret: bool = False):
+    """logits: [T, E] -> (probs [T, k] f32, idx [T, k] i32)."""
+    t, e = logits.shape
+    bt = min(block_t, t)
+    assert t % bt == 0, (t, bt)
+    grid = (t // bt,)
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, renorm=renorm),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt, e), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bt, k), lambda i: (i, 0)),
+                   pl.BlockSpec((bt, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((t, k), jnp.float32),
+                   jax.ShapeDtypeStruct((t, k), jnp.int32)],
+        interpret=interpret,
+    )(logits)

@@ -1,0 +1,21 @@
+"""Jit'd wrapper for the top-k router kernel (pads T to the tile)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_router.kernel import topk_router_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def topk_router(logits, k: int, renorm: bool = True, block_t: int = 256):
+    t, e = logits.shape
+    bt = min(block_t, t)
+    pad = (-t) % bt
+    lp = jnp.pad(logits, ((0, pad), (0, 0))) if pad else logits
+    probs, idx = topk_router_kernel(lp, k, renorm=renorm, block_t=bt,
+                                    interpret=_interpret())
+    return probs[:t], idx[:t]

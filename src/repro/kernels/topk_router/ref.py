@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the top-k router kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_router_ref(logits, k: int, renorm: bool = True):
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    if renorm and k > 1:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return top_p, top_i.astype(jnp.int32)

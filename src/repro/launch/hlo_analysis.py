@@ -1,0 +1,411 @@
+"""Static profiler over compiled HLO text — the dry-run's "profile".
+
+``compiled.cost_analysis()`` counts every computation ONCE: a scan-over-
+layers model under-reports by the trip count, and collective bytes are
+missing entirely. This module parses the optimized HLO:
+
+* builds the computation call graph (while bodies x ``known_trip_count``,
+  fusions / to_apply x call sites) and propagates execution multipliers;
+* counts dot FLOPs from result shape x contracted dims (symbol table per
+  computation resolves operand shapes);
+* sums collective bytes per kind (all-reduce counted 2x: ring = RS+AG);
+* approximates HBM traffic as operand+result bytes of top-level
+  (non-fusion-internal) instructions in scheduled computations.
+
+Everything is per-device (the module is already SPMD-partitioned).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPTOKEN_RE = re.compile(r"(?:^|[\s)])([a-z][a-z0-9\-]*)\(")
+
+
+def _parse_instr(line: str):
+    """'%name = <shape> op(...)' -> (name, shape, op) or None.
+
+    Robust to tuple shapes with parens and /*index=N*/ comments (which
+    contain '='): split on the first ' = ', then take the first
+    lowercase-token-followed-by-'(' as the opcode.
+    """
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%") and not s[:1].isalpha():
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].strip().lstrip("%")
+    rhs = s[eq + 3:]
+    m = _OPTOKEN_RE.search(rhs)
+    if not m:
+        return None
+    op = m.group(1)
+    if op in _DTYPE_BYTES:
+        return None
+    shape = rhs[:m.start()].strip()
+    return name, shape, op
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLED_RE = re.compile(r"(?:body|condition|calls|to_apply|"
+                        r"true_computation|false_computation)=%?([\w\.\-]+)")
+
+
+def _shape_elems(shape_str: str) -> List[Tuple[str, int]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dtype, n))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    return sum(n * _DTYPE_BYTES[d] for d, n in _shape_elems(shape_str))
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instr]
+    # (callee, multiplier-per-execution, via_op)
+    calls: List[Tuple[str, float, str]]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        header = _COMP_RE.match(line)
+        if header and ("{" in line):
+            cur = Computation(header.group(1),
+                              line.lstrip().startswith("ENTRY"),
+                              [], [])
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_instr(line)
+        if parsed:
+            name, shape, op = parsed
+            cur.instrs.append(Instr(name, shape, op, line))
+            if op == "while":
+                tm = _TRIP_RE.search(line)
+                trip = float(tm.group(1)) if tm else 1.0
+                for cm in _CALLED_RE.finditer(line):
+                    kind = cm.group(0).split("=")[0]
+                    mult = trip if kind == "body" else trip + 1
+                    cur.calls.append((cm.group(1), mult, op))
+            else:
+                for cm in _CALLED_RE.finditer(line):
+                    cur.calls.append((cm.group(1), 1.0, op))
+    return comps
+
+
+def execution_multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Total executions of each computation from the entry: DFS over the
+    caller graph with memoization (HLO call graphs are DAGs)."""
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:   # fall back: treat first computation as entry
+        entry = next(iter(comps.values()))
+    callers: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    for c in comps.values():
+        for callee, k, _op in c.calls:
+            callers[callee].append((c.name, k))
+
+    memo: Dict[str, float] = {}
+
+    def total(name: str, depth=0) -> float:
+        if name == entry.name:
+            return 1.0
+        if name in memo:
+            return memo[name]
+        if depth > 200:
+            return 1.0
+        s = 0.0
+        for parent, k in callers.get(name, []):
+            if parent == name:
+                continue
+            s += total(parent, depth + 1) * k
+        memo[name] = s if s else 0.0
+        return memo[name]
+
+    return {name: total(name) for name in comps}
+
+
+# ---------------------------------------------------------------------------
+# Counters
+# ---------------------------------------------------------------------------
+
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+
+
+def _symbol_table(comp: Computation) -> Dict[str, str]:
+    return {i.name: i.shape for i in comp.instrs}
+
+
+def dot_flops(comps: Dict[str, Computation],
+              mult: Dict[str, float]) -> float:
+    total = 0.0
+    for c in comps.values():
+        m = mult.get(c.name, 0.0)
+        if not m:
+            continue
+        sym = _symbol_table(c)
+        for ins in c.instrs:
+            if ins.op not in ("dot", "convolution"):
+                continue
+            out_elems = sum(n for _, n in _shape_elems(ins.shape))
+            cdims = _CONTRACT_RE.search(ins.line)
+            contract = 1
+            if cdims:
+                ops = _OPERANDS_RE.search(ins.line.split("dot(")[-1]
+                                          if "dot(" in ins.line else ins.line)
+                # first operand name
+                args = ins.line.split(ins.op + "(", 1)[1]
+                lhs_name = args.split(",")[0].strip().lstrip("%")
+                lhs_shape = sym.get(lhs_name, "")
+                dims = []
+                for _, dstr in _SHAPE_RE.findall(lhs_shape):
+                    dims = [int(x) for x in dstr.split(",") if x]
+                    break
+                for di in cdims.group(1).split(","):
+                    if di and dims and int(di) < len(dims):
+                        contract *= dims[int(di)]
+            total += m * 2.0 * out_elems * contract
+    return total
+
+
+def collective_bytes(text_or_comps, mult: Optional[Dict[str, float]] = None
+                     ) -> Dict[str, float]:
+    if isinstance(text_or_comps, str):
+        comps = parse_hlo(text_or_comps)
+        mult = execution_multipliers(comps)
+    else:
+        comps = text_or_comps
+        assert mult is not None
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    out["count"] = 0.0
+    for c in comps.values():
+        m = mult.get(c.name, 0.0)
+        if not m:
+            continue
+        for ins in c.instrs:
+            base = ins.op.replace("-start", "")
+            if base not in COLLECTIVES:
+                continue
+            nbytes = _shape_bytes(ins.shape)
+            if base == "all-reduce":
+                nbytes *= 2
+            out[base] += m * nbytes
+            out["count"] += m
+    return out
+
+
+def hbm_bytes(comps: Dict[str, Computation], mult: Dict[str, float]) -> float:
+    """Approximate HBM traffic: operand+result bytes of instructions in
+    scheduled (non-fusion-internal) computations."""
+    fusion_bodies = set()
+    for c in comps.values():
+        for callee, _k, op in c.calls:
+            if op in ("fusion", "reduce", "custom-call", "map", "sort",
+                      "scatter", "select-and-scatter", "reduce-window",
+                      "all-reduce", "reduce-scatter"):
+                fusion_bodies.add(callee)
+    skip_ops = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "after-all", "iota", "while", "conditional",
+                "call"}
+    # slicing ops read/write only the slice, not the (possibly stacked-
+    # over-layers) operand; counting operands would overstate by the
+    # scan depth
+    sliced_ops = {"dynamic-slice", "gather", "dynamic-update-slice",
+                  "scatter", "pad", "slice", "broadcast"}
+    # per fused computation: parameter indices that are consumed ONLY by
+    # slicing ops (their HBM read is the slice, not the full buffer —
+    # e.g. stacked-over-layers weights dynamic-sliced inside a scan body)
+    sliced_params: Dict[str, Dict[int, int]] = {}
+    for c in comps.values():
+        pidx: Dict[str, int] = {}
+        for ins in c.instrs:
+            if ins.op == "parameter":
+                mm = re.search(r"parameter\((\d+)\)", ins.line)
+                if mm:
+                    pidx[ins.name] = int(mm.group(1))
+        res: Dict[int, int] = {}
+        for pname, i in pidx.items():
+            uses = [ins for ins in c.instrs
+                    if re.search(r"[(,]\s*%?" + re.escape(pname) + r"\b",
+                                 ins.line) and ins.op != "parameter"]
+            if uses and all(u.op in ("dynamic-slice", "gather") and
+                            u.line.split(u.op + "(", 1)[1].split(",")[0]
+                            .strip().lstrip("%") == pname for u in uses):
+                res[i] = sum(_shape_bytes(u.shape) for u in uses)
+        if res:
+            sliced_params[c.name] = res
+
+    # computations whose root is dynamic-update-slice into a carried
+    # buffer: in-place update — traffic is the slice, not the buffer
+    dus_comps: Dict[str, int] = {}
+    for c in comps.values():
+        root = next((i for i in c.instrs if i.line.lstrip().startswith(
+            "ROOT")), None)
+        if root is not None and root.op == "dynamic-update-slice":
+            args = root.line.split("dynamic-update-slice(", 1)
+            if len(args) == 2:
+                ops = [a.strip().lstrip("%")
+                       for a in args[1].split(")")[0].split(",")]
+                sym_c = _symbol_table(c)
+                if len(ops) >= 2 and ops[1] in sym_c:
+                    dus_comps[c.name] = _shape_bytes(sym_c[ops[1]])
+
+    total = 0.0
+    for c in comps.values():
+        if c.name in fusion_bodies:
+            continue
+        m = mult.get(c.name, 0.0)
+        if not m:
+            continue
+        sym = _symbol_table(c)
+        for ins in c.instrs:
+            if ins.op in skip_ops:
+                continue
+            nbytes = _shape_bytes(ins.shape)
+            if ins.op == "dynamic-update-slice":
+                args = ins.line.split(ins.op + "(", 1)
+                ops_ = [a.strip().lstrip("%")
+                        for a in args[1].split(")")[0].split(",")]
+                nbytes = 2 * _shape_bytes(sym.get(ops_[1], "")) \
+                    if len(ops_) >= 2 else nbytes
+            elif ins.op in sliced_ops:
+                nbytes *= 2                       # read slice + write
+            else:
+                args = ins.line.split(ins.op + "(", 1)
+                callee = None
+                if ins.op == "fusion":
+                    cm = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                    if cm:
+                        callee = cm.group(1)
+                if callee in dus_comps:
+                    total += m * 2 * dus_comps[callee]
+                    continue
+                # stash-update pattern: fusion(buffer[L,...], slice[...])
+                # -> buffer[L,...]: in-place DUS; traffic = the slice
+                if ins.op == "fusion" and len(args) == 2:
+                    op_shapes = [sym.get(a.strip().lstrip("%").split(
+                        "*/")[-1].strip().lstrip("%"), "")
+                        for a in args[1].split(")")[0].split(",")]
+                    rb = _shape_bytes(ins.shape)
+                    if rb > 2 ** 28 and any(
+                            _shape_bytes(s) == rb for s in op_shapes):
+                        dims = _SHAPE_RE.findall(ins.shape)
+                        if len(dims) == 1:
+                            inner = dims[0][1].split(",", 1)
+                            inner_shape = inner[1] if len(inner) > 1 else ""
+                            slice_ops = [s for s in op_shapes
+                                         if inner_shape and
+                                         f"[{inner_shape}]" in s]
+                            if slice_ops:
+                                total += m * 2 * _shape_bytes(slice_ops[0])
+                                continue
+                if len(args) == 2:
+                    arglist = args[1].split(")")[0]
+                    for ai, a in enumerate(arglist.split(",")):
+                        a = a.strip().lstrip("%")
+                        if a not in sym:
+                            continue
+                        sl = sliced_params.get(callee, {}) if callee else {}
+                        if ai in sl:
+                            nbytes += sl[ai]      # slice-only read
+                        else:
+                            nbytes += _shape_bytes(sym[a])
+            total += m * nbytes
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Top-level analysis
+# ---------------------------------------------------------------------------
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    comps = parse_hlo(hlo_text)
+    mult = execution_multipliers(comps)
+    coll = collective_bytes(comps, mult)
+    return {
+        "flops": dot_flops(comps, mult),
+        "hbm_bytes": hbm_bytes(comps, mult),
+        "collectives": coll,
+    }
+
+
+def roofline_terms(flops: float, hbm: float, coll: Dict[str, float], *,
+                   chips: int, peak_flops: float = 197e12,
+                   hbm_bw: float = 819e9, link_bw: float = 50e9,
+                   ici_links: int = 4) -> Dict[str, float]:
+    total_coll = sum(v for k, v in coll.items() if k in COLLECTIVES)
+    return {
+        "compute_s": flops / peak_flops,
+        "memory_s": hbm / hbm_bw,
+        "collective_s": total_coll / (link_bw * ici_links),
+        "collective_bytes": total_coll,
+        "flops": flops,
+        "hbm_bytes": hbm,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    three = {k: terms[k] for k in ("compute_s", "memory_s", "collective_s")}
+    return max(three, key=three.get)
+
+
+def per_collective_report(hlo_text: str, top: int = 15) -> List[str]:
+    """Largest collective ops with execution multipliers — the main
+    hillclimbing lens for the collective term."""
+    comps = parse_hlo(hlo_text)
+    mult = execution_multipliers(comps)
+    rows = []
+    for c in comps.values():
+        m = mult.get(c.name, 0.0)
+        if not m:
+            continue
+        for ins in c.instrs:
+            base = ins.op.replace("-start", "")
+            if base in COLLECTIVES:
+                b = _shape_bytes(ins.shape) * (2 if base == "all-reduce"
+                                               else 1)
+                meta = ""
+                mm = re.search(r'op_name="([^"]*)"', ins.line)
+                if mm:
+                    meta = mm.group(1)[-70:]
+                rows.append((m * b, f"{base:18s} x{m:5.0f} "
+                             f"{b/2**20:9.2f}MiB  {meta}"))
+    rows.sort(reverse=True)
+    return [r[1] for r in rows[:top]]

@@ -1,0 +1,79 @@
+"""Abstract input specs (ShapeDtypeStruct) per (arch x shape) cell.
+
+The dry-run lowers against these — weak-type-correct, shardable, zero
+allocation. Conventions:
+* [vlm]  : seq_len splits 1/4 stub patch-embeds + 3/4 text tokens,
+  labels cover the full seq (-1 over the image span), M-RoPE position ids
+  provided as [3, B, S].
+* [audio]: encoder frames [B, 1500, d_enc] stub + decoder tokens [B, S].
+* decode : one new token against a cache of seq_len (ring-buffer caches
+  allocate window slots only).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.api import get_model
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def vlm_split(seq_len: int) -> Tuple[int, int]:
+    s_img = seq_len // 4
+    return s_img, seq_len - s_img
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                      local_batch: int = 0) -> Dict:
+    b = local_batch or shape.global_batch
+    s = shape.seq_len
+    out: Dict = {}
+    if cfg.frontend == "vision_stub":
+        s_img, s_txt = vlm_split(s)
+        out["tokens"] = _sds((b, s_txt), jnp.int32)
+        out["embeds"] = _sds((b, s_img, cfg.d_model), jnp.float32)
+        out["labels"] = _sds((b, s), jnp.int32)
+        if cfg.attn.mrope:
+            out["positions3"] = _sds((3, b, s), jnp.int32)
+    elif cfg.frontend == "audio_stub":
+        e = cfg.encoder
+        out["frames"] = _sds((b, e.context_len, e.d_model), jnp.float32)
+        out["tokens"] = _sds((b, s), jnp.int32)
+        out["labels"] = _sds((b, s), jnp.int32)
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32)
+        out["labels"] = _sds((b, s), jnp.int32)
+    return out
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict:
+    out = train_batch_specs(cfg, shape)
+    out.pop("labels", None)
+    return out
+
+
+def decode_inputs(cfg: ArchConfig, shape: ShapeConfig,
+                  cache_dtype=jnp.bfloat16):
+    """(tokens, cache) abstract inputs for serve_step."""
+    model = get_model(cfg)
+    b = shape.global_batch
+    tokens = _sds((b, 1), jnp.int32)
+    cache = model.init_cache(cfg, b, shape.seq_len, cache_dtype,
+                             abstract=True)
+    return tokens, cache
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict:
+    """Unified entry: everything the lowered step consumes (minus state)."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    tokens, cache = decode_inputs(cfg, shape)
+    return {"tokens": tokens, "cache": cache}

@@ -1,0 +1,9 @@
+"""Model API dispatch: decoder-only LM vs encoder-decoder."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, lm
+
+
+def get_model(cfg: ArchConfig):
+    return encdec if cfg.kind == "encdec" else lm

@@ -1,0 +1,197 @@
+"""Encoder-decoder model (whisper-family). The conv/audio frontend is a
+stub: the encoder consumes precomputed frame embeddings [B, T_enc, M].
+Decoder layers: causal self-attention + cross-attention + FFN; cross K/V
+is computed per layer from the encoder output (cached at prefill).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, AttentionConfig
+from repro.models import blocks, kv_cache, module
+from repro.models.layers import attention, embedding, ffn, norm, rope
+
+
+def _enc_cfg(cfg: ArchConfig) -> ArchConfig:
+    e = cfg.encoder
+    return dataclasses.replace(
+        cfg, kind="decoder", num_layers=e.num_layers, d_model=e.d_model,
+        d_ff=e.d_ff, encoder=None, moe=None, block_pattern=("attn",),
+        attn=AttentionConfig(num_heads=e.num_heads, num_kv_heads=e.num_heads,
+                             qkv_bias=cfg.attn.qkv_bias),
+        positional="sincos")
+
+
+def specs_tree(cfg: ArchConfig):
+    ecfg = _enc_cfg(cfg)
+    enc_layer = {
+        "mixer_norm": norm.specs(ecfg.d_model, cfg.norm),
+        "mixer": attention.specs(ecfg),
+        "ffn_norm": norm.specs(ecfg.d_model, cfg.norm),
+        "ffn": ffn.specs(ecfg.d_model, ecfg.d_ff, cfg.gated_ffn),
+    }
+    roles = cfg.layer_roles()
+    dec_layer = {f"l{i}": blocks.block_specs(cfg, r, cross=True)
+                 for i, r in enumerate(roles)}
+    return {
+        "embed": embedding.specs(cfg),
+        "enc_layers": module.stack(enc_layer, cfg.encoder.num_layers),
+        "enc_norm": norm.specs(cfg.encoder.d_model, cfg.norm),
+        "periods": module.stack(dec_layer, cfg.num_periods),
+        "final_norm": norm.specs(cfg.d_model, cfg.norm),
+    }
+
+
+def init(cfg, key):
+    return module.build(specs_tree(cfg), key)
+
+
+def abstract_params(cfg):
+    return module.abstract(specs_tree(cfg))
+
+
+def param_axes(cfg):
+    return module.axes_of(specs_tree(cfg))
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    return module.count(specs_tree(cfg))
+
+
+def encode(params, frames, cfg: ArchConfig, dist=None):
+    ecfg = _enc_cfg(cfg)
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(dt)
+    x = x + rope.sincos_positions(x.shape[1], ecfg.d_model).astype(dt)[None]
+
+    def body(x, lp):
+        h = norm.apply(lp["mixer_norm"], x, cfg.norm)
+        q, k, v = attention._proj_qkv(lp["mixer"], h, ecfg)
+        o = attention.flash_attention(q, k, v, causal=False)
+        x = x + jnp.einsum("bshe,hed->bsd", o,
+                           lp["mixer"]["w_o"].astype(dt))
+        h = norm.apply(lp["ffn_norm"], x, cfg.norm)
+        x = x + ffn.apply(lp["ffn"], h, act=cfg.ffn_act, gated=cfg.gated_ffn)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return norm.apply(params["enc_norm"], x, cfg.norm)
+
+
+def forward(params, batch, cfg: ArchConfig, *, mode: str = "train",
+            cache: Optional[dict] = None, dist=None,
+            use_kernel: bool = False):
+    dt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    roles = cfg.layer_roles()
+
+    if mode == "decode":
+        positions = jnp.broadcast_to(cache["pos"][None, None], (b, 1))
+        x = embedding.embed(params["embed"], tokens, cfg,
+                            positions=positions, dtype=dt)
+        s = 1
+        cross_kv_all = cache["cross"]          # precomputed at prefill
+        enc_out = None
+    else:
+        enc_out = encode(params, batch["frames"], cfg, dist)
+        s = tokens.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        x = embedding.embed(params["embed"], tokens, cfg, dtype=dt)
+        x = x + params["embed"]["pos"][positions[0]].astype(dt)[None]
+        cross_kv_all = None
+
+    aux0 = {"aux_loss": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32)}
+
+    def period_body(carry, xs):
+        x, aux = carry
+        pparams, pcache, pcross = xs
+        new_pcache = {} if pcache is not None else None
+        for i, role in enumerate(roles):
+            lp = pparams[f"l{i}"]
+            enc_kv = (pcross if pcross is not None else
+                      attention.cross_kv(lp["cross"], enc_out, cfg=cfg))
+            lcache = pcache[f"l{i}"] if pcache is not None else None
+            x, a, nc = blocks.block_apply(
+                lp, x, cfg=cfg, role=role, positions=positions, mode=mode,
+                cache=lcache, dist=dist, enc_kv=enc_kv)
+            aux = jax.tree_util.tree_map(jnp.add, aux, a)
+            if new_pcache is not None:
+                new_pcache[f"l{i}"] = nc if nc is not None else lcache
+        return (x, aux), new_pcache
+
+    layer_cache = cache["layers"] if cache is not None else None
+    if layer_cache is not None:
+        if mode == "decode":
+            (x, aux), new_layers = jax.lax.scan(
+                period_body, (x, aux0),
+                (params["periods"], layer_cache,
+                 {"k": cache["cross"]["k"], "v": cache["cross"]["v"]}))
+            new_cross = cache["cross"]
+        else:  # prefill: compute + store cross kv
+            def prefill_body(carry, xs):
+                pparams, pcache = xs
+                lp0 = pparams["l0"]
+                ck = attention.cross_kv(lp0["cross"], enc_out, cfg=cfg)
+                (x2, aux2), npc = period_body(carry, (pparams, pcache, None))
+                return (x2, aux2), (npc, {"k": ck["k"], "v": ck["v"]})
+            (x, aux), (new_layers, new_cross) = jax.lax.scan(
+                prefill_body, (x, aux0), (params["periods"], layer_cache))
+            new_cross = jax.tree_util.tree_map(
+                lambda t: t.astype(jnp.bfloat16) if t.dtype != jnp.int32
+                else t, new_cross)
+    else:
+        (x, aux), _ = jax.lax.scan(
+            lambda c, p: (period_body(c, (p, None, None))[0], None),
+            (x, aux0), params["periods"])
+        new_layers = new_cross = None
+
+    x = norm.apply(params["final_norm"], x, cfg.norm)
+    logits = embedding.logits(params["embed"], x, cfg)
+
+    new_cache = None
+    if cache is not None:
+        new_pos = (cache["pos"] + 1 if mode == "decode"
+                   else jnp.asarray(s, jnp.int32))
+        new_cache = {"layers": new_layers, "pos": new_pos,
+                     "cross": new_cross}
+    return logits, aux, new_cache
+
+
+def loss_fn(params, batch, cfg: ArchConfig, dist=None,
+            use_kernel: bool = False):
+    logits, aux, _ = forward(params, batch, cfg, mode="train", dist=dist)
+    from repro.models.lm import cross_entropy
+    ce = cross_entropy(logits, batch["labels"])
+    loss = ce + aux["aux_loss"] + aux["z_loss"]
+    return loss, {"ce": ce, "loss": loss, "aux_loss": aux["aux_loss"],
+                  "z_loss": aux["z_loss"]}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, abstract: bool = False):
+    layers = kv_cache.init_cache(cfg, batch, max_len, dtype,
+                                 abstract=abstract)
+    cross = layers.pop("cross")
+    pos = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+           else jnp.zeros((), jnp.int32))
+    return {"layers": layers, "pos": pos, "cross": cross}
+
+
+def decode_step(params, cache, tokens, cfg: ArchConfig, dist=None):
+    logits, _, new_cache = forward(params, {"tokens": tokens}, cfg,
+                                   mode="decode", cache=cache, dist=dist)
+    return logits[:, -1], new_cache
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None,
+            dtype=jnp.bfloat16):
+    cache = init_cache(cfg, batch["tokens"].shape[0], max_len, dtype)
+    logits, _, new_cache = forward(params, batch, cfg, mode="prefill",
+                                   cache=cache, dist=dist)
+    return logits, new_cache

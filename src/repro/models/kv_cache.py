@@ -1,0 +1,98 @@
+"""Decode caches for every mixer family.
+
+Shapes are chosen by *role*: sliding-window attention layers allocate a
+ring buffer of ``window`` slots (the gemma3/danube long-context path); MLA
+layers cache only the compressed latent; SSM/xLSTM layers keep O(1)
+recurrent state. ``abstract=True`` returns ShapeDtypeStructs (dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def _mk(shape, dtype, abstract):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def layer_cache(cfg: ArchConfig, role: Dict, batch: int, max_len: int,
+                dtype=jnp.bfloat16, abstract: bool = False):
+    a = cfg.attn
+    mixer = role["mixer"]
+    if mixer == "attn":
+        if a.mla is not None:
+            m = a.mla
+            return {
+                "c_kv": _mk((batch, max_len, m.kv_lora_rank), dtype,
+                            abstract),
+                "k_rope": _mk((batch, max_len, m.rope_head_dim), dtype,
+                              abstract),
+                "len": _mk((), jnp.int32, abstract),
+            }
+        window = 0 if (role["global_attn"] and a.global_period > 1) \
+            else a.window
+        t = min(window, max_len) if window > 0 else max_len
+        kd = (batch, t, a.num_kv_heads, cfg.head_dim)
+        return {"k": _mk(kd, dtype, abstract), "v": _mk(kd, dtype, abstract),
+                "len": _mk((), jnp.int32, abstract)}
+    if mixer == "mamba":
+        m = cfg.mamba
+        d_inner = m.expand * cfg.d_model
+        return {"conv": _mk((batch, m.d_conv - 1, d_inner), dtype, abstract),
+                "ssm": _mk((batch, d_inner, m.d_state), jnp.float32,
+                           abstract)}
+    if mixer == "mlstm":
+        di = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+        nh = cfg.attn.num_heads
+        dh = di // nh
+        k = cfg.xlstm.conv1d_kernel
+        return {"conv": _mk((batch, k - 1, di), dtype, abstract),
+                "c": _mk((batch, nh, dh, dh), jnp.float32, abstract),
+                "n": _mk((batch, nh, dh), jnp.float32, abstract),
+                "m": _mk((batch, nh), jnp.float32, abstract)}
+    if mixer == "slstm":
+        nh = cfg.attn.num_heads
+        dh = cfg.d_model // nh
+        st = (batch, nh, dh)
+        return {k_: _mk(st, jnp.float32, abstract)
+                for k_ in ("c", "n", "m", "h")}
+    raise ValueError(mixer)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, abstract: bool = False):
+    """Stacked cache tree: leading dim = num_periods (scanned)."""
+    roles = cfg.layer_roles()
+    per_period = {f"l{i}": layer_cache(cfg, role, batch, max_len, dtype,
+                                       abstract=True)
+                  for i, role in enumerate(roles)}
+    n = cfg.num_periods
+
+    def _stackify(sds):
+        shape = (n,) + sds.shape
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, sds.dtype)
+        return jnp.zeros(shape, sds.dtype)
+
+    stacked = jax.tree_util.tree_map(_stackify, per_period)
+    if cfg.kind == "encdec":
+        # cross-attention K/V cached once at prefill
+        enc = cfg.encoder
+        kd = (n, batch, enc.context_len, cfg.attn.num_kv_heads,
+              cfg.head_dim)
+        stacked = dict(stacked)
+        stacked["cross"] = {"k": _mk(kd, dtype, abstract),
+                            "v": _mk(kd, dtype, abstract)}
+    return stacked
+
+
+def cache_bytes(cache) -> int:
+    leaves = jax.tree_util.tree_leaves(cache)
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in leaves)

@@ -1,0 +1,433 @@
+"""Attention: GQA/MHA with RoPE/M-RoPE, sliding windows, MLA, and
+memory-efficient (flash-style) computation.
+
+Design notes
+------------
+* ``flash_attention`` is a pure-jnp blockwise online-softmax attention:
+  scores never materialize beyond one (q_block x kv_block) tile per step,
+  and the per-q-block body is wrapped in ``jax.checkpoint`` so backward
+  recomputes tiles (classic FlashAttention backward). This is the XLA
+  fallback; the Pallas kernel in ``repro.kernels.flash_attention`` is the
+  TPU fast path and is numerically checked against this implementation.
+* Decode attends over the whole cache with a single query: [B,H,T] scores
+  are cheap; when the cache's T dim is sharded over the "model" mesh axis
+  GSPMD turns the softmax/PV reductions into all-reduces (flash-decode).
+* MLA (DeepSeek-V2) caches only the compressed ``c_kv``+``k_rope`` and
+  uses the *absorbed* formulation at decode time (q projected into the
+  latent space) so the full K/V are never expanded against a long cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.module import Spec
+from repro.models.layers import rope as rope_lib
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def specs(cfg: ArchConfig, cross: bool = False):
+    a = cfg.attn
+    d, hd = cfg.d_model, cfg.head_dim
+    if a.mla is not None and not cross:
+        m = a.mla
+        qk_dim = m.nope_head_dim + m.rope_head_dim
+        s = {
+            "w_dkv": Spec((d, m.kv_lora_rank), ("embed", "kv_lora")),
+            "w_kr": Spec((d, m.rope_head_dim), ("embed", None)),
+            "w_uk": Spec((m.kv_lora_rank, a.num_heads, m.nope_head_dim),
+                         ("kv_lora", "heads", "head_dim")),
+            "w_uv": Spec((m.kv_lora_rank, a.num_heads, m.v_head_dim),
+                         ("kv_lora", "heads", "head_dim")),
+            "w_o": Spec((a.num_heads, m.v_head_dim, d),
+                        ("heads", "head_dim", "embed_out")),
+        }
+        if m.q_lora_rank:
+            s["w_dq"] = Spec((d, m.q_lora_rank), ("embed", "kv_lora"))
+            s["w_uq"] = Spec((m.q_lora_rank, a.num_heads, qk_dim),
+                             ("kv_lora", "heads", "head_dim"))
+        else:
+            s["w_q"] = Spec((d, a.num_heads, qk_dim),
+                            ("embed", "heads", "head_dim"))
+        return s
+    s = {
+        "w_q": Spec((d, a.num_heads, hd), ("embed", "heads", "head_dim")),
+        "w_k": Spec((d, a.num_kv_heads, hd),
+                    ("embed", "kv_heads", "head_dim")),
+        "w_v": Spec((d, a.num_kv_heads, hd),
+                    ("embed", "kv_heads", "head_dim")),
+        "w_o": Spec((a.num_heads, hd, d),
+                    ("heads", "head_dim", "embed_out")),
+    }
+    if a.qkv_bias:
+        s["b_q"] = Spec((a.num_heads, hd), ("heads", "head_dim"), "zeros")
+        s["b_k"] = Spec((a.num_kv_heads, hd), ("kv_heads", "head_dim"),
+                        "zeros")
+        s["b_v"] = Spec((a.num_kv_heads, hd), ("kv_heads", "head_dim"),
+                        "zeros")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (pure jnp, blockwise online softmax)
+# ---------------------------------------------------------------------------
+
+def _gqa_expand(q, num_kv: int):
+    """[B,S,Hq,D] -> [B,S,Kv,G,D]."""
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, num_kv, hq // num_kv, d)
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_block: int = 512, kv_block: int = 512,
+                    q_offset: int = 0):
+    """Blockwise attention. q:[B,Sq,Hq,D] k,v:[B,Sk,Kv,D] -> [B,Sq,Hq,D].
+
+    ``q_offset``: absolute position of q[0] (for chunked prefill).
+    Sq/Sk are padded up to block multiples internally.
+    """
+    b, sq, hq, d = q.shape
+    sk, kv_heads = k.shape[1], k.shape[2]
+    g = hq // kv_heads
+    scale = d ** -0.5
+
+    qb = min(q_block, sq)
+    kb = min(kv_block, sk)
+    sq_p, sk_p = -(-sq // qb) * qb, -(-sk // kb) * kb
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    nq, nk = sq_p // qb, sk_p // kb
+
+    qp = _gqa_expand(qp, kv_heads)                    # [B,Sq,K,G,D]
+    qp = qp.reshape(b, nq, qb, kv_heads, g, d)
+    kp = kp.reshape(b, nk, kb, kv_heads, d)
+    vp = vp.reshape(b, nk, kb, kv_heads, d)
+
+    q_pos = q_offset + jnp.arange(sq_p).reshape(nq, qb)
+    k_pos = jnp.arange(sk_p).reshape(nk, kb)
+    k_valid = (jnp.arange(sk_p) < sk).reshape(nk, kb)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def q_chunk_body(qc, qpos):
+        # qc: [B,qb,K,G,D]; qpos: [qb]
+        # kv_step is itself rematted: the scan transpose then saves only
+        # the (small) running o/m/l carry per step and recomputes the
+        # [qb,kb] score tile in backward — true FlashAttention backward.
+        # Without this, scan-transpose stacks every score tile
+        # (O(S^2/nq) memory + traffic).
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, inputs):
+            o, m, l = carry
+            kc, vc, kpos, kval = inputs
+            s_ = jnp.einsum("bqkgd,btkd->bkgqt", qc, kc,
+                            preferred_element_type=jnp.float32) * scale
+            mask = kval[None, :]
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos[None, :])
+            if window > 0:
+                mask = mask & (qpos[:, None] - kpos[None, :] < window)
+            s_ = jnp.where(mask[None, None, None], s_, NEG_INF)
+            m_new = jnp.maximum(m, s_.max(axis=-1))
+            p = jnp.exp(s_ - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p,
+                            vc.astype(jnp.float32))
+            o_new = o * alpha[..., None] + pv
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((b, kv_heads, g, qb, d), jnp.float32)
+        m0 = jnp.full((b, kv_heads, g, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv_heads, g, qb), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(
+            kv_step, (o0, m0, l0),
+            (kp.transpose(1, 0, 2, 3, 4), vp.transpose(1, 0, 2, 3, 4),
+             k_pos, k_valid))
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        return o.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # [B,qb,K,G,D]
+
+    out = jax.lax.map(lambda args: q_chunk_body(*args),
+                      (qp.transpose(1, 0, 2, 3, 4, 5), q_pos))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq_p, hq, d)
+    return out[:, :sq]
+
+
+def decode_attention(q, k, v, cache_len, *, window: int = 0,
+                     ring: bool = False):
+    """Single-step attention over a cache.
+
+    q: [B,1,Hq,D]; k,v: [B,T,Kv,D]; cache_len: scalar int32 — number of
+    valid entries. If ``ring`` the cache is a ring buffer of size
+    ``window`` (all slots valid once full; positions are implicit).
+    """
+    b, t, kv_heads, d = k.shape
+    hq = q.shape[2]
+    g = hq // kv_heads
+    qe = q.reshape(b, kv_heads, g, d)
+    s_ = jnp.einsum("bkgd,btkd->bkgt", qe, k,
+                    preferred_element_type=jnp.float32) * (d ** -0.5)
+    idx = jnp.arange(t)
+    if ring:
+        valid = idx < jnp.minimum(cache_len, t)
+    else:
+        valid = idx < cache_len
+        if window > 0:
+            valid = valid & (idx >= cache_len - window)
+    s_ = jnp.where(valid[None, None, None, :], s_, NEG_INF)
+    m = s_.max(axis=-1, keepdims=True)
+    p = jnp.exp(s_ - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgt,btkd->bkgd", p / jnp.maximum(l, 1e-30),
+                     v.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full layers
+# ---------------------------------------------------------------------------
+
+def _proj_qkv(params, x, cfg: ArchConfig):
+    a = cfg.attn
+    q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", x, params["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", x, params["w_v"].astype(x.dtype))
+    if a.qkv_bias:
+        q = q + params["b_q"].astype(x.dtype)
+        k = k + params["b_k"].astype(x.dtype)
+        v = v + params["b_v"].astype(x.dtype)
+    return q, k, v
+
+
+def _rope_qk(q, k, cfg: ArchConfig, positions, *, is_global: bool,
+             positions3=None):
+    a = cfg.attn
+    if cfg.positional != "rope" or a.rope_theta == 0.0:
+        return q, k
+    theta = a.rope_theta
+    if not is_global and a.rope_local_theta:
+        theta = a.rope_local_theta
+    if a.mrope:
+        p3 = (positions3 if positions3 is not None
+              else rope_lib.text_positions3(positions))
+        return (rope_lib.apply_mrope(q, p3, theta),
+                rope_lib.apply_mrope(k, p3, theta))
+    return (rope_lib.apply_rope(q, positions, theta),
+            rope_lib.apply_rope(k, positions, theta))
+
+
+def _attn_shard_hint(q, k, v, cfg: ArchConfig, dist):
+    """Constrain q/k/v [B,S,H,D] shardings: heads over TP when divisible;
+    otherwise fall back to sequence-parallel attention (q seq-sharded,
+    K/V gathered — e.g. arctic's 56 heads on a 16-way axis). Without the
+    explicit constraint GSPMD replicates attention across the TP axis.
+
+    Returns (q, k, v, seq_fallback): when seq-sharded, the caller must
+    run flash with a SINGLE q chunk — the q-chunk ``lax.map`` axis is
+    sequential, so splitting S into (nq, qb) would strip the sharding
+    and reintroduce per-tile all-reduces (observed: 64s of collective on
+    arctic train before this fix)."""
+    if dist is None or dist.tp_axis is None:
+        return q, k, v, False
+    from repro.distributed.context import constrain
+    tp = dist.tp_size
+    if q.shape[2] % tp == 0:
+        q = constrain(dist, q, ("dp", None, "tp", None))
+        if k.shape[2] % tp == 0:
+            k = constrain(dist, k, ("dp", None, "tp", None))
+            v = constrain(dist, v, ("dp", None, "tp", None))
+        return q, k, v, False
+    if q.shape[1] % tp == 0:
+        q = constrain(dist, q, ("dp", "tp", None, None))
+        return q, k, v, True
+    return q, k, v, False
+
+
+def apply(params, x, *, cfg: ArchConfig, positions, is_global: bool = True,
+          mode: str = "train", cache: Optional[dict] = None,
+          positions3=None, q_block: int = 512, kv_block: int = 512,
+          dist=None):
+    """Self-attention layer. Returns (out, new_cache)."""
+    a = cfg.attn
+    if a.mla is not None:
+        return _apply_mla(params, x, cfg=cfg, positions=positions,
+                          mode=mode, cache=cache)
+    window = 0 if (is_global and a.global_period > 1) else a.window
+
+    if mode in ("train", "prefill"):
+        q, k, v = _proj_qkv(params, x, cfg)
+        q, k = _rope_qk(q, k, cfg, positions, is_global=is_global,
+                        positions3=positions3)
+        if mode == "prefill" and cache is not None:
+            new_cache = _fill_cache(cache, k, v, window)
+        else:
+            new_cache = None
+        g = a.num_heads // a.num_kv_heads
+        if g > 1:
+            # GQA: repeat KV to full heads so the head dim stays shardable
+            # over TP (a 5-D [B,S,Kv,G,D] grouping would force GSPMD to
+            # replicate attention across the model axis)
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        q, k, v, seq_fallback = _attn_shard_hint(q, k, v, cfg, dist)
+        if seq_fallback:
+            q_block = q.shape[1]          # one q chunk: S stays sharded
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              q_block=q_block, kv_block=kv_block)
+    else:  # decode
+        q, k, v = _proj_qkv(params, x, cfg)
+        pos = cache["len"]
+        q, k = _rope_qk(q, k, cfg, jnp.full((1,), pos)[None, :],
+                        is_global=is_global, positions3=positions3)
+        new_cache = _append_cache(cache, k, v, window)
+        ring = window > 0 and new_cache["k"].shape[1] == window
+        out = decode_attention(q, new_cache["k"], new_cache["v"],
+                               new_cache["len"], window=window, ring=ring)
+
+    out = jnp.einsum("bshe,hed->bsd", out, params["w_o"].astype(x.dtype))
+    return out, new_cache
+
+
+def _fill_cache(cache, k, v, window: int):
+    t = cache["k"].shape[1]
+    s = k.shape[1]
+    if window > 0 and t == window and s >= window:
+        # ring alignment: absolute position p lives at slot p % window
+        k = jnp.roll(k[:, -window:], s % window, axis=1)
+        v = jnp.roll(v[:, -window:], s % window, axis=1)
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, 0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, 0, 0, 0))
+    return {"k": kc, "v": vc, "len": jnp.asarray(s, jnp.int32)}
+
+
+def _append_cache(cache, k, v, window: int):
+    t = cache["k"].shape[1]
+    pos = cache["len"]
+    if window > 0 and t == window:        # ring buffer
+        slot = pos % jnp.asarray(t, jnp.int32)
+    else:
+        slot = pos
+    kc = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    return {"k": kc, "v": vc, "len": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def _mla_q(params, x, cfg: ArchConfig):
+    m = cfg.attn.mla
+    if m.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"].astype(x.dtype))
+        q = jnp.einsum("bsr,rhe->bshe", cq, params["w_uq"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"].astype(x.dtype))
+    return q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+
+
+def _apply_mla(params, x, *, cfg: ArchConfig, positions, mode: str,
+               cache: Optional[dict]):
+    a, m = cfg.attn, cfg.attn.mla
+    dt = x.dtype
+    q_nope, q_rope = _mla_q(params, x, cfg)
+    if mode == "decode":
+        positions = jnp.full((1, 1), cache["len"])
+    q_rope = rope_lib.apply_rope(q_rope, positions, a.rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(dt))
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["w_kr"].astype(dt))
+    k_rope = rope_lib.apply_rope(k_rope[:, :, None, :], positions,
+                                 a.rope_theta)[:, :, 0, :]
+
+    if mode in ("train", "prefill"):
+        # expanded (naive) path — fine when S is the full sequence
+        k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, params["w_uk"].astype(dt))
+        v = jnp.einsum("bsr,rhe->bshe", c_kv, params["w_uv"].astype(dt))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      k_nope.shape[:3] + (m.rope_head_dim,))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # pad v to qk dim for flash (slice back after)
+        qk_dim = m.nope_head_dim + m.rope_head_dim
+        vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - m.v_head_dim)))
+        out = flash_attention(q, k, vpad, causal=True)[..., :m.v_head_dim]
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            ckv_c = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0))
+            kr_c = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+                (0, 0, 0))
+            new_cache = {"c_kv": ckv_c, "k_rope": kr_c,
+                         "len": jnp.asarray(c_kv.shape[1], jnp.int32)}
+    else:
+        # absorbed decode: never expand K/V against the cache
+        pos = cache["len"]
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
+        kr_c = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            (0, pos, 0))
+        new_cache = {"c_kv": ckv_c, "k_rope": kr_c, "len": pos + 1}
+        # q_nope -> latent space: [B,1,H,dc]
+        q_abs = jnp.einsum("bshe,rhe->bshr", q_nope,
+                           params["w_uk"].astype(dt))
+        s_ = (jnp.einsum("bshr,btr->bhst", q_abs, ckv_c.astype(dt),
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshe,bte->bhst", q_rope, kr_c.astype(dt),
+                           preferred_element_type=jnp.float32))
+        s_ = s_ * ((m.nope_head_dim + m.rope_head_dim) ** -0.5)
+        valid = jnp.arange(ckv_c.shape[1]) < (pos + 1)
+        s_ = jnp.where(valid[None, None, None, :], s_, NEG_INF)
+        p = jax.nn.softmax(s_, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", p, ckv_c.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhe->bshe", ctx.astype(dt),
+                         params["w_uv"].astype(dt))
+
+    out = jnp.einsum("bshe,hed->bsd", out, params["w_o"].astype(dt))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_specs(cfg: ArchConfig):
+    return specs(cfg, cross=True)
+
+
+def apply_cross(params, x, enc_kv, *, cfg: ArchConfig):
+    """enc_kv: dict with precomputed k,v over encoder output."""
+    a = cfg.attn
+    q = jnp.einsum("bsd,dhe->bshe", x, params["w_q"].astype(x.dtype))
+    if a.qkv_bias:
+        q = q + params["b_q"].astype(x.dtype)
+    out = flash_attention(q, enc_kv["k"].astype(x.dtype),
+                          enc_kv["v"].astype(x.dtype), causal=False)
+    return jnp.einsum("bshe,hed->bsd", out, params["w_o"].astype(x.dtype))
+
+
+def cross_kv(params, enc_out, *, cfg: ArchConfig):
+    k = jnp.einsum("bsd,dhe->bshe", enc_out,
+                   params["w_k"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", enc_out,
+                   params["w_v"].astype(enc_out.dtype))
+    if cfg.attn.qkv_bias:
+        k = k + params["b_k"].astype(enc_out.dtype)
+        v = v + params["b_v"].astype(enc_out.dtype)
+    return {"k": k, "v": v}

@@ -1,0 +1,36 @@
+"""Token embedding + output head (optionally tied)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.module import Spec
+
+
+def specs(cfg: ArchConfig):
+    s = {"tok": Spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                     "embed", 1.0)}
+    if cfg.positional == "learned":
+        s["pos"] = Spec((cfg.max_position, cfg.d_model), (None, "embed"),
+                        "embed", 0.02)
+    if not cfg.tie_embeddings:
+        s["head"] = Spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return s
+
+
+def embed(params, tokens, cfg: ArchConfig, positions=None, dtype=None):
+    x = params["tok"][tokens]
+    if dtype is not None:
+        x = x.astype(dtype)
+    if cfg.tie_embeddings:
+        x = x * (cfg.d_model ** 0.5)          # gemma-style scaling
+    if cfg.positional == "learned" and positions is not None:
+        x = x + params["pos"][positions].astype(x.dtype)
+    return x
+
+
+def logits(params, x, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        w = params["tok"].astype(x.dtype)
+        return jnp.einsum("bsd,vd->bsv", x, w)
+    return jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))

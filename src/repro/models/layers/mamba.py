@@ -1,0 +1,152 @@
+"""Mamba (S6) selective-state-space mixer — TPU-adapted.
+
+The CUDA reference implements the selective scan as a fused kernel over
+registers/shared memory. The TPU-native adaptation is a two-level scan:
+an outer ``lax.scan`` over sequence chunks carrying the SSM state
+[B, d_inner, d_state] (so compile size is O(1) in sequence length and the
+live working set is one chunk), and an inner ``associative_scan`` inside
+the chunk (parallel prefix over the diagonal recurrence — maps onto the
+VPU). The chunk body is rematerialized in backward.
+
+Decode keeps a recurrent cache: conv window (d_conv-1 columns) + SSM state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.module import Spec
+
+
+def _dims(cfg: ArchConfig):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank
+
+
+def specs(cfg: ArchConfig):
+    m = cfg.mamba
+    d, (d_inner, dt_rank) = cfg.d_model, _dims(cfg)
+    return {
+        "w_in": Spec((d, 2 * d_inner), ("embed", "inner")),
+        "conv_w": Spec((m.d_conv, d_inner), (None, "inner_c")),
+        "conv_b": Spec((d_inner,), ("inner_c",), "zeros"),
+        "w_x": Spec((d_inner, dt_rank + 2 * m.d_state), ("inner_c", None)),
+        "w_dt": Spec((dt_rank, d_inner), (None, "inner_c")),
+        "b_dt": Spec((d_inner,), ("inner_c",), "zeros"),
+        "a_log": Spec((d_inner, m.d_state), ("inner_c", None), "ones"),
+        "d_skip": Spec((d_inner,), ("inner_c",), "ones"),
+        "w_out": Spec((d_inner, d), ("inner_c", "embed_out")),
+    }
+
+
+def _ssm_scan_chunked(x, dt, b_mat, c_mat, a, h0, chunk: int):
+    """Selective scan. x,dt:[B,S,DI]; b_mat,c_mat:[B,S,N]; a:[DI,N].
+
+    Returns y:[B,S,DI] and final state h:[B,DI,N].
+    """
+    bsz, s, di = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    # discretize: a_bar = exp(dt*A) (diag), b_bar*x = dt * B * x
+    def chunk_body(h, args):
+        xc, dtc, bc, cc = args                     # [B,c,DI],[B,c,DI],[B,c,N]
+        a_bar = jnp.exp(dtc[..., None] * a)        # [B,c,DI,N]
+        bx = (dtc * xc)[..., None] * bc[:, :, None, :]   # [B,c,DI,N]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        # prefix over the chunk, seeded with the carried state
+        a_all = jnp.concatenate(
+            [jnp.ones((bsz, 1, di, n), a_bar.dtype), a_bar], axis=1)
+        b_all = jnp.concatenate([h[:, None], bx], axis=1)
+        a_pre, h_all = jax.lax.associative_scan(combine, (a_all, b_all),
+                                                axis=1)
+        hs = h_all[:, 1:]                           # [B,c,DI,N]
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cc)
+        return h_all[:, -1], y
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    xs = (x.reshape(bsz, nc, chunk, di).transpose(1, 0, 2, 3),
+          dt.reshape(bsz, nc, chunk, di).transpose(1, 0, 2, 3),
+          b_mat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3),
+          c_mat.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3))
+    h_final, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, s, di)
+    return y, h_final
+
+
+def _conv1d_causal(x, w, b, *, state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x:[B,S,DI]; w:[K,DI]; state:[B,K-1,DI]."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return out + b[None, None], new_state
+
+
+def apply(params, x, *, cfg: ArchConfig, mode: str = "train",
+          cache: Optional[dict] = None, chunk: int = 128):
+    """Mamba mixer. Returns (out, new_cache)."""
+    m = cfg.mamba
+    d_inner, dt_rank = _dims(cfg)
+    dt_ = x.dtype
+
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(dt_))
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = cache["conv"] if mode == "decode" else None
+    xc, new_conv = _conv1d_causal(xin, params["conv_w"].astype(dt_),
+                                  params["conv_b"].astype(dt_),
+                                  state=conv_state)
+    xc = jax.nn.silu(xc)
+
+    proj = jnp.einsum("bse,ef->bsf", xc, params["w_x"].astype(dt_))
+    dt_r = proj[..., :dt_rank]
+    b_mat = proj[..., dt_rank:dt_rank + m.d_state].astype(jnp.float32)
+    c_mat = proj[..., dt_rank + m.d_state:].astype(jnp.float32)
+    dt_full = jnp.einsum("bsr,re->bse", dt_r, params["w_dt"].astype(dt_))
+    dt_full = jax.nn.softplus(dt_full.astype(jnp.float32)
+                              + params["b_dt"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))      # [DI,N] negative
+
+    bsz = x.shape[0]
+    h0 = (cache["ssm"].astype(jnp.float32) if mode == "decode" else
+          jnp.zeros((bsz, d_inner, m.d_state), jnp.float32))
+
+    if mode == "decode":                      # single step, closed form
+        a_bar = jnp.exp(dt_full[:, 0, :, None] * a)
+        bx = (dt_full[:, 0] * xc.astype(jnp.float32)[:, 0])[..., None] \
+            * b_mat[:, 0, None, :]
+        h = a_bar * h0 + bx
+        y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0])[:, None]
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": h.astype(cache["ssm"].dtype)}
+    else:
+        y, h = _ssm_scan_chunked(xc.astype(jnp.float32), dt_full, b_mat,
+                                 c_mat, a, h0, chunk)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            new_cache = {"conv": new_conv[:, -(m.d_conv - 1):].astype(
+                cache["conv"].dtype),
+                "ssm": h.astype(cache["ssm"].dtype)}
+
+    y = y.astype(dt_) + xc * params["d_skip"].astype(dt_)[None, None]
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(dt_)), \
+        new_cache

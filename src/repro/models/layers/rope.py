@@ -1,0 +1,66 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the head_dim rotary sections across (temporal, height,
+width) position components; text tokens use identical (t,t,t) ids so the
+scheme degrades gracefully to 1-D RoPE on pure text.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+MROPE_SECTIONS = (0.25, 0.375, 0.375)   # t/h/w fractions of head_dim//2
+
+
+def _freqs(head_dim: int, theta: float, dtype=jnp.float32):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=dtype) / half))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    half = x.shape[-1] // 2
+    freqs = _freqs(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [...,S,half]
+    cos = jnp.cos(angles)[..., None, :]                        # [...,S,1,half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float = 10_000.0):
+    """M-RoPE. x: [B, S, H, D]; positions3: [3, B, S] (t, h, w)."""
+    half = x.shape[-1] // 2
+    freqs = _freqs(x.shape[-1], theta)                         # [half]
+    # split the frequency bands into t/h/w sections
+    n_t = int(half * MROPE_SECTIONS[0])
+    n_h = int(half * MROPE_SECTIONS[1])
+    sec = jnp.zeros((half,), jnp.int32)
+    sec = sec.at[n_t:n_t + n_h].set(1).at[n_t + n_h:].set(2)
+    # pos_per_band: [B, S, half] selecting t/h/w position per band
+    pos = jnp.take_along_axis(
+        positions3.transpose(1, 2, 0).astype(jnp.float32),     # [B,S,3]
+        jnp.broadcast_to(sec[None, None, :], x.shape[:2] + (half,)),
+        axis=-1)
+    angles = pos * freqs                                       # [B,S,half]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def text_positions3(positions):
+    """Degenerate (t,t,t) M-RoPE ids for text-only sequences."""
+    return jnp.stack([positions, positions, positions], axis=0)
+
+
+def sincos_positions(seq_len: int, d_model: int, dtype=jnp.float32):
+    """Fixed sinusoidal table (whisper encoder)."""
+    pos = jnp.arange(seq_len, dtype=dtype)[:, None]
+    half = d_model // 2
+    div = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=dtype) / half)
+    ang = pos * div[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

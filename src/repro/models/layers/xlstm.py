@@ -1,0 +1,251 @@
+"""xLSTM blocks (sLSTM + mLSTM) — TPU-adapted.
+
+mLSTM: matrix-memory cell with exponential gating. The recurrence is a
+decayed linear attention, so we use the *chunkwise-parallel* form (the
+TPU-native analogue of the paper's fused CUDA kernel): intra-chunk work is
+a masked [L,L] matmul on the MXU, inter-chunk state [dk,dv] is carried by
+a ``lax.scan``. Log-space stabilization (running max ``m``) follows the
+xLSTM paper.
+
+sLSTM: scalar-memory cell with recurrent (block-diagonal per-head) gate
+connections — inherently sequential, implemented as a ``lax.scan`` over
+time (compile size O(1) in sequence length).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.module import Spec
+
+NEG_INF = -1e30
+
+
+def _dims(cfg: ArchConfig):
+    d = cfg.d_model
+    di = int(cfg.xlstm.proj_factor_mlstm * d)
+    heads = cfg.attn.num_heads
+    return d, di, heads, di // heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ArchConfig):
+    d, di, nh, _ = _dims(cfg)
+    k = cfg.xlstm.conv1d_kernel
+    return {
+        "w_up": Spec((d, 2 * di), ("embed", "inner")),
+        "conv_w": Spec((k, di), (None, "inner_c")),
+        "conv_b": Spec((di,), ("inner_c",), "zeros"),
+        # block-diagonal per head (official xLSTM): [nh, dh, dh]
+        "w_q": Spec((nh, di // nh, di // nh), (None, None, "inner")),
+        "w_k": Spec((nh, di // nh, di // nh), (None, None, "inner")),
+        "w_v": Spec((nh, di // nh, di // nh), (None, None, "inner")),
+        "w_if": Spec((di, 2 * nh), ("inner_c", None), "normal", 0.02),
+        "b_if": Spec((2 * nh,), (None,), "zeros"),
+        "gn_scale": Spec((di,), ("inner_c",), "ones"),
+        "skip": Spec((di,), ("inner_c",), "ones"),
+        "w_down": Spec((di, d), ("inner_c", "embed_out")),
+    }
+
+
+def _group_norm(x, scale, nh):
+    """Per-head group norm. x: [B,S,DI]."""
+    b, s, di = x.shape
+    xh = x.reshape(b, s, nh, di // nh).astype(jnp.float32)
+    mu = xh.mean(axis=-1, keepdims=True)
+    var = xh.var(axis=-1, keepdims=True)
+    xh = (xh - mu) * (var + 1e-6) ** -0.5
+    return (xh.reshape(b, s, di) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mlstm_chunk(carry, args, dh):
+    """One chunk of the stabilized chunkwise mLSTM recurrence.
+
+    carry: (C [B,H,dk,dv], n [B,H,dk], m [B,H])
+    args:  q,k,v [B,L,H,dh]; lgi, lgf [B,L,H] (log input / log forget gate)
+    """
+    c_prev, n_prev, m_prev = carry
+    q, k, v, lgi, lgf = args
+    b, l, h, _ = q.shape
+    q = q.astype(jnp.float32) * (dh ** -0.5)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+
+    lf_cum = jnp.cumsum(lgf, axis=1)                       # [B,L,H]
+    # intra log-coeffs: lf_cum[i] - lf_cum[j] + lgi[j], j<=i
+    log_d = (lf_cum[:, :, None] - lf_cum[:, None, :]
+             + lgi[:, None, :, :])                         # [B,L,L,H]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    log_d = jnp.where(mask[None, :, :, None], log_d, NEG_INF)
+    # stabilizer per step
+    m_intra = log_d.max(axis=2)                            # [B,L,H]
+    m_inter = m_prev[:, None] + lf_cum                     # [B,L,H]
+    m_i = jnp.maximum(m_inter, m_intra)
+
+    d_mat = jnp.exp(log_d - m_i[:, :, None])               # [B,L,L,H]
+    scores = jnp.einsum("blhd,bthd->blth", q, k) * d_mat
+    intra = jnp.einsum("blth,bthd->blhd", scores, v)
+    inter_coeff = jnp.exp(m_inter - m_i)                   # [B,L,H]
+    inter = jnp.einsum("blhd,bhde->blhe", q, c_prev) * inter_coeff[..., None]
+
+    # normalizer: q · (decayed running sum of i_j k_j)
+    n_intra = jnp.einsum("blth,bthd->blhd", d_mat, k)
+    n_i = (jnp.einsum("blhd,bhd->blh", q, n_prev) * inter_coeff
+           + jnp.einsum("blhd,blhd->blh", q, n_intra))
+    denom = jnp.maximum(jnp.abs(n_i), jnp.exp(-m_i))
+    h_out = (intra + inter) / denom[..., None]
+
+    # chunk-final state update
+    m_last = m_i[:, -1]                                    # [B,H]
+    decay_prev = jnp.exp(m_prev + lf_cum[:, -1] - m_last)  # [B,H]
+    w_j = jnp.exp(lf_cum[:, -1:, :] - lf_cum + lgi - m_last[:, None])
+    c_new = (c_prev * decay_prev[..., None, None]
+             + jnp.einsum("blh,blhd,blhe->bhde", w_j, k, v))
+    n_new = (n_prev * decay_prev[..., None]
+             + jnp.einsum("blh,blhd->bhd", w_j, k))
+    return (c_new, n_new, m_last), h_out
+
+
+def mlstm_apply(params, x, *, cfg: ArchConfig, mode: str = "train",
+                cache: Optional[dict] = None, chunk: int = 64):
+    d, di, nh, dh = _dims(cfg)
+    dt = x.dtype
+    from repro.models.layers.mamba import _conv1d_causal
+
+    xz = jnp.einsum("bsd,de->bse", x, params["w_up"].astype(dt))
+    xm, z = jnp.split(xz, 2, axis=-1)
+    conv_state = cache["conv"] if mode == "decode" else None
+    xc, new_conv = _conv1d_causal(xm, params["conv_w"].astype(dt),
+                                  params["conv_b"].astype(dt),
+                                  state=conv_state)
+    xc = jax.nn.silu(xc)
+    b, s, _ = x.shape
+    xch = xc.reshape(b, s, nh, dh)
+    q = jnp.einsum("bshe,hef->bshf", xch, params["w_q"].astype(dt))
+    k = jnp.einsum("bshe,hef->bshf", xch, params["w_k"].astype(dt))
+    v = xm.reshape(b, s, nh, dh)                   # value skips the conv
+    gates = (jnp.einsum("bse,eg->bsg", xc, params["w_if"].astype(dt))
+             .astype(jnp.float32) + params["b_if"].astype(jnp.float32))
+    lgi, lgf_raw = gates[..., :nh], gates[..., nh:]
+    lgf = jax.nn.log_sigmoid(lgf_raw)
+
+    if mode == "decode":
+        c0 = cache["c"].astype(jnp.float32)
+        n0 = cache["n"].astype(jnp.float32)
+        m0 = cache["m"].astype(jnp.float32)
+        (c1, n1, m1), h = _mlstm_chunk((c0, n0, m0),
+                                       (q, k, v, lgi, lgf), dh)
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "c": c1.astype(cache["c"].dtype),
+                     "n": n1.astype(cache["n"].dtype),
+                     "m": m1.astype(cache["m"].dtype)}
+        hseq = h
+    else:
+        l = min(chunk, s)
+        assert s % l == 0
+        nc = s // l
+        c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.zeros((b, nh), jnp.float32)
+        body = jax.checkpoint(
+            lambda carry, args: _mlstm_chunk(carry, args, dh),
+            prevent_cse=False)
+        xs = tuple(t.reshape(b, nc, l, *t.shape[2:]).transpose(
+            1, 0, *range(2, t.ndim + 1)) for t in (q, k, v, lgi, lgf))
+        (c1, n1, m1), hs = jax.lax.scan(body, (c0, n0, m0), xs)
+        hseq = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, dh)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            kq = cfg.xlstm.conv1d_kernel - 1
+            new_cache = {"conv": new_conv[:, -kq:].astype(
+                cache["conv"].dtype),
+                "c": c1.astype(cache["c"].dtype),
+                "n": n1.astype(cache["n"].dtype),
+                "m": m1.astype(cache["m"].dtype)}
+
+    hseq = hseq.reshape(b, s, di).astype(dt)
+    hseq = _group_norm(hseq, params["gn_scale"], nh)
+    hseq = hseq + xc * params["skip"].astype(dt)[None, None]
+    hseq = hseq * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", hseq, params["w_down"].astype(dt)), \
+        new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ArchConfig):
+    d = cfg.d_model
+    nh = cfg.attn.num_heads
+    dh = d // nh
+    dff = int(cfg.xlstm.proj_factor_slstm * d)
+    return {
+        "w_gates": Spec((d, 4 * d), ("embed", "inner")),
+        "r_gates": Spec((nh, dh, 4 * dh), (None, None, None),
+                        "normal", 0.02),
+        "b_gates": Spec((4 * d,), ("inner_c",), "zeros"),
+        "gn_scale": Spec((d,), ("embed",), "ones"),
+        "w_ffn_up": Spec((d, 2 * dff), ("embed", "mlp")),
+        "w_ffn_down": Spec((dff, d), ("mlp_c", "embed_out")),
+    }
+
+
+def slstm_apply(params, x, *, cfg: ArchConfig, mode: str = "train",
+                cache: Optional[dict] = None):
+    d = cfg.d_model
+    nh = cfg.attn.num_heads
+    dh = d // nh
+    dt = x.dtype
+    b, s, _ = x.shape
+
+    wx = (jnp.einsum("bsd,dg->bsg", x, params["w_gates"].astype(dt))
+          .astype(jnp.float32) + params["b_gates"].astype(jnp.float32))
+    wx = wx.reshape(b, s, 4, nh, dh)
+    r = params["r_gates"].astype(jnp.float32)      # [nh, dh, 4*dh]
+
+    def step(carry, wxt):
+        c, n, m, h = carry                          # [B,nh,dh] each
+        rec = jnp.einsum("bhe,hef->bhf", h, r).reshape(b, nh, 4, dh)
+        zt = wxt[:, 0] + rec[:, :, 0]
+        it = wxt[:, 1] + rec[:, :, 1]
+        ft = wxt[:, 2] + rec[:, :, 2]
+        ot = wxt[:, 3] + rec[:, :, 3]
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        c_new = f_ * c + i_ * jnp.tanh(zt)
+        n_new = f_ * n + i_
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    if mode == "decode":
+        carry0 = tuple(cache[k_].astype(jnp.float32)
+                       for k_ in ("c", "n", "m", "h"))
+    else:
+        z0 = jnp.zeros((b, nh, dh), jnp.float32)
+        carry0 = (z0, z0, z0, z0)
+
+    carry1, hs = jax.lax.scan(step, carry0,
+                              wx.transpose(1, 0, 2, 3, 4))
+    hseq = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(dt)
+
+    new_cache = None
+    if mode == "decode" or (mode == "prefill" and cache is not None):
+        names = ("c", "n", "m", "h")
+        new_cache = {k_: v_.astype(cache[k_].dtype)
+                     for k_, v_ in zip(names, carry1)}
+
+    hseq = _group_norm(hseq, params["gn_scale"], nh)
+    up = jnp.einsum("bsd,df->bsf", hseq, params["w_ffn_up"].astype(dt))
+    g, u = jnp.split(up, 2, axis=-1)
+    hseq = jax.nn.gelu(g, approximate=True) * u
+    return jnp.einsum("bsf,fd->bsd", hseq,
+                      params["w_ffn_down"].astype(dt)), new_cache

@@ -1,0 +1,208 @@
+"""Decoder-only language model: init / forward / loss / decode.
+
+Depth is executed as ``lax.scan`` over *layer periods* (the repeating
+heterogeneous pattern — e.g. Jamba's 8-layer mamba/attn block, gemma3's
+5:1 local:global). HLO size is O(period), not O(depth): an 80-layer model
+compiles as fast as a 2-period one — essential for the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks, kv_cache, module
+from repro.models.layers import embedding, norm
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def specs_tree(cfg: ArchConfig):
+    roles = cfg.layer_roles()
+    period = {f"l{i}": blocks.block_specs(cfg, role)
+              for i, role in enumerate(roles)}
+    return {
+        "embed": embedding.specs(cfg),
+        "periods": module.stack(period, cfg.num_periods),
+        "final_norm": norm.specs(cfg.d_model, cfg.norm),
+    }
+
+
+def init(cfg: ArchConfig, key):
+    return module.build(specs_tree(cfg), key)
+
+
+def abstract_params(cfg: ArchConfig):
+    return module.abstract(specs_tree(cfg))
+
+
+def param_axes(cfg: ArchConfig):
+    return module.axes_of(specs_tree(cfg))
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    total = module.count(specs_tree(cfg))
+    if active_only and cfg.moe is not None:
+        from repro.moe import experts as E
+        per_layer = module.count(E.specs(cfg))
+        n_moe = cfg.num_periods * sum(r["moe"] for r in cfg.layer_roles())
+        inactive = 1.0 - cfg.moe.top_k / cfg.moe.num_experts
+        total -= int(n_moe * per_layer * inactive)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _remat_wrap(fn, cfg: ArchConfig):
+    if cfg.remat_policy == "nothing":
+        return fn
+    if cfg.remat_policy == "full":
+        return jax.checkpoint(fn, prevent_cse=False)
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            prevent_cse=False)
+    raise ValueError(cfg.remat_policy)
+
+
+def forward(params, batch, cfg: ArchConfig, *, mode: str = "train",
+            cache: Optional[dict] = None, dist=None,
+            use_kernel: bool = False):
+    """Returns (logits, aux, new_cache)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+
+    if mode == "decode":
+        pos0 = cache["pos"]
+        positions = jnp.broadcast_to(pos0[None, None], (b, 1))
+    else:
+        positions = None  # filled after embeds are known
+
+    x = embedding.embed(params["embed"], tokens, cfg,
+                        positions=positions if mode == "decode" else None,
+                        dtype=dt)
+    if batch.get("embeds") is not None:
+        x = jnp.concatenate([batch["embeds"].astype(dt), x], axis=1)
+    s = x.shape[1]
+
+    if mode != "decode":
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        if cfg.positional == "learned":
+            x = x + params["embed"]["pos"][positions[0]].astype(dt)[None]
+    positions3 = batch.get("positions3")
+
+    roles = cfg.layer_roles()
+
+    def period_body(carry, xs):
+        x, aux = carry
+        pparams, pcache = xs
+        new_pcache = {} if pcache is not None else None
+        for i, role in enumerate(roles):
+            lcache = pcache[f"l{i}"] if pcache is not None else None
+            x, a, nc = blocks.block_apply(
+                pparams[f"l{i}"], x, cfg=cfg, role=role,
+                positions=positions, mode=mode, cache=lcache, dist=dist,
+                positions3=positions3)
+            aux = jax.tree_util.tree_map(jnp.add, aux, a)
+            if new_pcache is not None:
+                new_pcache[f"l{i}"] = nc if nc is not None else lcache
+        return (x, aux), new_pcache
+
+    aux0 = {"aux_loss": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32)}
+    layer_cache = cache["layers"] if cache is not None else None
+    body = _remat_wrap(period_body, cfg) if mode == "train" else period_body
+    if layer_cache is not None:
+        (x, aux), new_layers = jax.lax.scan(
+            body, (x, aux0), (params["periods"], layer_cache))
+    else:
+        (x, aux), _ = jax.lax.scan(
+            lambda c, p: (body(c, (p, None))[0], None),
+            (x, aux0), params["periods"])
+        new_layers = None
+
+    x = norm.apply(params["final_norm"], x, cfg.norm)
+    logits = embedding.logits(params["embed"], x, cfg)
+    if dist is not None:
+        logits = dist.constrain(logits, ("dp", None, "tp"))
+
+    new_cache = None
+    if cache is not None:
+        new_pos = (cache["pos"] + 1 if mode == "decode"
+                   else jnp.asarray(s, jnp.int32))
+        new_cache = {"layers": new_layers, "pos": new_pos}
+    return logits, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Loss / steps
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels):
+    """Sharding-friendly CE: the label logit is extracted with a masked
+    reduction (fusible; partial-sums over a model-sharded vocab become one
+    tiny [B,S] all-reduce) instead of take_along_axis (whose backward is a
+    scatter-add that forced an 8 GiB all-gather of d(logits))."""
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    x = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(x.max(axis=-1, keepdims=True))
+    shifted = x - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota == lab[..., None], shifted, 0.0), axis=-1)
+    nll = lse - label_logit
+    denom = jnp.maximum(valid.sum(), 1)
+    return jnp.where(valid, nll, 0.0).sum() / denom
+
+
+def loss_fn(params, batch, cfg: ArchConfig, dist=None,
+            use_kernel: bool = False):
+    logits, aux, _ = forward(params, batch, cfg, mode="train", dist=dist,
+                             use_kernel=use_kernel)
+    labels = batch["labels"]
+    # logits cover (embeds + tokens); labels align with the LAST S_text
+    # positions (stub-embeds positions carry label -1 = masked anyway)
+    logits = logits[:, -labels.shape[1]:]
+    ce = cross_entropy(logits, labels)
+    loss = ce + aux["aux_loss"] + aux["z_loss"]
+    return loss, {"ce": ce, "aux_loss": aux["aux_loss"],
+                  "z_loss": aux["z_loss"], "loss": loss}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, abstract: bool = False):
+    layers = kv_cache.init_cache(cfg, batch, max_len, dtype,
+                                 abstract=abstract)
+    cross = None
+    if isinstance(layers, dict) and "cross" in layers:
+        cross = layers.pop("cross")
+    out = {"layers": layers,
+           "pos": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                   else jnp.zeros((), jnp.int32))}
+    if cross is not None:
+        out["cross"] = cross
+    return out
+
+
+def decode_step(params, cache, tokens, cfg: ArchConfig, dist=None):
+    logits, _, new_cache = forward(params, {"tokens": tokens}, cfg,
+                                   mode="decode", cache=cache, dist=dist)
+    return logits[:, -1], new_cache
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None,
+            dtype=jnp.bfloat16):
+    cache = init_cache(cfg, batch["tokens"].shape[0], max_len, dtype)
+    logits, _, new_cache = forward(params, batch, cfg, mode="prefill",
+                                   cache=cache, dist=dist)
+    return logits, new_cache

@@ -1,0 +1,95 @@
+"""Minimal functional parameter system (no flax).
+
+Models declare parameter *specs* (shape + logical axes + init); ``build``
+materializes a pytree of arrays, ``axes_of`` extracts the parallel tree of
+logical-axis tuples consumed by ``repro.distributed.sharding``. Stacking a
+spec tree with ``stack`` adds a leading "layers" axis so homogeneous layer
+periods can be scanned (`lax.scan`) with O(1) HLO size in depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis names (len == ndim)
+    init: str = "normal"                 # normal | zeros | ones | embed
+    scale: float = 0.0                   # 0 => fan-in default for "normal"
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    # convention: last dim is fan-out; product of the rest is fan-in
+    if len(shape) <= 1:
+        return max(1, shape[0] if shape else 1)
+    return int(np.prod(shape[:-1]))
+
+
+def _materialize(spec: Spec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        scale = spec.scale or 1.0
+        return scale * jax.random.normal(key, spec.shape, spec.dtype)
+    if spec.init == "normal":
+        scale = spec.scale or (1.0 / np.sqrt(_fan_in(spec.shape)))
+        return scale * jax.random.normal(key, spec.shape, spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def build(spec_tree, key) -> Any:
+    """Materialize a pytree of Specs into arrays (deterministic per-path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_materialize(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def abstract(spec_tree) -> Any:
+    """ShapeDtypeStruct tree — for dry-runs (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+def axes_of(spec_tree) -> Any:
+    return jax.tree_util.tree_map(lambda s: s.axes, spec_tree,
+                                  is_leaf=is_spec)
+
+
+def stack(spec_tree, n: int, axis_name: str = "layers") -> Any:
+    """Add a leading stacked-layers dim to every spec in the tree."""
+    def _s(s: Spec) -> Spec:
+        return Spec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale,
+                    s.dtype)
+    return jax.tree_util.tree_map(_s, spec_tree, is_leaf=is_spec)
+
+
+def count(spec_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def cast_tree(params, dtype):
+    """Cast floating leaves to a compute dtype (params stay fp32 at rest)."""
+    def _c(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_c, params)

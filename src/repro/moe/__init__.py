@@ -1,0 +1,1 @@
+"""MoE substrate: routing, dispatch/combine, experts, the MoE layer."""

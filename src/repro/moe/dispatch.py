@@ -1,0 +1,88 @@
+"""Token dispatch/combine for expert parallelism.
+
+Two implementations:
+
+* ``sort``  — production path: stable-argsort tokens by destination
+  expert, compute each token's rank within its expert via searchsorted,
+  scatter into the [E, C, M] buffer. O(T log T + T·M) — no [T,E,C] one-hot
+  einsum (which would rival the expert FLOPs themselves at large T).
+* ``einsum`` — the GShard-style dense dispatch; kept as the differentiable
+  oracle for property tests.
+
+Both drop overflow tokens beyond capacity (standard capacity-factor
+semantics); combine scales by the gate probability and sums the k routes.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dispatch_plan(expert_idx, num_experts: int, capacity: int):
+    """expert_idx: [T, k] -> (slot_dest [T*k], valid [T*k]).
+
+    ``slot_dest[t*k+j]`` is the flat position in the [E*C] buffer that
+    route j of token t writes to; invalid (overflow) slots get dest E*C
+    (scattered into a scratch row that is later dropped).
+    """
+    t, k = expert_idx.shape
+    flat_e = expert_idx.reshape(-1)                      # [T*k]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # rank within expert group = i - first index of this expert value
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(t * k) - first
+    valid_sorted = rank < capacity
+    dest_sorted = jnp.where(valid_sorted,
+                            sorted_e * capacity + rank,
+                            num_experts * capacity)
+    # un-sort back to slot order
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(t * k))
+    dest = dest_sorted[inv]
+    valid = valid_sorted[inv]
+    return dest.astype(jnp.int32), valid
+
+
+def dispatch(tokens, dest, num_experts: int, capacity: int):
+    """tokens: [T, M]; dest: [T*k] -> buffer [E, C, M]."""
+    t, m = tokens.shape
+    k = dest.shape[0] // t
+    src = jnp.repeat(tokens, k, axis=0) if k > 1 else tokens
+    buf = jnp.zeros((num_experts * capacity + 1, m), tokens.dtype)
+    buf = buf.at[dest].add(src)       # scatter-add: unique dests except scratch
+    return buf[:-1].reshape(num_experts, capacity, m)
+
+
+def combine(buffer, dest, probs, t: int):
+    """buffer: [E, C, M]; dest/probs: [T*k] / [T,k] -> [T, M]."""
+    e, c, m = buffer.shape
+    flat = jnp.concatenate(
+        [buffer.reshape(e * c, m), jnp.zeros((1, m), buffer.dtype)], axis=0)
+    gathered = flat[dest]                                # [T*k, M]
+    k = dest.shape[0] // t
+    gathered = gathered.reshape(t, k, m)
+    return jnp.einsum("tkm,tk->tm", gathered, probs.astype(buffer.dtype))
+
+
+# ---------------------------------------------------------------------------
+# einsum (GShard) oracle
+# ---------------------------------------------------------------------------
+
+def einsum_dispatch_mask(expert_idx, probs, num_experts: int, capacity: int):
+    """-> (dispatch_mask [T,E,C] bool, combine_w [T,E,C] float)."""
+    t, k = expert_idx.shape
+    onehot = jax.nn.one_hot(expert_idx, num_experts, dtype=jnp.int32)
+    # position of route j of token t within expert e (counting all earlier
+    # routes in slot-major order)
+    flat = onehot.reshape(t * k, num_experts)
+    pos = jnp.cumsum(flat, axis=0) - flat                # [T*k, E]
+    pos = pos.reshape(t, k, num_experts)
+    in_cap = pos < capacity
+    pos_oh = jax.nn.one_hot(jnp.where(in_cap, pos, capacity), capacity + 1,
+                            dtype=jnp.float32)[..., :capacity]
+    mask = (onehot[..., None] * pos_oh *
+            in_cap[..., None].astype(jnp.float32))       # [T,k,E,C]
+    combine_w = jnp.einsum("tkec,tk->tec", mask, probs.astype(jnp.float32))
+    return mask.sum(axis=1) > 0, combine_w

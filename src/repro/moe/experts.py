@@ -1,0 +1,75 @@
+"""Expert FFN compute: grouped 2-GEMM (optionally gated), with the
+paper's ``T_M`` tagged for remat/offload policies. The Pallas fast path
+(``repro.kernels.grouped_ffn``) fuses the two GEMMs so T_M stays in VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig
+from repro.models.module import Spec
+
+_ACTS = {"silu": jax.nn.silu,
+         "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+         "relu": jax.nn.relu}
+
+
+def specs(cfg: ArchConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    s = {
+        "w_up": Spec((m.num_experts, d, m.d_expert),
+                     ("experts", "embed", "expert_mlp")),
+        "w_down": Spec((m.num_experts, m.d_expert, d),
+                       ("experts", "expert_mlp_c", "embed_out")),
+    }
+    if cfg.gated_ffn:
+        s["w_gate"] = Spec((m.num_experts, d, m.d_expert),
+                           ("experts", "embed", "expert_mlp"))
+    return s
+
+
+def shared_specs(cfg: ArchConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    dh = m.d_shared * m.num_shared_experts
+    s = {"w_up": Spec((d, dh), ("embed", "mlp")),
+         "w_down": Spec((dh, d), ("mlp_c", "embed_out"))}
+    if cfg.gated_ffn:
+        s["w_gate"] = Spec((d, dh), ("embed", "mlp"))
+    return s
+
+
+def apply_grouped(params, x, cfg: ArchConfig, use_kernel: bool = False):
+    """x: [E_local, C, M] -> [E_local, C, M]."""
+    act = _ACTS[cfg.ffn_act]
+    dt = x.dtype
+    if use_kernel:
+        from repro.kernels.grouped_ffn import ops as gops
+        return gops.grouped_ffn(
+            x, params["w_up"].astype(dt),
+            params["w_gate"].astype(dt) if cfg.gated_ffn else None,
+            params["w_down"].astype(dt), cfg.ffn_act)
+    h = jnp.einsum("ecm,emh->ech", x, params["w_up"].astype(dt))
+    if cfg.gated_ffn:
+        g = jnp.einsum("ecm,emh->ech", x, params["w_gate"].astype(dt))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = checkpoint_name(h, "t_m")
+    return jnp.einsum("ech,ehm->ecm", h, params["w_down"].astype(dt))
+
+
+def apply_shared(params, x, cfg: ArchConfig):
+    """Dense always-on shared experts. x: [T, M] -> [T, M]."""
+    act = _ACTS[cfg.ffn_act]
+    dt = x.dtype
+    h = jnp.einsum("tm,mh->th", x, params["w_up"].astype(dt))
+    if cfg.gated_ffn:
+        g = jnp.einsum("tm,mh->th", x, params["w_gate"].astype(dt))
+        h = act(g) * h
+    else:
+        h = act(h)
+    return jnp.einsum("th,hm->tm", h, params["w_down"].astype(dt))

@@ -1,0 +1,45 @@
+"""Top-k gating network with capacity-aware auxiliary losses.
+
+Routing is deterministic (no jitter noise) so steps are bit-reproducible
+across restarts — a fault-tolerance property (DESIGN §8). Aux losses follow
+Switch/GShard: load-balance loss + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.module import Spec
+
+
+def specs(cfg: ArchConfig):
+    m = cfg.moe
+    s = {"w_gate": Spec((cfg.d_model, m.num_experts), ("embed", "experts"),
+                        "normal", 0.02)}
+    if m.gate_bias:
+        s["b_gate"] = Spec((m.num_experts,), ("experts",), "zeros")
+    return s
+
+
+def route(params, tokens, cfg: ArchConfig):
+    """tokens: [T, M] -> (probs [T,k], expert_idx [T,k] int32, aux dict)."""
+    m = cfg.moe
+    logits = jnp.einsum("tm,me->te", tokens.astype(jnp.float32),
+                        params["w_gate"].astype(jnp.float32))
+    if m.gate_bias:
+        logits = logits + params["b_gate"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)
+    if m.top_k > 1:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load balance: E * sum_e f_e * p_e
+    assign = jax.nn.one_hot(top_i[:, 0], m.num_experts)      # primary route
+    f_e = assign.mean(axis=0)
+    p_e = probs.mean(axis=0)
+    aux_loss = m.num_experts * jnp.sum(f_e * p_e) * m.aux_loss_weight
+    z = jax.scipy.special.logsumexp(logits, axis=-1)
+    z_loss = jnp.mean(z ** 2) * m.z_loss_weight
+    return top_p, top_i.astype(jnp.int32), {
+        "aux_loss": aux_loss, "z_loss": z_loss}

@@ -1,0 +1,70 @@
+"""Optimizers (pure JAX, partition-spec aware) + LR schedules."""
+from __future__ import annotations
+
+from typing import Tuple
+
+from repro.optim import adafactor, adamw
+from repro.optim.adafactor import AdafactorConfig
+from repro.optim.adamw import AdamWConfig
+
+
+def get_optimizer(name: str, lr: float = 1e-3):
+    """Returns (module, config) for 'adamw' | 'adamw8bit' | 'adafactor'."""
+    if name == "adamw":
+        return adamw, AdamWConfig(lr=lr)
+    if name == "adamw8bit":
+        return adamw, AdamWConfig(lr=lr, quantize_moments=True)
+    if name == "adafactor":
+        return adafactor, AdafactorConfig(lr=lr)
+    raise ValueError(name)
+
+
+def lr_schedule(step, *, base_lr: float = 1.0, warmup: int = 100,
+                total: int = 10_000, min_ratio: float = 0.1):
+    """Linear warmup + cosine decay multiplier (applied as lr_scale)."""
+    import jax.numpy as jnp
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    import numpy as np
+    progress = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(np.pi * progress))
+    return base_lr * warm * (min_ratio + (1 - min_ratio) * cos)
+
+
+def state_shardings(opt_module, ocfg, abstract_params, param_shardings,
+                    mesh):
+    """Sharding tree for the optimizer state, mirrored from parameter
+    shardings (ZeRO: moments live wherever their param shard lives)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    astate = opt_module.abstract_state(abstract_params, ocfg)
+    flat_sh, treedef = jax.tree_util.tree_flatten(param_shardings)
+
+    def match(sh, leaf):
+        nd = len(leaf.shape)
+        entries = list(sh.spec) + [None] * max(0, nd - len(sh.spec))
+        entries = entries[:nd]
+        fixed = []
+        for dim, e in zip(leaf.shape, entries):
+            ext = 1
+            if e is not None:
+                axes = (e,) if isinstance(e, str) else e
+                for a in axes:
+                    ext *= mesh.shape[a]
+            fixed.append(e if (ext > 1 and dim % ext == 0) else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    out = {}
+    for key, sub in astate.items():
+        if key == "count":
+            out[key] = NamedSharding(mesh, P())
+            continue
+        flat_state = treedef.flatten_up_to(sub)
+        mapped = [jax.tree_util.tree_map(lambda l, s=s: match(s, l), st)
+                  for s, st in zip(flat_sh, flat_state)]
+        out[key] = jax.tree_util.tree_unflatten(treedef, mapped)
+    return out
+
+
+__all__ = ["adafactor", "adamw", "AdafactorConfig", "AdamWConfig",
+           "get_optimizer", "lr_schedule", "state_shardings"]

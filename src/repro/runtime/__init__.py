@@ -1,0 +1,5 @@
+from repro.runtime.train_loop import (TrainOptions, abstract_state,
+                                      init_state, make_train_step, train)
+
+__all__ = ["TrainOptions", "abstract_state", "init_state",
+           "make_train_step", "train"]

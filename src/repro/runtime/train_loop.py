@@ -1,0 +1,185 @@
+"""Training runtime: step construction + fault-tolerant host loop.
+
+Step semantics:
+* bf16 compute / fp32 params (+ optimizer-dependent state);
+* optional int8 gradient compression with error feedback (cross-pod);
+* MoE aux losses folded into the objective by the model's loss_fn.
+
+Fault tolerance (DESIGN §8): the loop checkpoints every
+``ckpt_every`` steps (async, atomic), retries a failed step
+(``max_retries``), restores from the latest checkpoint on unrecoverable
+errors, and emits heartbeats a cluster monitor can watch for stragglers.
+The data pipeline is seekable, so restart resumes at the exact batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.compression import compress_with_feedback
+from repro.models.api import get_model
+from repro.optim import get_optimizer, lr_schedule
+
+log = logging.getLogger("repro.runtime")
+
+
+@dataclasses.dataclass
+class TrainOptions:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    compress_grads: bool = False
+    grad_accum: int = 1              # microbatching (PP-free memory lever)
+    use_kernel: bool = False
+
+
+def init_state(cfg: ArchConfig, key, opts: TrainOptions) -> Dict[str, Any]:
+    model = get_model(cfg)
+    params = model.init(cfg, key)
+    opt_mod, ocfg = get_optimizer(cfg.optimizer, opts.lr)
+    state = {"params": params, "opt": opt_mod.init(params, ocfg),
+             "step": jnp.zeros((), jnp.int32)}
+    if opts.compress_grads:
+        state["grad_err"] = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def abstract_state(cfg: ArchConfig, opts: TrainOptions) -> Dict[str, Any]:
+    model = get_model(cfg)
+    aparams = model.abstract_params(cfg)
+    opt_mod, ocfg = get_optimizer(cfg.optimizer, opts.lr)
+    state = {"params": aparams,
+             "opt": opt_mod.abstract_state(aparams, ocfg),
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if opts.compress_grads:
+        state["grad_err"] = jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), aparams)
+    return state
+
+
+def make_train_step(cfg: ArchConfig, opts: TrainOptions, dist=None
+                    ) -> Callable:
+    model = get_model(cfg)
+    opt_mod, ocfg = get_optimizer(cfg.optimizer, opts.lr)
+
+    def loss_of(params, batch):
+        return model.loss_fn(params, batch, cfg, dist=dist,
+                             use_kernel=opts.use_kernel)
+
+    def train_step(state, batch):
+        if opts.grad_accum > 1:
+            def micro(carry, mb):
+                (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(
+                    state["params"], mb)
+                acc_g, acc_m = carry
+                acc_g = jax.tree_util.tree_map(jnp.add, acc_g, g)
+                acc_m = jax.tree_util.tree_map(jnp.add, acc_m, m)
+                return (acc_g, acc_m), None
+            zeros_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            zeros_m = {k: jnp.zeros((), jnp.float32)
+                       for k in ("ce", "loss", "aux_loss", "z_loss")}
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((opts.grad_accum,
+                                     x.shape[0] // opts.grad_accum)
+                                    + x.shape[1:]), batch)
+            (grads, metrics), _ = jax.lax.scan(micro, (zeros_g, zeros_m),
+                                               mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / opts.grad_accum, grads)
+            metrics = jax.tree_util.tree_map(
+                lambda m: m / opts.grad_accum, metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(state["params"], batch)
+
+        new_state = dict(state)
+        if opts.compress_grads:
+            grads, new_err = compress_with_feedback(grads,
+                                                    state.get("grad_err"))
+            new_state["grad_err"] = new_err
+
+        scale = lr_schedule(state["step"], warmup=opts.warmup,
+                            total=opts.total_steps)
+        params, opt = opt_mod.update(grads, state["opt"], state["params"],
+                                     ocfg, lr_scale=scale)
+        new_state.update(params=params, opt=opt, step=state["step"] + 1)
+        gnorm = jax.tree_util.tree_reduce(
+            lambda a, g: a + jnp.sum(g.astype(jnp.float32) ** 2), grads,
+            jnp.zeros((), jnp.float32))
+        metrics = dict(metrics, grad_norm=jnp.sqrt(gnorm), lr_scale=scale)
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant host loop
+# ---------------------------------------------------------------------------
+
+def train(cfg: ArchConfig, *, steps: int, batch_source,
+          opts: Optional[TrainOptions] = None, dist=None,
+          checkpointer=None, ckpt_every: int = 100, max_retries: int = 2,
+          heartbeat: Optional[Callable[[int, Dict], None]] = None,
+          state=None, jit: bool = True):
+    """Run ``steps`` training steps with checkpoint/restart semantics.
+
+    ``batch_source.batch_at(step)`` must be deterministic (seekable).
+    Returns (final_state, history list of metric dicts).
+    """
+    opts = opts or TrainOptions()
+    if state is None:
+        state = init_state(cfg, jax.random.PRNGKey(0), opts)
+    start = 0
+    if checkpointer is not None:
+        restored = checkpointer.restore_latest(abstract=None)
+        if restored is not None:
+            state, start = restored["state"], int(restored["step"])
+            log.info("restored checkpoint at step %d", start)
+
+    step_fn = make_train_step(cfg, opts, dist)
+    if jit:
+        step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    history = []
+    step = start
+    while step < steps:
+        batch = {k: jnp.asarray(v)
+                 for k, v in batch_source.batch_at(step).items()}
+        attempt = 0
+        while True:
+            try:
+                t0 = time.perf_counter()
+                state, metrics = step_fn(state, batch)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                metrics["step_time_s"] = time.perf_counter() - t0
+                break
+            except Exception:                      # pragma: no cover
+                attempt += 1
+                log.exception("step %d failed (attempt %d)", step, attempt)
+                if attempt > max_retries:
+                    if checkpointer is not None:
+                        restored = checkpointer.restore_latest(abstract=None)
+                        if restored is not None:
+                            state = restored["state"]
+                            step = int(restored["step"])
+                            log.warning("rolled back to step %d", step)
+                            attempt = 0
+                            continue
+                    raise
+        history.append({"step": step, **metrics})
+        if heartbeat is not None:
+            heartbeat(step, metrics)
+        step += 1
+        if checkpointer is not None and step % ckpt_every == 0:
+            checkpointer.save(step, state)
+    if checkpointer is not None:
+        checkpointer.save(steps, state, block=True)
+    return state, history

@@ -1,0 +1,5 @@
+# NOTE: no XLA_FLAGS here — smoke tests/benches must see 1 device.
+# Multi-device behaviour is tested via subprocesses (test_distributed.py).
+import jax
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,85 @@
+"""Config registry / shape / applicability invariants."""
+import pytest
+
+from repro.configs import (ARCHS, ASSIGNED, SHAPES, applicable, get_config)
+
+
+def test_all_assigned_present():
+    for a in ASSIGNED:
+        assert a in ARCHS
+    assert len(ASSIGNED) == 10
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_period_divides_depth(name):
+    cfg = get_config(name)
+    assert cfg.num_layers % cfg.period == 0
+    assert cfg.num_periods >= 1
+    roles = cfg.layer_roles()
+    assert len(roles) == cfg.period
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_reduced_is_small(name):
+    r = get_config(name).reduced()
+    assert r.d_model <= 64
+    assert r.vocab_size <= 256
+    assert r.param_count() < 2_000_000
+
+
+def test_applicability_matrix():
+    # long_500k only for sub-quadratic archs
+    ok, _ = applicable(get_config("llama3-8b"), SHAPES["long_500k"])
+    assert not ok
+    ok, _ = applicable(get_config("jamba-1.5-large-398b"),
+                       SHAPES["long_500k"])
+    assert ok
+    ok, _ = applicable(get_config("xlstm-1.3b"), SHAPES["long_500k"])
+    assert ok
+    # everything runs train
+    for a in ASSIGNED:
+        ok, _ = applicable(get_config(a), SHAPES["train_4k"])
+        assert ok
+
+
+def test_exact_assigned_specs():
+    j = get_config("jamba-1.5-large-398b")
+    assert (j.num_layers, j.d_model, j.attn.num_heads,
+            j.attn.num_kv_heads, j.d_ff, j.vocab_size) == \
+        (72, 8192, 64, 8, 24576, 65536)
+    assert j.moe.num_experts == 16 and j.moe.top_k == 2
+
+    a = get_config("arctic-480b")
+    assert a.moe.num_experts == 128 and a.moe.top_k == 2
+    assert a.moe.dense_residual and a.d_ff == 4864
+
+    d = get_config("deepseek-v2-lite-16b")
+    assert d.attn.mla.kv_lora_rank == 512
+    assert d.moe.num_experts == 64 and d.moe.top_k == 6
+    assert d.moe.num_shared_experts == 2
+
+    q = get_config("qwen1.5-110b")
+    assert q.attn.qkv_bias and q.num_layers == 80 and q.d_ff == 49152
+
+    g = get_config("gemma3-12b")
+    assert g.attn.global_period == 6 and g.attn.window == 1024
+    assert g.vocab_size == 262144
+
+
+def test_param_counts_in_band():
+    """Full configs should land near their nameplate sizes."""
+    bands = {
+        "llama3-8b": (7e9, 9e9),
+        "h2o-danube-1.8b": (1.5e9, 2.2e9),
+        "qwen1.5-110b": (95e9, 125e9),
+        "arctic-480b": (400e9, 520e9),
+        "jamba-1.5-large-398b": (330e9, 440e9),
+        "deepseek-v2-lite-16b": (12e9, 20e9),
+        "gemma3-12b": (9e9, 14e9),
+        "xlstm-1.3b": (1.0e9, 2.6e9),
+        "qwen2-vl-2b": (1.2e9, 2.5e9),
+        "whisper-medium": (0.6e9, 1.1e9),
+    }
+    for name, (lo, hi) in bands.items():
+        n = get_config(name).param_count()
+        assert lo <= n <= hi, (name, n)

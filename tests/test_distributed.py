@@ -1,0 +1,115 @@
+"""Multi-device correctness via subprocess (8 fake CPU devices — the main
+test process must keep seeing exactly 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import jax, jax.numpy as jnp, dataclasses, json
+from repro.configs import get_config
+from repro.models import lm
+from repro.distributed.context import DistContext
+
+base = get_config('moe-gpt3-s').reduced()
+base = dataclasses.replace(base, compute_dtype='float32')
+key, k2 = jax.random.PRNGKey(0), jax.random.PRNGKey(1)
+B, S = 4, 32
+batch = {'tokens': jax.random.randint(key, (B, S), 0, base.vocab_size),
+         'labels': jax.random.randint(k2, (B, S), 0, base.vocab_size)}
+cfg = dataclasses.replace(base, moe=dataclasses.replace(
+    base.moe, num_partitions=2, memory_reuse_strategy='s4'))
+params = lm.init(cfg, key)
+loss_ref, _ = lm.loss_fn(params, batch, cfg)
+g_ref = jax.grad(lambda p: lm.loss_fn(p, batch, cfg)[0])(params)
+
+mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+dist = DistContext(mesh=mesh, dp_axes=('data',), ep_axis='model',
+                   tp_axis='model')
+with jax.set_mesh(mesh):
+    loss_d = jax.jit(lambda p, b: lm.loss_fn(p, b, cfg, dist=dist)[0]
+                     )(params, batch)
+    g_d = jax.jit(jax.grad(lambda p, b: lm.loss_fn(p, b, cfg,
+                                                   dist=dist)[0])
+                  )(params, batch)
+diffs = jax.tree_util.tree_map(
+    lambda a, b: float(jnp.abs(a - b).max()), g_ref, g_d)
+print(json.dumps({
+    'n_devices': len(jax.devices()),
+    'loss_diff': abs(float(loss_ref) - float(loss_d)),
+    'max_grad_diff': max(jax.tree_util.tree_leaves(diffs)),
+}))
+"""
+
+_DECODE_SCRIPT = r"""
+import jax, jax.numpy as jnp, dataclasses, json
+from repro.configs import get_config
+from repro.models import lm
+from repro.distributed.context import DistContext
+
+base = get_config('deepseek-v2-lite-16b').reduced()
+cfg = dataclasses.replace(base, compute_dtype='float32')
+key = jax.random.PRNGKey(0)
+params = lm.init(cfg, key)
+B = 4
+tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+cache0 = lm.init_cache(cfg, B, max_len=32, dtype=jnp.float32)
+ref, _ = lm.decode_step(params, cache0, tok, cfg)
+
+mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+dist = DistContext(mesh=mesh, dp_axes=('data',), ep_axis='model',
+                   tp_axis='model')
+with jax.set_mesh(mesh):
+    cache1 = lm.init_cache(cfg, B, max_len=32, dtype=jnp.float32)
+    out, _ = jax.jit(lambda p, c, t: lm.decode_step(p, c, t, cfg,
+                                                    dist=dist)
+                     )(params, cache1, tok)
+print(json.dumps({'decode_diff': float(jnp.abs(ref - out).max())}))
+"""
+
+
+def _run(script: str) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_ep_shard_map_matches_single_device():
+    res = _run(_SCRIPT)
+    assert res["n_devices"] == 8
+    assert res["loss_diff"] < 1e-3
+    assert res["max_grad_diff"] < 5e-3
+
+
+@pytest.mark.slow
+def test_moe_decode_replicated_path_matches():
+    res = _run(_DECODE_SCRIPT)
+    assert res["decode_diff"] < 1e-3
+
+
+def test_sharding_rules_divisibility_fallback():
+    import jax
+    from repro.distributed.sharding import make_rules
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = make_rules(mesh, "train", fsdp=True)
+    # heads=56 does not divide the (trivial 1-sized here) axis product —
+    # use a synthetic check through spec_for with a fake big extent
+    spec = rules.spec_for((56, 128), ("heads", "head_dim"), "wq")
+    assert spec is not None
+
+
+def test_make_production_mesh_requires_512_devices():
+    from repro.launch.mesh import make_production_mesh
+    with pytest.raises(Exception):
+        make_production_mesh()        # only 1 device in this process

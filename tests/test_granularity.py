@@ -1,0 +1,66 @@
+"""Algorithm 1 (adaptive pipeline granularity search) behaviour."""
+from repro.core.granularity import GranularitySearcher
+from repro.core.perf_model import MoEWorkload
+from repro.core.pipeline_sim import simulate
+from repro.core.types import TPU_V5E, Strategy
+
+
+def _measure_step(b, n):
+    """Synthetic measure with a clear optimum that grows with B."""
+    # ideal n ~ b / 1024; cost = |n - ideal| + overhead*n
+    ideal = max(1, b // 1024)
+    return abs(n - ideal) + 0.01 * n
+
+
+def test_cache_avoids_research():
+    s = GranularitySearcher(_measure_step, candidates=(1, 2, 4, 8, 16))
+    n1 = s.best_n(4096)
+    calls = s.search_calls
+    n2 = s.best_n(4096)
+    assert n1 == n2
+    assert s.search_calls == calls          # hash-table hit (lines 3-5)
+
+
+def test_range_reuse_without_research():
+    s = GranularitySearcher(_measure_step, candidates=(1, 2, 4, 8, 16))
+    # 4200 and 4800 share the same optimal n -> one merged range
+    s.best_n(4200)
+    s.best_n(4800)
+    calls = s.search_calls
+    n = s.best_n(4500)        # inside [4200, 4800] -> range lookup only
+    assert s.search_calls == calls
+    assert n == s.best_n(4200)
+
+
+def test_monotone_ranges_stay_disjoint():
+    s = GranularitySearcher(_measure_step, candidates=(1, 2, 4, 8, 16))
+    for b in (512, 2048, 9000, 1024, 17000, 3000, 700):
+        s.best_n(b)
+    rs = s.ranges
+    for (lo1, hi1, _), (lo2, hi2, _) in zip(rs, rs[1:]):
+        assert hi1 < lo2                     # disjoint, sorted
+    # monotonicity hypothesis: n non-decreasing in B
+    ns = [n for (_, _, n) in rs]
+    assert ns == sorted(ns)
+
+
+def test_sim_measure_picks_larger_n_for_larger_b():
+    """With the analytic simulator, bigger batches pipeline deeper —
+    the hypothesis Algorithm 1 rests on (paper Fig. 12)."""
+    hw = TPU_V5E
+
+    def measure(b, n):
+        w = MoEWorkload(b=b, m=768, h=3072, k=1, ep=16)
+        return simulate(w, hw, n, Strategy.S4)
+
+    s = GranularitySearcher(measure, candidates=(1, 2, 4, 8, 16, 32))
+    small = s.best_n(256)
+    large = s.best_n(65536)
+    assert large >= small
+
+
+def test_pipelining_beats_serial_when_comm_bound():
+    w = MoEWorkload(b=8192, m=768, h=3072, k=1, ep=16)
+    serial = simulate(w, TPU_V5E, 1, Strategy.S4)
+    piped = simulate(w, TPU_V5E, 8, Strategy.S4)
+    assert piped < serial

@@ -1,0 +1,129 @@
+"""MPipeMoE core invariants: pipelining & memory-reuse strategies change
+memory behavior, never math."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.pipeline_moe import capacity_for, pipelined_moe
+from repro.models import lm
+from repro.moe import dispatch as D
+
+
+def _cfg(n=1, strat="none", unroll=True):
+    base = get_config("moe-gpt3-s").reduced()
+    return dataclasses.replace(
+        base, compute_dtype="float32",
+        moe=dataclasses.replace(base.moe, num_partitions=n,
+                                memory_reuse_strategy=strat,
+                                pipeline_unroll=unroll))
+
+
+def _run(cfg, key, batch):
+    params = lm.init(cfg, key)
+    loss, _ = lm.loss_fn(params, batch, cfg)
+    g = jax.grad(lambda p: lm.loss_fn(p, batch, cfg)[0])(params)
+    gn = jax.tree_util.tree_reduce(lambda a, x: a + jnp.sum(x * x), g, 0.0)
+    return float(loss), float(gn)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    key = jax.random.PRNGKey(0)
+    k2 = jax.random.PRNGKey(1)
+    cfg = _cfg()
+    return {"tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k2, (2, 32), 0, cfg.vocab_size)}
+
+
+def test_strategies_are_math_identical(batch):
+    """Within a fixed n, every restore strategy gives identical loss+grads
+    (they change WHERE activations live, not WHAT is computed)."""
+    key = jax.random.PRNGKey(0)
+    ref = _run(_cfg(n=2, strat="none"), key, batch)
+    for strat in ("s1", "s2", "s3", "s4"):
+        got = _run(_cfg(n=2, strat=strat), key, batch)
+        assert got[0] == pytest.approx(ref[0], abs=1e-5), strat
+        assert got[1] == pytest.approx(ref[1], rel=1e-4), strat
+
+
+def test_pipeline_partitions_close(batch):
+    """Across n the math differs only via per-chunk capacity rounding."""
+    key = jax.random.PRNGKey(0)
+    ref = _run(_cfg(n=1), key, batch)
+    for n in (2, 4):
+        got = _run(_cfg(n=n, strat="s4"), key, batch)
+        assert got[0] == pytest.approx(ref[0], abs=5e-3)
+
+
+def test_scan_mode_matches_unroll(batch):
+    key = jax.random.PRNGKey(0)
+    a = _run(_cfg(n=4, strat="s4", unroll=True), key, batch)
+    b = _run(_cfg(n=4, strat="s4", unroll=False), key, batch)
+    assert a[0] == pytest.approx(b[0], abs=1e-5)
+    assert a[1] == pytest.approx(b[1], rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def test_sort_dispatch_matches_einsum_oracle():
+    key = jax.random.PRNGKey(3)
+    t, k, e, cap, m = 64, 2, 8, 16, 16
+    tokens = jax.random.normal(key, (t, m))
+    probs = jax.nn.softmax(jax.random.normal(key, (t, e)))
+    top_p, top_i = jax.lax.top_k(probs, k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+
+    dest, valid = D.dispatch_plan(top_i.astype(jnp.int32), e, cap)
+    buf = D.dispatch(tokens, dest, e, cap)
+    out_sort = D.combine(buf, dest, top_p, t)
+
+    mask, cw = D.einsum_dispatch_mask(top_i.astype(jnp.int32), top_p, e,
+                                      cap)
+    buf_ein = jnp.einsum("tec,tm->ecm", mask.astype(tokens.dtype), tokens)
+    out_ein = jnp.einsum("ecm,tec->tm", buf_ein, cw)
+
+    assert jnp.allclose(buf, buf_ein, atol=1e-5)
+    assert jnp.allclose(out_sort, out_ein, atol=1e-5)
+
+
+def test_dispatch_respects_capacity():
+    # all tokens to expert 0 -> only `cap` survive
+    t, e, cap, m = 32, 4, 8, 4
+    tokens = jnp.ones((t, m))
+    eidx = jnp.zeros((t, 1), jnp.int32)
+    dest, valid = D.dispatch_plan(eidx, e, cap)
+    assert int(valid.sum()) == cap
+    buf = D.dispatch(tokens, dest, e, cap)
+    assert float(buf[0].sum()) == cap * m
+    assert float(buf[1:].sum()) == 0.0
+
+
+def test_capacity_for_rounds_up():
+    assert capacity_for(100, 2, 1.25, 16) % 8 == 0
+    assert capacity_for(100, 2, 1.25, 16) >= 100 * 2 * 1.25 / 16
+    assert capacity_for(1, 1, 1.0, 64) >= 1
+
+
+def test_single_device_moe_runs_all_modes():
+    cfg = _cfg(n=2, strat="s4")
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.normal(key, (64, cfg.d_model))
+    params = {"router": {"w_gate": jax.random.normal(
+        key, (cfg.d_model, cfg.moe.num_experts)) * 0.02},
+        "experts": {
+            "w_up": jax.random.normal(
+                key, (cfg.moe.num_experts, cfg.d_model,
+                      cfg.moe.d_expert)) * 0.05,
+            "w_down": jax.random.normal(
+                key, (cfg.moe.num_experts, cfg.moe.d_expert,
+                      cfg.d_model)) * 0.05}}
+    for mode in ("train", "prefill", "decode"):
+        out, aux = pipelined_moe(params, tokens, cfg=cfg, ep_size=1,
+                                 mode=mode)
+        assert out.shape == tokens.shape
+        assert jnp.isfinite(out).all()

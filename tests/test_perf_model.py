@@ -1,0 +1,85 @@
+"""Eq. 10 performance model + Eqs. 1-6 memory model (paper §III-D/E)."""
+import dataclasses
+
+import pytest
+
+from repro.core.memory_model import MoEMemory
+from repro.core.perf_model import (MoEWorkload, all_costs, cost,
+                                   select_strategy, stream_times)
+from repro.core.types import Q_TABLE, TPU_V5E, HardwareSpec, Strategy
+
+
+def test_q_table_matches_paper_table_ii():
+    assert Q_TABLE[Strategy.NONE] == ((2, 2, 0), (4, 2, 0))
+    assert Q_TABLE[Strategy.S1] == ((2, 2, 5), (4, 2, 5))
+    assert Q_TABLE[Strategy.S2] == ((2, 2, 4), (4, 3, 4))
+    assert Q_TABLE[Strategy.S3] == ((2, 2, 1), (5, 2, 1))
+    assert Q_TABLE[Strategy.S4] == ((2, 2, 0), (5, 3, 0))
+
+
+def test_strategy_restore_semantics():
+    assert Strategy.S1.offloads == ("t_di", "t_m")
+    assert Strategy.S2.offloads == ("t_m",)      # t_di re-communicated
+    assert Strategy.S3.offloads == ("t_di",)     # t_m recomputed
+    assert Strategy.S4.offloads == ()
+    assert Strategy.NONE.saves == ("t_di", "t_m")
+
+
+def test_cost_is_max_of_streams():
+    w = MoEWorkload(b=4096, m=1024, h=4096, k=1, ep=16)
+    t = stream_times(Strategy.S2, w, TPU_V5E)
+    c = cost(Strategy.S2, w, TPU_V5E)
+    assert c == pytest.approx(max(t["comp"], t["comm"], t["mem"])
+                              + t["overhead"])
+
+
+def test_no_host_masks_offload_strategies():
+    w = MoEWorkload(b=4096, m=1024, h=4096, k=1, ep=16)
+    hw = dataclasses.replace(TPU_V5E, has_host_offload=False)
+    assert select_strategy(w, hw) == Strategy.S4
+
+
+def test_compute_bound_prefers_offload_io_bound_prefers_recompute():
+    # compute-bound (huge experts, few devices) -> S1/S2 (extra GEMMs of
+    # S3/S4 hurt); comm-bound (many devices) -> recompute side wins
+    w_comp = MoEWorkload(b=8192, m=4096, h=16384, k=1, ep=4)
+    w_comm = MoEWorkload(b=8192, m=4096, h=4096, k=1, ep=64,
+                         dtype_bytes=4)
+    s_comp = select_strategy(w_comp, TPU_V5E)
+    assert s_comp in (Strategy.S1, Strategy.S2)
+    costs = all_costs(w_comm, TPU_V5E)
+    # S2 adds a backward All-to-All: never cheaper than S4 when comm-bound
+    assert costs["s4"] <= costs["s2"] + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# memory model (Eqs. 1-6)
+# ---------------------------------------------------------------------------
+
+def test_memory_formulas():
+    mm = MoEMemory(b=8192, m=768, h=3072, e=64, n=4, bytes_per=1)
+    assert mm.m_ms == 4 * (64 * 768 + 2 * 3072 * 768)          # Eq. 1
+    assert mm.m_act == 4 * 8192 * 768 + 8192 * 3072            # Eq. 2
+    assert mm.m_buf == 8192 * 768 + 8192 * 3072                # Eq. 3
+    assert mm.m_buf_pipe == mm.m_act_pipe                      # Eq. 4
+    expected_delta = 8192 * (2 * 768 * (4 - 2) / 4
+                             + 3072 * (4 - 1) / 4)             # Eq. 5
+    assert mm.delta_act == pytest.approx(expected_delta)
+    phi = ((mm.delta_act + mm.delta_buf)
+           / (mm.m_ms + mm.m_act_pipe + mm.m_buf_pipe))        # Eq. 6
+    assert mm.phi == pytest.approx(phi)
+    assert 0 < mm.phi < 1
+
+
+def test_phi_grows_with_partitions_and_saturates():
+    phis = [MoEMemory(b=16384, m=1024, h=4096, e=64, n=n).phi
+            for n in (2, 4, 8, 16)]
+    assert phis == sorted(phis)
+    assert phis[-1] - phis[-2] < phis[1] - phis[0]   # diminishing returns
+
+
+def test_phi_larger_for_larger_batches():
+    """Fig. 2: activations dominate at large B, so reuse saves more."""
+    small = MoEMemory(b=256, m=768, h=3072, e=64, n=8).phi
+    large = MoEMemory(b=16384, m=768, h=3072, e=64, n=8).phi
+    assert large > small

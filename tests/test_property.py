@@ -1,0 +1,115 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.granularity import GranularitySearcher
+from repro.core.memory_model import MoEMemory
+from repro.core.perf_model import MoEWorkload, cost
+from repro.core.types import TPU_V5E, Strategy
+from repro.distributed.compression import compress_with_feedback
+from repro.moe import dispatch as D
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(t=st.integers(4, 64), e=st.integers(2, 16), k=st.integers(1, 3),
+       cf=st.floats(0.5, 2.0), seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_dispatch_combine_roundtrip(t, e, k, cf, seed):
+    """Tokens under capacity are preserved; combine output is a convex
+    combination of expert outputs weighted by gate probs."""
+    k = min(k, e)
+    rng = np.random.default_rng(seed)
+    cap = max(1, int(t * k * cf / e))
+    tokens = jnp.asarray(rng.standard_normal((t, 8)), jnp.float32)
+    eidx = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+    probs = jnp.asarray(rng.random((t, k)), jnp.float32)
+    probs = probs / probs.sum(-1, keepdims=True)
+
+    dest, valid = D.dispatch_plan(eidx, e, cap)
+    buf = D.dispatch(tokens, dest, e, cap)
+    # identity experts -> combine returns sum of surviving-route weights
+    out = D.combine(buf, dest, probs, t)
+    w = (probs.reshape(-1) * valid).reshape(t, k).sum(-1)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(tokens * w[:, None]),
+                               rtol=1e-5, atol=1e-5)
+    # every expert holds at most `cap` tokens
+    counts = np.bincount(np.asarray(dest)[np.asarray(valid)] // cap,
+                         minlength=e)
+    assert (counts <= cap).all()
+
+
+@given(seed=st.integers(0, 50), steps=st.integers(1, 5))
+@settings(**SETTINGS)
+def test_compression_error_feedback_is_lossless_in_the_limit(seed, steps):
+    """int8+error-feedback: accumulated applied updates converge to the
+    true gradient sum (error never grows unboundedly)."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)}
+    err = None
+    applied = jnp.zeros_like(g["w"])
+    for _ in range(steps):
+        out, err = compress_with_feedback(g, err)
+        applied = applied + out["w"]
+    true = g["w"] * steps
+    resid = np.abs(np.asarray(applied + err["w"] - true)).max()
+    assert resid < 1e-4          # applied + carried error == exact sum
+
+
+@given(b=st.integers(64, 1 << 16), m=st.sampled_from([256, 768, 4096]),
+       h=st.sampled_from([1024, 3072, 16384]), n=st.sampled_from([2, 4, 8]))
+@settings(**SETTINGS)
+def test_memory_saving_ratio_bounds(b, m, h, n):
+    mm = MoEMemory(b=b, m=m, h=h, e=64, n=n)
+    assert 0.0 <= mm.phi < 1.0
+    assert mm.delta_act <= mm.m_act
+    # reused activation footprint ~ m/n scaling: 2m/n for T_DI/T_DO + m/n
+    reused = mm.m_act - mm.delta_act
+    expected = (2 * b * m                      # T_I, T_O untouched
+                + 2 * b * m * 2 / n            # T_DI, T_DO double buffer
+                + b * h / n)                   # T_M single buffer
+    assert reused == expected
+
+
+@given(b=st.integers(256, 1 << 15))
+@settings(**SETTINGS)
+def test_eq10_cost_monotone_in_batch(b):
+    w1 = MoEWorkload(b=b, m=768, h=3072, k=1, ep=16)
+    w2 = MoEWorkload(b=2 * b, m=768, h=3072, k=1, ep=16)
+    for s in Strategy:
+        assert cost(s, w1, TPU_V5E) <= cost(s, w2, TPU_V5E)
+
+
+@given(data=st.lists(st.integers(64, 1 << 15), min_size=1, max_size=12))
+@settings(**SETTINGS)
+def test_granularity_ranges_always_disjoint_sorted(data):
+    s = GranularitySearcher(lambda b, n: abs(n - max(1, b // 2048)),
+                            candidates=(1, 2, 4, 8, 16))
+    for b in data:
+        s.best_n(b)
+    rs = s.ranges
+    for (l1, h1, _), (l2, h2, _) in zip(rs, rs[1:]):
+        assert h1 < l2
+    for lo, hi, _ in rs:
+        assert lo <= hi
+
+
+@given(seed=st.integers(0, 30), b=st.integers(1, 8), s=st.integers(4, 32))
+@settings(max_examples=10, deadline=None)
+def test_cross_entropy_matches_naive(seed, b, s):
+    from repro.models.lm import cross_entropy
+    rng = np.random.default_rng(seed)
+    v = 17
+    logits = jnp.asarray(rng.standard_normal((b, s, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(-1, v, (b, s)), jnp.int32)
+    got = cross_entropy(logits, labels)
+    lp = jax.nn.log_softmax(logits, -1)
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    nll = -jnp.take_along_axis(lp, lab[..., None], -1)[..., 0]
+    want = jnp.where(valid, nll, 0).sum() / max(1, int(valid.sum()))
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5,
+                               atol=1e-6)
