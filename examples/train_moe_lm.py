@@ -15,7 +15,7 @@ import jax
 from repro.configs import get_config, AttentionConfig
 from repro.ckpt import Checkpointer
 from repro.data import SyntheticTokens
-from repro.runtime import TrainOptions, train
+from repro.runtime import AdaptiveOptions, TrainOptions, train
 
 
 def hundred_m_config():
@@ -42,9 +42,18 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="resolve (n, strategy) online instead of the "
+                         "fixed n=2/s4 of this example")
+    ap.add_argument("--retune-every", type=int, default=0)
     args = ap.parse_args()
 
     cfg = hundred_m_config()
+    adaptive = None
+    if args.adaptive:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, num_partitions=0, memory_reuse_strategy="adaptive"))
+        adaptive = AdaptiveOptions(retune_every=args.retune_every)
     print(f"model: {cfg.name}  params={cfg.param_count()/1e6:.1f}M "
           f"(active {cfg.active_param_count()/1e6:.1f}M)")
 
@@ -54,13 +63,15 @@ def main():
 
     def heartbeat(step, metrics):
         if step % 20 == 0:
+            extra = (f" n={metrics['n']} strat={metrics['strategy']}"
+                     if "n" in metrics else "")
             print(f"step {step:4d} loss={metrics['loss']:.4f} "
                   f"ce={metrics['ce']:.4f} "
-                  f"t={metrics['step_time_s']*1e3:.0f}ms")
+                  f"t={metrics['step_time_s']*1e3:.0f}ms{extra}")
 
     state, hist = train(cfg, steps=args.steps, batch_source=ds, opts=opts,
                         checkpointer=ck, ckpt_every=50,
-                        heartbeat=heartbeat)
+                        heartbeat=heartbeat, adaptive=adaptive)
     first = sum(h["loss"] for h in hist[:10]) / 10
     last = sum(h["loss"] for h in hist[-10:]) / 10
     print(f"done: loss {first:.3f} -> {last:.3f} "

@@ -1,0 +1,40 @@
+"""Shims for jax APIs that moved between 0.4.x and current releases.
+
+The repo targets current jax (``jax.make_mesh(..., axis_types=...)``,
+``jax.set_mesh``, ``jax.shard_map``); older CPU containers pin 0.4.x
+where those live elsewhere or don't exist. Every call site goes through
+these helpers so both resolve identically.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """jax.make_mesh with explicit Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` (jax.set_mesh on current jax;
+    the Mesh object is itself a context manager on 0.4.x)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # 0.4.x shard_map has no replication rule for checkpoint_name (used
+    # for the paper's t_di/t_m residual tags) — disable the rep check
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)

@@ -5,7 +5,8 @@ from repro.core.perf_model import (MoEWorkload, all_costs, cost,
                                    select_strategy, stream_times)
 from repro.core.pipeline_moe import capacity_for, pipelined_moe
 from repro.core.pipeline_sim import simulate, sweep_partitions
-from repro.core.selector import make_searcher, moe_workload, resolve
+from repro.core.selector import (Resolver, make_searcher, moe_workload,
+                                 resolve, resolve_strategy)
 from repro.core.strategies import (host_offload_supported, remat_policy,
                                    wrap_chunk)
 from repro.core.types import (Q_TABLE, TPU_V5E, HardwareSpec, Interference,
@@ -13,8 +14,9 @@ from repro.core.types import (Q_TABLE, TPU_V5E, HardwareSpec, Interference,
 
 __all__ = [
     "GranularitySearcher", "MoEMemory", "MoEWorkload", "Q_TABLE", "TPU_V5E",
-    "HardwareSpec", "Interference", "Strategy", "all_costs", "capacity_for",
-    "cost", "host_offload_supported", "make_searcher", "moe_workload",
-    "pipelined_moe", "remat_policy", "resolve", "select_strategy",
-    "simulate", "stream_times", "sweep_partitions", "wrap_chunk",
+    "HardwareSpec", "Interference", "Resolver", "Strategy", "all_costs",
+    "capacity_for", "cost", "host_offload_supported", "make_searcher",
+    "moe_workload", "pipelined_moe", "remat_policy", "resolve",
+    "resolve_strategy", "select_strategy", "simulate", "stream_times",
+    "sweep_partitions", "wrap_chunk",
 ]

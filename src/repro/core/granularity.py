@@ -23,21 +23,20 @@ class GranularitySearcher:
         self.candidates = tuple(sorted(candidates))
         # sorted disjoint ranges: list of [lo, hi, n]
         self._ranges: List[List[int]] = []
+        self._keys: List[int] = []       # lo of each range, kept sorted
+        self._by_n: Dict[int, List[int]] = {}
         self._cache: Dict[int, int] = {}
         self.search_calls = 0            # instrumentation (tests/benches)
 
     # -- Algorithm 1, lines 6 / find(S, B) ------------------------------
     def _find(self, b: int) -> Tuple[Optional[List[int]], int]:
-        i = bisect.bisect_right([r[0] for r in self._ranges], b) - 1
+        i = bisect.bisect_right(self._keys, b) - 1
         if i >= 0 and self._ranges[i][0] <= b <= self._ranges[i][1]:
             return self._ranges[i], self._ranges[i][2]
         return None, -1
 
     def _find_by_n(self, n: int) -> Optional[List[int]]:
-        for r in self._ranges:
-            if r[2] == n:
-                return r
-        return None
+        return self._by_n.get(n)
 
     # -- Algorithm 1, line 8 / searchBestGran(B) ------------------------
     def _search_best(self, b: int) -> int:
@@ -65,8 +64,7 @@ class GranularitySearcher:
 
     # -- internals -------------------------------------------------------
     def _insert(self, rng: List[int]) -> None:
-        lo = [r[0] for r in self._ranges]
-        i = bisect.bisect_left(lo, rng[0])
+        i = bisect.bisect_left(self._keys, rng[0])
         self._ranges.insert(i, rng)
         self._repair(rng)
 
@@ -92,6 +90,19 @@ class GranularitySearcher:
             else:
                 out.append(r)
         self._ranges = out
+        # reindex: _find bisects _keys; _find_by_n is a dict hit. Both
+        # rebuilt only here (insert/merge path — tied to a real search),
+        # never on the hot lookup path.
+        self._keys = [r[0] for r in out]
+        self._by_n = {r[2]: r for r in out}
+
+    def reset(self) -> None:
+        """Drop learned ranges + cache: measurements are presumed stale
+        (periodic retune under workload drift, §III-C online setting)."""
+        self._ranges = []
+        self._keys = []
+        self._by_n = {}
+        self._cache = {}
 
     @property
     def ranges(self) -> Tuple[Tuple[int, int, int], ...]:

@@ -14,7 +14,7 @@ resolved (n, strategy) changes (compilation cache keyed by them).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional, Sequence
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.granularity import GranularitySearcher
@@ -35,13 +35,49 @@ def moe_workload(cfg: ArchConfig, local_tokens: int, ep_size: int,
 
 def make_searcher(cfg: ArchConfig, ep_size: int, hw: HardwareSpec,
                   measure_fn: Optional[Callable] = None,
-                  strategy: Strategy = Strategy.NONE, dp: int = 16
+                  strategy: Strategy = Strategy.NONE, dp: int = 16,
+                  candidates: Optional[Sequence[int]] = None
                   ) -> GranularitySearcher:
     if measure_fn is None:
         def measure_fn(b: int, n: int) -> float:
             return simulate(moe_workload(cfg, b, ep_size, dp=dp), hw, n,
                             strategy)
+    if candidates:
+        return GranularitySearcher(measure_fn, candidates)
     return GranularitySearcher(measure_fn)
+
+
+def resolve_strategy(cfg: ArchConfig, w: MoEWorkload, hw: HardwareSpec,
+                     allow_offload: Optional[bool] = None) -> str:
+    """Concrete strategy string for cfg.moe (Eq. 10 argmin when
+    'adaptive', masked by hardware capacities — no host offload
+    degrades the candidate set to the device-only strategies)."""
+    strategy = cfg.moe.memory_reuse_strategy
+    if strategy == "adaptive":
+        if allow_offload is None:
+            allow_offload = hw.has_host_offload and host_offload_supported()
+        hw_eff = dataclasses.replace(hw, has_host_offload=allow_offload)
+        strategy = select_strategy(w, hw_eff).value
+    return strategy
+
+
+def _resolve_with(cfg: ArchConfig, local_tokens: int, ep_size: int,
+                  hw: HardwareSpec, dp: int,
+                  allow_offload: Optional[bool],
+                  searcher_for: Callable[[str], GranularitySearcher]
+                  ) -> ArchConfig:
+    """Shared resolution body: strategy via Eq. 10, n via Algorithm 1."""
+    if cfg.moe is None:
+        return cfg
+    m = cfg.moe
+    w = moe_workload(cfg, local_tokens, ep_size, dp=dp)
+    strategy = resolve_strategy(cfg, w, hw, allow_offload)
+    n = m.num_partitions
+    if n == 0:
+        n = searcher_for(strategy).best_n(local_tokens)
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(m, num_partitions=n,
+                                     memory_reuse_strategy=strategy))
 
 
 def resolve(cfg: ArchConfig, *, local_tokens: int, ep_size: int,
@@ -49,25 +85,75 @@ def resolve(cfg: ArchConfig, *, local_tokens: int, ep_size: int,
             allow_offload: Optional[bool] = None, dp: int = 16
             ) -> ArchConfig:
     """Fill in adaptive (n, strategy) -> concrete values in cfg.moe."""
-    if cfg.moe is None:
-        return cfg
-    m = cfg.moe
-    w = moe_workload(cfg, local_tokens, ep_size, dp=dp)
+    def searcher_for(strategy: str) -> GranularitySearcher:
+        return searcher or make_searcher(cfg, ep_size, hw,
+                                         strategy=Strategy(strategy),
+                                         dp=dp)
 
-    strategy = m.memory_reuse_strategy
-    if strategy == "adaptive":
-        if allow_offload is None:
-            allow_offload = hw.has_host_offload and host_offload_supported()
-        hw_eff = dataclasses.replace(hw, has_host_offload=allow_offload)
-        strategy = select_strategy(w, hw_eff).value
+    return _resolve_with(cfg, local_tokens, ep_size, hw, dp,
+                         allow_offload, searcher_for)
 
-    n = m.num_partitions
-    if n == 0:
-        searcher = searcher or make_searcher(cfg, ep_size, hw,
-                                             strategy=Strategy(strategy),
-                                             dp=dp)
-        n = searcher.best_n(local_tokens)
 
-    return dataclasses.replace(
-        cfg, moe=dataclasses.replace(m, num_partitions=n,
-                                     memory_reuse_strategy=strategy))
+class Resolver:
+    """Incremental ``resolve`` for the online controller (§III-C).
+
+    One persistent :class:`GranularitySearcher` per resolved strategy, so
+    revisited token counts hit Algorithm 1's hash/range caches instead of
+    re-measuring — the property that makes runtime retuning affordable.
+
+    ``measure_fn(b, n, strategy) -> seconds`` overrides the analytic
+    simulator; the training runtime injects wall-clock timing of a few
+    compiled candidate steps here when real hardware is attached.
+    """
+
+    def __init__(self, cfg: ArchConfig, *, ep_size: int, hw: HardwareSpec,
+                 measure_fn: Optional[Callable[[int, int, Strategy], float]]
+                 = None, dp: int = 16,
+                 allow_offload: Optional[bool] = None,
+                 candidates: Optional[Sequence[int]] = None):
+        self.cfg = cfg
+        self.ep_size = ep_size
+        self.hw = hw
+        self.measure_fn = measure_fn
+        self.dp = dp
+        self.allow_offload = allow_offload
+        self.candidates = tuple(candidates) if candidates else None
+        self._searchers: Dict[str, GranularitySearcher] = {}
+
+    def searcher_for(self, strategy: str) -> GranularitySearcher:
+        s = self._searchers.get(strategy)
+        if s is None:
+            if self.measure_fn is not None:
+                sv = Strategy(strategy)
+
+                def fn(b: int, n: int, _s=sv) -> float:
+                    return self.measure_fn(b, n, _s)
+
+                s = GranularitySearcher(
+                    fn, self.candidates) if self.candidates else \
+                    GranularitySearcher(fn)
+            else:
+                s = make_searcher(self.cfg, self.ep_size, self.hw,
+                                  strategy=Strategy(strategy), dp=self.dp,
+                                  candidates=self.candidates)
+            self._searchers[strategy] = s
+        return s
+
+    @property
+    def search_calls(self) -> int:
+        return sum(s.search_calls for s in self._searchers.values())
+
+    def resolve(self, local_tokens: int,
+                refresh: bool = False) -> ArchConfig:
+        """``refresh=True`` drops the strategy's learned measurements
+        first (timer-triggered retune: the cached timings are presumed
+        stale under workload drift, so a cache hit would be inert)."""
+        def searcher_for(strategy: str) -> GranularitySearcher:
+            s = self.searcher_for(strategy)
+            if refresh:
+                s.reset()
+            return s
+
+        return _resolve_with(self.cfg, local_tokens, self.ep_size,
+                             self.hw, self.dp, self.allow_offload,
+                             searcher_for)

@@ -1,3 +1,3 @@
-from repro.data.synthetic import SyntheticTokens
+from repro.data.synthetic import SyntheticTokens, VaryingSyntheticTokens
 
-__all__ = ["SyntheticTokens"]
+__all__ = ["SyntheticTokens", "VaryingSyntheticTokens"]

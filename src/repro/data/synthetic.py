@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -76,3 +76,25 @@ class SyntheticTokens:
                 yield q.get()
         finally:
             stop.set()
+
+
+class VaryingSyntheticTokens:
+    """Seekable source whose per-step batch size follows ``trace``
+    (cycled). Models production serving/training traffic where the token
+    count drifts — the workload the online adaptive controller retunes
+    for (each distinct size is a new shape, and possibly a new optimal
+    pipeline granularity).
+    """
+
+    def __init__(self, cfg: ArchConfig, trace: Sequence[int], seq: int,
+                 seed: int = 0, num_hosts: int = 1, host_index: int = 0):
+        assert trace, "need at least one batch size"
+        self.trace = tuple(int(b) for b in trace)
+        self._sources = {
+            b: SyntheticTokens(cfg, batch=b, seq=seq, seed=seed,
+                               num_hosts=num_hosts, host_index=host_index)
+            for b in set(self.trace)}
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        return self._sources[self.trace[step % len(self.trace)]] \
+            .batch_at(step)

@@ -21,6 +21,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.compat import set_mesh
 from repro.configs import ARCHS, ASSIGNED, SHAPES, applicable, get_config
 from repro.core import TPU_V5E, resolve
 from repro.distributed.context import DistContext
@@ -93,7 +94,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                          "strategy": cfg.moe.memory_reuse_strategy}
 
     t0 = time.perf_counter()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         pshard = shd.param_shardings(cfg, rules, model)
         if shape.kind == "train":
             opts = TrainOptions()

@@ -166,7 +166,6 @@ def execution_multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
 # ---------------------------------------------------------------------------
 
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
 
 
 def _symbol_table(comp: Computation) -> Dict[str, str]:
@@ -188,12 +187,17 @@ def dot_flops(comps: Dict[str, Computation],
             cdims = _CONTRACT_RE.search(ins.line)
             contract = 1
             if cdims:
-                ops = _OPERANDS_RE.search(ins.line.split("dot(")[-1]
-                                          if "dot(" in ins.line else ins.line)
-                # first operand name
                 args = ins.line.split(ins.op + "(", 1)[1]
-                lhs_name = args.split(",")[0].strip().lstrip("%")
-                lhs_shape = sym.get(lhs_name, "")
+                # first operand: either "f32[32,64]{1,0} %name" (inline
+                # shape, older HLO text) or a bare "%name"
+                inline = re.match(
+                    r"\s*(\w+\[[\d,]*\])(?:\{[\d,]*\})?\s+%?[\w\.\-]+",
+                    args)
+                if inline:
+                    lhs_shape = inline.group(1)
+                else:
+                    lhs_name = args.split(",")[0].strip().lstrip("%")
+                    lhs_shape = sym.get(lhs_name, "")
                 dims = []
                 for _, dstr in _SHAPE_RE.findall(lhs_shape):
                     dims = [int(x) for x in dstr.split(",") if x]

@@ -9,13 +9,13 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -23,9 +23,7 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     if data * model > n:
         raise ValueError(f"mesh {data}x{model} > {n} devices")
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple:

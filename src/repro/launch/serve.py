@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core import TPU_V5E, resolve
 from repro.models.api import get_model
 
 
@@ -26,6 +27,13 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
+    if cfg.moe is not None:
+        # concrete (n, strategy) for the prefill token count (decode
+        # itself always runs n=1 — see pipeline_moe._resolve_partitions)
+        cfg = resolve(cfg, local_tokens=args.batch * args.prompt_len,
+                      ep_size=1, hw=TPU_V5E)
+        print(f"MPipeMoE prefill: n={cfg.moe.num_partitions} "
+              f"strategy={cfg.moe.memory_reuse_strategy}")
     model = get_model(cfg)
     key = jax.random.PRNGKey(0)
     params = model.init(cfg, key)

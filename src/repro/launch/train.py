@@ -19,12 +19,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.ckpt import Checkpointer
+from repro.compat import set_mesh
 from repro.configs import SHAPES, get_config
 from repro.core import TPU_V5E, resolve
 from repro.data import SyntheticTokens
 from repro.distributed.context import DistContext
 from repro.launch.mesh import dp_axes, make_host_mesh
-from repro.runtime import TrainOptions, train
+from repro.runtime import AdaptiveOptions, TrainOptions, train
 
 
 def main():
@@ -42,6 +43,12 @@ def main():
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="online (n, strategy) controller instead of a "
+                         "one-shot offline resolve")
+    ap.add_argument("--retune-every", type=int, default=0,
+                    help="with --adaptive: also re-resolve every K steps "
+                         "(0 = only on batch-shape change)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
@@ -56,11 +63,25 @@ def main():
         mesh = make_host_mesh(args.mesh_data, args.mesh_model)
         dist = DistContext(mesh=mesh, dp_axes=dp_axes(mesh),
                            ep_axis="model", tp_axis="model")
+    adaptive = False
     if cfg.moe is not None:
-        cfg = resolve(cfg, local_tokens=args.batch * args.seq,
-                      ep_size=args.mesh_model, hw=TPU_V5E)
-        print(f"MPipeMoE: n={cfg.moe.num_partitions} "
-              f"strategy={cfg.moe.memory_reuse_strategy}")
+        if args.adaptive:
+            # leave the adaptive placeholders in place: train() grows an
+            # AdaptiveController that resolves (n, strategy) online
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, num_partitions=0,
+                memory_reuse_strategy="adaptive"))
+            adaptive = AdaptiveOptions(retune_every=args.retune_every,
+                                       ep_size=max(1, args.mesh_model),
+                                       dp=max(1, args.mesh_data),
+                                       hw=TPU_V5E)
+            print("MPipeMoE: online adaptive (n, strategy) "
+                  f"(retune_every={args.retune_every})")
+        else:
+            cfg = resolve(cfg, local_tokens=args.batch * args.seq,
+                          ep_size=args.mesh_model, hw=TPU_V5E)
+            print(f"MPipeMoE: n={cfg.moe.num_partitions} "
+                  f"strategy={cfg.moe.memory_reuse_strategy}")
 
     ds = SyntheticTokens(cfg, batch=args.batch, seq=args.seq, seed=0)
     ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
@@ -70,16 +91,22 @@ def main():
 
     def heartbeat(step, metrics):
         if step % 10 == 0:
+            extra = (f" n={metrics['n']} strat={metrics['strategy']}"
+                     if "n" in metrics else "")
             print(f"step {step:5d} loss={metrics['loss']:.4f} "
-                  f"t={metrics['step_time_s']*1e3:.0f}ms", flush=True)
+                  f"t={metrics['step_time_s']*1e3:.0f}ms{extra}",
+                  flush=True)
 
-    ctx = jax.set_mesh(mesh) if mesh is not None else _null()
+    ctx = set_mesh(mesh) if mesh is not None else _null()
     with ctx:
         state, hist = train(cfg, steps=args.steps, batch_source=ds,
                             opts=opts, dist=dist, checkpointer=ck,
                             ckpt_every=args.ckpt_every,
-                            heartbeat=heartbeat)
+                            heartbeat=heartbeat, adaptive=adaptive)
     print(f"final loss {hist[-1]['loss']:.4f} at step {hist[-1]['step']}")
+    if "n" in hist[-1]:                   # controller engaged (MoE arch)
+        print(f"adaptive: n={hist[-1]['n']} "
+              f"strategy={hist[-1]['strategy']}")
 
 
 class _null:

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig
 from repro.core.pipeline_moe import pipelined_moe
 from repro.models.module import axes_of
@@ -101,7 +102,7 @@ def apply(params, x, *, cfg: ArchConfig, dist=None, mode: str = "train",
                 lambda v: jax.lax.pmean(v, reduce_axes), aux)
         return out.reshape(bl, sl, d), aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body, mesh=mesh, in_specs=(p_specs, x_spec),
         out_specs=(x_spec, P()))(params, x)
     return out, aux

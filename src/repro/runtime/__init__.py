@@ -1,5 +1,6 @@
-from repro.runtime.train_loop import (TrainOptions, abstract_state,
+from repro.runtime.train_loop import (AdaptiveController, AdaptiveOptions,
+                                      TrainOptions, abstract_state,
                                       init_state, make_train_step, train)
 
-__all__ = ["TrainOptions", "abstract_state", "init_state",
-           "make_train_step", "train"]
+__all__ = ["AdaptiveController", "AdaptiveOptions", "TrainOptions",
+           "abstract_state", "init_state", "make_train_step", "train"]

@@ -10,18 +10,29 @@ Fault tolerance (DESIGN §8): the loop checkpoints every
 (``max_retries``), restores from the latest checkpoint on unrecoverable
 errors, and emits heartbeats a cluster monitor can watch for stragglers.
 The data pipeline is seekable, so restart resumes at the exact batch.
+
+Online adaptation (paper §III-C Algorithm 1 + §III-E): when the config
+leaves ``num_partitions == 0`` or ``memory_reuse_strategy ==
+"adaptive"``, an :class:`AdaptiveController` resolves the concrete
+(n, strategy) at runtime — on every batch-shape change and, optionally,
+every ``retune_every`` steps — through a persistent
+``selector.Resolver``, and re-jits only when the resolved
+(n, strategy, batch_shape) key is new. Revisited configurations hit the
+compiled-step cache and are free.
 """
 from __future__ import annotations
 
 import dataclasses
 import logging
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.selector import Resolver
+from repro.core.types import TPU_V5E, HardwareSpec, Strategy
 from repro.distributed.compression import compress_with_feedback
 from repro.models.api import get_model
 from repro.optim import get_optimizer, lr_schedule
@@ -84,12 +95,16 @@ def make_train_step(cfg: ArchConfig, opts: TrainOptions, dist=None
                 return (acc_g, acc_m), None
             zeros_g = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
-            zeros_m = {k: jnp.zeros((), jnp.float32)
-                       for k in ("ce", "loss", "aux_loss", "z_loss")}
             mbs = jax.tree_util.tree_map(
                 lambda x: x.reshape((opts.grad_accum,
                                      x.shape[0] // opts.grad_accum)
                                     + x.shape[1:]), batch)
+            # zero metric carry from the model's actual metrics pytree
+            # (loss_fn implementations differ in their metric keys)
+            mb0 = jax.tree_util.tree_map(lambda x: x[0], mbs)
+            _, m_shapes = jax.eval_shape(loss_of, state["params"], mb0)
+            zeros_m = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), m_shapes)
             (grads, metrics), _ = jax.lax.scan(micro, (zeros_g, zeros_m),
                                                mbs)
             grads = jax.tree_util.tree_map(
@@ -121,6 +136,188 @@ def make_train_step(cfg: ArchConfig, opts: TrainOptions, dist=None
 
 
 # ---------------------------------------------------------------------------
+# Online adaptive (n, strategy) controller
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AdaptiveOptions:
+    """Knobs of the online controller (paper §III-C + §III-E).
+
+    retune_every == 0 retunes only on batch-shape change; k > 0 also
+    re-runs ``resolve`` every k steps (workload drift without shape
+    drift — e.g. interference from a colocated job).
+    ``measure``: "wallclock" times a few compiled candidate steps on the
+    attached accelerator, "simulate" uses the analytic pipeline
+    simulator, "auto" picks wallclock iff a non-CPU backend is attached.
+    """
+    retune_every: int = 0
+    ep_size: int = 1
+    dp: int = 1
+    hw: HardwareSpec = TPU_V5E
+    measure: str = "auto"            # auto | wallclock | simulate
+    measure_fn: Optional[Callable[[int, int, Strategy], float]] = None
+    measure_steps: int = 2
+    allow_offload: Optional[bool] = None
+    candidates: Optional[Sequence[int]] = None
+    cache_size: int = 32             # LRU bound on kept compiled steps
+
+
+class AdaptiveController:
+    """Feedback loop between the granularity searcher, the perf model and
+    the step function: resolves (n, strategy) online and keeps a
+    compiled-step cache keyed by (n, strategy, batch_shape) so that
+    re-jit happens at most once per distinct configuration.
+    """
+
+    def __init__(self, cfg: ArchConfig, opts: TrainOptions, dist=None,
+                 aopts: Optional[AdaptiveOptions] = None, *,
+                 jit: bool = True):
+        if cfg.moe is None or not cfg.moe.pipeline:
+            # with pipeline=False every candidate n lowers to the same
+            # n=1 program — the granularity search would be meaningless
+            raise ValueError("AdaptiveController needs a pipelined MoE "
+                             "config (cfg.moe with pipeline=True)")
+        self.cfg = cfg
+        self.opts = opts
+        self.dist = dist
+        self.jit = jit
+        self.aopts = aopts or AdaptiveOptions()
+        if dist is not None:
+            # derive the EP/DP extents from the live mesh unless the
+            # caller set them: a 1-wide default under an 8-way EP mesh
+            # would resolve (n, strategy) for the wrong workload
+            if self.aopts.ep_size == 1:
+                self.aopts = dataclasses.replace(self.aopts,
+                                                 ep_size=dist.ep_size)
+            if self.aopts.dp == 1:
+                self.aopts = dataclasses.replace(self.aopts,
+                                                 dp=dist.dp_size)
+        measure_fn = self.aopts.measure_fn
+        if measure_fn is None:
+            mode = self.aopts.measure
+            if mode == "auto":
+                mode = ("wallclock" if jax.default_backend() != "cpu"
+                        else "simulate")
+            if mode == "wallclock":
+                measure_fn = self._wallclock_measure
+        self.resolver = Resolver(cfg, ep_size=self.aopts.ep_size,
+                                 hw=self.aopts.hw, measure_fn=measure_fn,
+                                 dp=self.aopts.dp,
+                                 allow_offload=self.aopts.allow_offload,
+                                 candidates=self.aopts.candidates)
+        self._step_cache: Dict[Tuple, Callable] = {}
+        self._measure_cache: Dict[Tuple, Callable] = {}
+        self._probe = None               # (state, batch) for wallclock
+        self._last_shape = None
+        self._last_retune = None
+        self._last_refresh = None
+        self.current: Optional[Tuple[int, str]] = None
+        self.rejit_count = 0
+        self.retune_count = 0
+
+    def _cache_get(self, cache: Dict[Tuple, Callable], key: Tuple):
+        """LRU: dicts iterate in insertion order; re-insert on hit."""
+        fn = cache.pop(key, None)
+        if fn is not None:
+            cache[key] = fn
+        return fn
+
+    def _cache_put(self, cache: Dict[Tuple, Callable], key: Tuple, fn):
+        cache[key] = fn
+        while len(cache) > max(1, self.aopts.cache_size):
+            cache.pop(next(iter(cache)))
+
+    @staticmethod
+    def _shape_key(batch) -> Tuple:
+        return tuple(sorted((k, tuple(v.shape), str(v.dtype))
+                            for k, v in batch.items()))
+
+    @staticmethod
+    def _local_tokens(batch) -> int:
+        x = batch["tokens"] if "tokens" in batch else \
+            next(iter(batch.values()))
+        return int(x.shape[0]) * (int(x.shape[1]) if x.ndim > 1 else 1)
+
+    def _cfg_with(self, n: int, strategy: str) -> ArchConfig:
+        return dataclasses.replace(
+            self.cfg, moe=dataclasses.replace(
+                self.cfg.moe, num_partitions=n,
+                memory_reuse_strategy=strategy))
+
+    def _wallclock_measure(self, b: int, n: int,
+                           strategy: Strategy) -> float:
+        """Algorithm 1's measure function on real hardware: time a few
+        compiled steps of candidate n against the live (state, batch).
+        ``b`` equals the probe batch's token count by construction (the
+        searcher is always queried at the current batch size)."""
+        state, batch = self._probe
+        # compiled candidates are cached across retunes (a periodic
+        # refresh re-times them; only the timing is stale, not the
+        # executable). The winner is still compiled once more with
+        # donation for the step cache — the price of donating there.
+        key = (n, strategy.value, self._shape_key(batch))
+        fn = self._cache_get(self._measure_cache, key)
+        if fn is None:
+            fn = make_train_step(self._cfg_with(n, strategy.value),
+                                 self.opts, self.dist)
+            if self.jit:
+                fn = jax.jit(fn)         # no donation: state is reused
+            self._cache_put(self._measure_cache, key, fn)
+        out = fn(state, batch)
+        jax.block_until_ready(out)       # compile + warm up
+        reps = max(1, self.aopts.measure_steps)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(state, batch)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / reps
+
+    def step_fn(self, state, batch, step: int
+                ) -> Tuple[Callable, Dict[str, Any]]:
+        """Step function + controller metrics for this batch."""
+        shape = self._shape_key(batch)
+        shape_changed = self.current is None or shape != self._last_shape
+        # timer fires on its own clock, independent of shape churn — a
+        # cyclic-shape trace must not starve drift re-measurement
+        timer = (self.aopts.retune_every > 0
+                 and self._last_refresh is not None
+                 and step - self._last_refresh >= self.aopts.retune_every)
+        info: Dict[str, Any] = {}
+        if shape_changed or timer:
+            t0 = time.perf_counter()
+            self._probe = (state, batch)
+            # a timer-triggered retune re-measures (refresh): cached
+            # timings are exactly what workload drift invalidates
+            rcfg = self.resolver.resolve(self._local_tokens(batch),
+                                         refresh=timer)
+            self._probe = None
+            resolved = (rcfg.moe.num_partitions,
+                        rcfg.moe.memory_reuse_strategy)
+            if resolved != self.current:
+                log.info("adaptive retune @%d: (n, strategy) %s -> %s",
+                         step, self.current, resolved)
+            self.current = resolved
+            self._last_shape = shape
+            self._last_retune = step
+            if timer or self._last_refresh is None:
+                self._last_refresh = step
+            self.retune_count += 1
+            info["retune_time_s"] = time.perf_counter() - t0
+        n, strategy = self.current
+        key = (n, strategy, shape)
+        fn = self._cache_get(self._step_cache, key)
+        if fn is None:
+            fn = make_train_step(self._cfg_with(n, strategy), self.opts,
+                                 self.dist)
+            if self.jit:
+                fn = jax.jit(fn, donate_argnums=(0,))
+            self._cache_put(self._step_cache, key, fn)
+            self.rejit_count += 1
+        info.update(n=n, strategy=strategy)
+        return fn, info
+
+
+# ---------------------------------------------------------------------------
 # Fault-tolerant host loop
 # ---------------------------------------------------------------------------
 
@@ -128,13 +325,31 @@ def train(cfg: ArchConfig, *, steps: int, batch_source,
           opts: Optional[TrainOptions] = None, dist=None,
           checkpointer=None, ckpt_every: int = 100, max_retries: int = 2,
           heartbeat: Optional[Callable[[int, Dict], None]] = None,
-          state=None, jit: bool = True):
+          state=None, jit: bool = True, adaptive=None):
     """Run ``steps`` training steps with checkpoint/restart semantics.
 
     ``batch_source.batch_at(step)`` must be deterministic (seekable).
+    ``adaptive`` selects the online (n, strategy) controller: ``None``
+    auto-enables it when cfg.moe still carries adaptive placeholders
+    (``num_partitions == 0`` or ``memory_reuse_strategy ==
+    "adaptive"``); pass ``False`` to force the static path, an
+    :class:`AdaptiveOptions` to tune it, or a pre-built
+    :class:`AdaptiveController` (benchmarks/tests inspect its counters).
     Returns (final_state, history list of metric dicts).
     """
     opts = opts or TrainOptions()
+    controller = None
+    if isinstance(adaptive, AdaptiveController):
+        controller = adaptive
+    elif adaptive is None:
+        if cfg.moe is not None and cfg.moe.pipeline and (
+                cfg.moe.num_partitions == 0
+                or cfg.moe.memory_reuse_strategy == "adaptive"):
+            controller = AdaptiveController(cfg, opts, dist, jit=jit)
+    elif adaptive:
+        aopts = adaptive if isinstance(adaptive, AdaptiveOptions) else None
+        controller = AdaptiveController(cfg, opts, dist, aopts, jit=jit)
+
     if state is None:
         state = init_state(cfg, jax.random.PRNGKey(0), opts)
     start = 0
@@ -144,9 +359,10 @@ def train(cfg: ArchConfig, *, steps: int, batch_source,
             state, start = restored["state"], int(restored["step"])
             log.info("restored checkpoint at step %d", start)
 
-    step_fn = make_train_step(cfg, opts, dist)
-    if jit:
-        step_fn = jax.jit(step_fn, donate_argnums=(0,))
+    if controller is None:
+        step_fn = make_train_step(cfg, opts, dist)
+        if jit:
+            step_fn = jax.jit(step_fn, donate_argnums=(0,))
 
     history = []
     step = start
@@ -156,10 +372,14 @@ def train(cfg: ArchConfig, *, steps: int, batch_source,
         attempt = 0
         while True:
             try:
+                ainfo = {}
+                if controller is not None:
+                    step_fn, ainfo = controller.step_fn(state, batch, step)
                 t0 = time.perf_counter()
                 state, metrics = step_fn(state, batch)
                 metrics = {k: float(v) for k, v in metrics.items()}
                 metrics["step_time_s"] = time.perf_counter() - t0
+                metrics.update(ainfo)
                 break
             except Exception:                      # pragma: no cover
                 attempt += 1

@@ -1,0 +1,140 @@
+"""Online adaptive runtime controller (§III-C + §III-E wired into train):
+re-jit economy, persistent-searcher reuse, capacity-masked degradation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import TPU_V5E, Resolver
+from repro.data import VaryingSyntheticTokens
+from repro.runtime import (AdaptiveController, AdaptiveOptions,
+                           TrainOptions, init_state, train)
+
+
+@pytest.fixture(scope="module")
+def adaptive_cfg():
+    base = get_config("moe-gpt3-s").reduced()
+    return dataclasses.replace(
+        base, num_layers=2, compute_dtype="float32",
+        moe=dataclasses.replace(base.moe, num_partitions=0,
+                                memory_reuse_strategy="adaptive"))
+
+
+def _fake_clock(b, n, strategy):
+    """Deterministic measure with optimum n growing in b (fake clock)."""
+    ideal = max(1, b // 256)
+    return abs(n - ideal) + 0.01 * n
+
+
+def test_rejit_only_on_new_config(adaptive_cfg):
+    """Across a repeating trace, the step cache compiles at most once per
+    distinct (n, strategy, batch_shape) and the searcher's measure calls
+    stay sublinear in steps (cache hits on revisited batch sizes)."""
+    opts = TrainOptions()
+    aopts = AdaptiveOptions(measure_fn=_fake_clock, candidates=(1, 2, 4, 8))
+    ctl = AdaptiveController(adaptive_cfg, opts, aopts=aopts, jit=False)
+    state = init_state(adaptive_cfg, jax.random.PRNGKey(0), opts)
+    trace = [4, 8, 4, 16, 8, 4, 16, 8, 4, 4, 8, 16]
+    ds = VaryingSyntheticTokens(adaptive_cfg, trace, seq=32, seed=0)
+    keys = set()
+    for step in range(len(trace)):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+        _, info = ctl.step_fn(state, batch, step)
+        assert info["n"] >= 1 and info["strategy"] != "adaptive"
+        keys.add((info["n"], info["strategy"], ctl._shape_key(batch)))
+    assert ctl.rejit_count == len(keys)
+    # sublinear search: one real search per distinct token count, despite
+    # a retune at every shape change
+    assert ctl.resolver.search_calls <= len(set(trace))
+    assert ctl.retune_count > len(set(trace))
+
+
+def test_retune_every_remeasures_without_rejit(adaptive_cfg):
+    """Timer-triggered retunes re-MEASURE (stale-timing refresh, not an
+    inert cache hit) but never re-jit while the resolved
+    (n, strategy, shape) is unchanged."""
+    opts = TrainOptions()
+    aopts = AdaptiveOptions(measure_fn=_fake_clock, candidates=(1, 2, 4),
+                            retune_every=2)
+    ctl = AdaptiveController(adaptive_cfg, opts, aopts=aopts, jit=False)
+    state = init_state(adaptive_cfg, jax.random.PRNGKey(0), opts)
+    ds = VaryingSyntheticTokens(adaptive_cfg, [8], seq=32, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
+    for step in range(8):
+        _, info = ctl.step_fn(state, batch, step)
+    assert ctl.retune_count == 4                 # steps 0, 2, 4, 6
+    assert ctl.resolver.search_calls == 4        # each one re-measured
+    assert ctl.rejit_count == 1                  # same config -> cached
+
+
+def test_retune_timer_fires_under_shape_churn(adaptive_cfg):
+    """The drift timer runs on its own clock: a cyclic-shape trace
+    (every step retunes for shape) must not starve re-measurement."""
+    opts = TrainOptions()
+    aopts = AdaptiveOptions(measure_fn=_fake_clock, candidates=(1, 2, 4),
+                            retune_every=2)
+    ctl = AdaptiveController(adaptive_cfg, opts, aopts=aopts, jit=False)
+    state = init_state(adaptive_cfg, jax.random.PRNGKey(0), opts)
+    trace = [4, 8] * 4
+    ds = VaryingSyntheticTokens(adaptive_cfg, trace, seq=32, seed=0)
+    for step in range(len(trace)):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+        ctl.step_fn(state, batch, step)
+    # refresh at steps 2/4/6 resets the searcher, so both sizes
+    # re-measure each cycle: 2 initial + 3 resets * 2 sizes = 8.
+    # Without the independent timer this would stay at 2 (cache hits).
+    assert ctl.resolver.search_calls == 8
+    assert ctl.rejit_count == 2                  # configs never changed
+
+
+def test_controller_rejects_unpipelined_config(adaptive_cfg):
+    import dataclasses as dc
+    cfg = dc.replace(adaptive_cfg, moe=dc.replace(adaptive_cfg.moe,
+                                                  pipeline=False))
+    with pytest.raises(ValueError):
+        AdaptiveController(cfg, TrainOptions(), jit=False)
+
+
+def test_resolver_is_incremental(adaptive_cfg):
+    r = Resolver(adaptive_cfg, ep_size=8, hw=TPU_V5E,
+                 measure_fn=_fake_clock)
+    cfg1 = r.resolve(4096)
+    calls = r.search_calls
+    cfg2 = r.resolve(4096)                       # hash-table hit
+    assert (cfg1.moe.num_partitions, cfg1.moe.memory_reuse_strategy) == \
+        (cfg2.moe.num_partitions, cfg2.moe.memory_reuse_strategy)
+    assert r.search_calls == calls
+
+
+def test_resolve_masks_offload_strategies(adaptive_cfg):
+    """allow_offload=False degrades the §III-E candidate set to the
+    device-only strategies (S1-S3 need a host link; S4 survives)."""
+    r = Resolver(adaptive_cfg, ep_size=8, hw=TPU_V5E,
+                 measure_fn=_fake_clock, allow_offload=False)
+    for tokens in (512, 4096, 65536):
+        cfg = r.resolve(tokens)
+        assert cfg.moe.memory_reuse_strategy == "s4"
+        assert cfg.moe.num_partitions >= 1
+
+
+def test_train_adaptive_end_to_end(adaptive_cfg):
+    """Acceptance: num_partitions=0 + strategy='adaptive' -> train()
+    resolves online through one persistent searcher, re-jits at most once
+    per distinct (n, strategy, batch_shape), and emits the controller
+    metrics."""
+    opts = TrainOptions(lr=1e-3, warmup=2, total_steps=6)
+    aopts = AdaptiveOptions(measure_fn=_fake_clock, candidates=(1, 2, 4))
+    ctl = AdaptiveController(adaptive_cfg, opts, aopts=aopts)
+    trace = (4, 8, 4, 8, 4, 8)
+    ds = VaryingSyntheticTokens(adaptive_cfg, trace, seq=16, seed=0)
+    state, hist = train(adaptive_cfg, steps=6, batch_source=ds, opts=opts,
+                        adaptive=ctl)
+    assert int(state["step"]) == 6
+    assert ctl.rejit_count == 2                  # two shapes, one (n, strat)
+    assert ctl.resolver.search_calls == 2        # one per distinct size
+    for h in hist:
+        assert h["n"] >= 1 and h["strategy"] != "adaptive"
+        assert jnp.isfinite(h["loss"])
+    assert "retune_time_s" in hist[0]

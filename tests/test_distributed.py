@@ -25,11 +25,11 @@ params = lm.init(cfg, key)
 loss_ref, _ = lm.loss_fn(params, batch, cfg)
 g_ref = jax.grad(lambda p: lm.loss_fn(p, batch, cfg)[0])(params)
 
-mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh, set_mesh
+mesh = make_mesh((2, 4), ('data', 'model'))
 dist = DistContext(mesh=mesh, dp_axes=('data',), ep_axis='model',
                    tp_axis='model')
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     loss_d = jax.jit(lambda p, b: lm.loss_fn(p, b, cfg, dist=dist)[0]
                      )(params, batch)
     g_d = jax.jit(jax.grad(lambda p, b: lm.loss_fn(p, b, cfg,
@@ -59,11 +59,11 @@ tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
 cache0 = lm.init_cache(cfg, B, max_len=32, dtype=jnp.float32)
 ref, _ = lm.decode_step(params, cache0, tok, cfg)
 
-mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh, set_mesh
+mesh = make_mesh((2, 4), ('data', 'model'))
 dist = DistContext(mesh=mesh, dp_axes=('data',), ep_axis='model',
                    tp_axis='model')
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     cache1 = lm.init_cache(cfg, B, max_len=32, dtype=jnp.float32)
     out, _ = jax.jit(lambda p, c, t: lm.decode_step(p, c, t, cfg,
                                                     dist=dist)
@@ -100,8 +100,8 @@ def test_moe_decode_replicated_path_matches():
 def test_sharding_rules_divisibility_fallback():
     import jax
     from repro.distributed.sharding import make_rules
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     rules = make_rules(mesh, "train", fsdp=True)
     # heads=56 does not divide the (trivial 1-sized here) axis product —
     # use a synthetic check through spec_for with a fake big extent

@@ -34,13 +34,12 @@ def test_trip_count_multipliers():
 def test_collective_parser_on_psum():
     def f(x):
         return jax.lax.psum(x, "i")
-    import numpy as np
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("i",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
-    with jax.set_mesh(mesh):
-        g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("i"),
-                                  out_specs=P()))
+    from repro.compat import make_mesh, set_mesh, shard_map
+    mesh = make_mesh((1,), ("i",))
+    with set_mesh(mesh):
+        g = jax.jit(shard_map(f, mesh=mesh, in_specs=P("i"),
+                              out_specs=P()))
         compiled = g.lower(
             jax.ShapeDtypeStruct((8, 128), jnp.float32)).compile()
     coll = H.collective_bytes(compiled.as_text())
