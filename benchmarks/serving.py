@@ -1,0 +1,109 @@
+"""Serving benchmark: replay a synthetic Poisson arrival trace through
+the continuous-batching engine and report throughput, latency
+percentiles and KV memory accounting.
+
+    PYTHONPATH=src python benchmarks/serving.py --smoke \
+        [--out BENCH_serving.json]
+
+``--smoke`` is the CI configuration (reduced MoE arch on CPU, small
+trace) that seeds the perf trajectory: the emitted JSON carries
+requests/s, p50/p99 request latency, p50 TTFT, peak ``cache_bytes`` in
+use, and the per-bucket MPipeMoE (n, strategy) resolutions.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.core import resolve_hw
+from repro.serve import EngineOptions, run_poisson
+
+
+def run(*, arch: str, requests: int, rate: float, slots: int, chunk: int,
+        page_size: int, prompt_max: int, gen_max: int, seed: int,
+        hw_name: str, time_scale: float) -> dict:
+    cfg = get_config(arch).reduced()
+    hw = resolve_hw(hw_name)
+    opts = EngineOptions(page_size=page_size, max_slots=slots,
+                         max_seq_len=prompt_max + gen_max, chunk=chunk,
+                         hw=hw)
+    engine, wall_s = run_poisson(cfg, opts, requests=requests, rate=rate,
+                                 prompt_max=prompt_max, gen_max=gen_max,
+                                 seed=seed, time_scale=time_scale)
+    s = engine.stats()
+    ttfts = sorted(r.ttft_s for r in engine.done)
+    return {
+        "arch": cfg.name,
+        "hw": hw.name,
+        "requests": requests,
+        "rate_req_s": rate,
+        "slots": slots,
+        "chunk": chunk,
+        "page_size": page_size,
+        "wall_s": wall_s,
+        "requests_per_s": s["requests_done"] / wall_s,
+        "tokens_per_s": s["tokens_generated"] / wall_s,
+        "tokens_generated": s["tokens_generated"],
+        "p50_latency_s": s["p50_latency_s"],
+        "p99_latency_s": s["p99_latency_s"],
+        "p50_ttft_s": ttfts[len(ttfts) // 2] if ttfts else 0.0,
+        "engine_steps": s["engine_steps"],
+        "prefill_compiles": s["prefill_compiles"],
+        "cache_bytes": s["cache_bytes"],
+        "peak_kv_used_bytes": s["peak_kv_used_bytes"],
+        "resolutions": s["resolutions"],
+    }
+
+
+def main():
+    # sizing flags default to None so an explicitly passed value always
+    # beats the --smoke profile (argparse can't otherwise distinguish
+    # "left unset" from "explicitly passed the default")
+    full = dict(requests=32, rate=20.0, slots=8, chunk=32, page_size=8,
+                prompt_max=48, gen_max=24)
+    smoke = dict(requests=12, rate=50.0, slots=4, chunk=16, page_size=4,
+                 prompt_max=32, gen_max=12)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="moe-gpt3-s")
+    for name, v in full.items():
+        ap.add_argument(f"--{name.replace('_', '-')}", type=type(v),
+                        default=None, help=f"default {v} ({smoke[name]} "
+                        f"with --smoke)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--hw", default="auto")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="arrival time multiplier (0 = all at once)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI configuration")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+
+    profile = smoke if args.smoke else full
+    kw = dict(arch=args.arch, seed=args.seed, hw_name=args.hw,
+              time_scale=args.time_scale)
+    for name in full:
+        v = getattr(args, name)
+        kw[name] = profile[name] if v is None else v
+    res = run(**kw)
+
+    print(f"\n{res['arch']} on {res['hw']}: {res['requests']} requests @ "
+          f"{res['rate_req_s']} req/s (Poisson), {res['slots']} slots, "
+          f"chunk {res['chunk']}, page {res['page_size']}")
+    print(f"throughput {res['requests_per_s']:.2f} req/s, "
+          f"{res['tokens_per_s']:.1f} tok/s")
+    print(f"latency p50 {res['p50_latency_s']*1e3:.0f}ms, "
+          f"p99 {res['p99_latency_s']*1e3:.0f}ms; "
+          f"TTFT p50 {res['p50_ttft_s']*1e3:.0f}ms")
+    print(f"KV pool {res['cache_bytes']/2**20:.2f}MiB, peak used "
+          f"{res['peak_kv_used_bytes']/2**20:.2f}MiB")
+    for bucket, (n, strat) in sorted(res["resolutions"].items(),
+                                     key=lambda kv: int(kv[0])):
+        print(f"  bucket {int(bucket):4d} -> n={n} strategy={strat}")
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

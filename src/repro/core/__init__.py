@@ -9,14 +9,16 @@ from repro.core.selector import (Resolver, make_searcher, moe_workload,
                                  resolve, resolve_strategy)
 from repro.core.strategies import (host_offload_supported, remat_policy,
                                    wrap_chunk)
-from repro.core.types import (Q_TABLE, TPU_V5E, HardwareSpec, Interference,
-                              Strategy)
+from repro.core.types import (CPU_HOST, GPU_A100, HW_SPECS, Q_TABLE,
+                              TPU_V5E, HardwareSpec, Interference, Strategy,
+                              resolve_hw)
 
 __all__ = [
-    "GranularitySearcher", "MoEMemory", "MoEWorkload", "Q_TABLE", "TPU_V5E",
-    "HardwareSpec", "Interference", "Resolver", "Strategy", "all_costs",
-    "capacity_for", "cost", "host_offload_supported", "make_searcher",
-    "moe_workload", "pipelined_moe", "remat_policy", "resolve",
+    "CPU_HOST", "GPU_A100", "GranularitySearcher", "HW_SPECS", "MoEMemory",
+    "MoEWorkload", "Q_TABLE", "TPU_V5E", "HardwareSpec", "Interference",
+    "Resolver", "Strategy", "all_costs", "capacity_for", "cost",
+    "host_offload_supported", "make_searcher", "moe_workload",
+    "pipelined_moe", "remat_policy", "resolve", "resolve_hw",
     "resolve_strategy", "select_strategy", "simulate", "stream_times",
     "sweep_partitions", "wrap_chunk",
 ]

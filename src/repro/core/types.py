@@ -81,3 +81,34 @@ class HardwareSpec:
 
 
 TPU_V5E = HardwareSpec()
+
+# Rough public-datasheet numbers — the perf model only needs ratios of
+# compute : interconnect : host bandwidth to rank (n, strategy) choices.
+GPU_A100 = HardwareSpec(name="gpu-a100", flops=312e12, hbm_bw=2039e9,
+                        ici_bw=300e9, host_bw=32e9, hbm_bytes=80e9,
+                        has_host_offload=True)
+CPU_HOST = HardwareSpec(name="cpu-host", flops=1e12, hbm_bw=50e9,
+                        ici_bw=10e9, host_bw=10e9, hbm_bytes=16e9,
+                        has_host_offload=False)
+
+HW_SPECS: Dict[str, HardwareSpec] = {
+    "tpu-v5e": TPU_V5E,
+    "gpu-a100": GPU_A100,
+    "cpu-host": CPU_HOST,
+}
+
+
+def resolve_hw(name: str = "auto") -> HardwareSpec:
+    """Named :class:`HardwareSpec`, or ``"auto"`` to detect from the
+    attached jax backend (tpu -> tpu-v5e, gpu -> gpu-a100, else cpu)."""
+    if name != "auto":
+        try:
+            return HW_SPECS[name]
+        except KeyError:
+            raise KeyError(f"unknown hw {name!r}; one of "
+                           f"{sorted(HW_SPECS)} or 'auto'") from None
+    import jax  # lazy: keep this module importable without a backend
+
+    platform = jax.devices()[0].platform
+    return HW_SPECS.get({"tpu": "tpu-v5e", "gpu": "gpu-a100"}
+                        .get(platform, "cpu-host"), CPU_HOST)

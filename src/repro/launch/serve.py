@@ -1,8 +1,20 @@
-"""Serving launcher: continuous batched greedy decode over a request
-stream (reduced configs on CPU; production mesh on TPU).
+"""Serving launcher.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b \
-        --batch 4 --gen 32
+Two paths share one CLI:
+
+* ``--engine``: the continuous-batching engine (``repro.serve``) replays
+  a Poisson arrival trace of mixed-length requests with paged KV and
+  per-bucket adaptive (n, strategy) prefill —
+
+      PYTHONPATH=src python -m repro.launch.serve --engine --requests 16
+
+* default: the legacy fixed-batch loop (kept as the golden reference the
+  engine is tested against), now with per-request ``max_new_tokens`` and
+  EOS early exit — stopping is masked host-side so jitted shapes stay
+  static.
+
+``--hw`` names the :class:`HardwareSpec` the MPipeMoE resolver plans
+for; ``auto`` detects it from the attached jax backend.
 """
 from __future__ import annotations
 
@@ -11,27 +23,20 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
-from repro.core import TPU_V5E, resolve
+from repro.core import HW_SPECS, resolve, resolve_hw
 from repro.models.api import get_model
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3-8b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--requests", type=int, default=2)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch).reduced()
+def legacy_loop(args, cfg, hw):
+    """Fixed-batch request loop over a dense [batch, max_len] cache."""
     if cfg.moe is not None:
         # concrete (n, strategy) for the prefill token count (decode
         # itself always runs n=1 — see pipeline_moe._resolve_partitions)
         cfg = resolve(cfg, local_tokens=args.batch * args.prompt_len,
-                      ep_size=1, hw=TPU_V5E)
+                      ep_size=1, hw=hw)
         print(f"MPipeMoE prefill: n={cfg.moe.num_partitions} "
               f"strategy={cfg.moe.memory_reuse_strategy}")
     model = get_model(cfg)
@@ -40,6 +45,7 @@ def main():
     max_len = args.prompt_len + args.gen
     step = jax.jit(lambda p, c, t: model.decode_step(p, c, t, cfg))
 
+    rng = np.random.Generator(np.random.Philox(key=123))
     for req in range(args.requests):
         batch = {"tokens": jax.random.randint(
             jax.random.PRNGKey(req), (args.batch, args.prompt_len), 0,
@@ -48,19 +54,98 @@ def main():
             e = cfg.encoder
             batch["frames"] = 0.02 * jax.random.normal(
                 key, (args.batch, e.context_len, e.d_model))
+        # per-sequence generation budget (<= --gen); EOS stops earlier
+        max_new = rng.integers(max(1, args.gen // 2), args.gen + 1,
+                               size=args.batch)
         t0 = time.perf_counter()
         logits, cache = model.prefill(params, batch, cfg, max_len=max_len,
                                       dtype=jnp.float32)
         tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-        n = 1
-        while n < args.gen:
+        done = np.zeros(args.batch, bool)
+        n_gen = np.ones(args.batch, np.int64)
+        if args.eos >= 0:
+            done |= np.asarray(tok[:, 0]) == args.eos
+        done |= n_gen >= max_new
+        steps = 1
+        while not done.all() and steps < args.gen:
             logits, cache = step(params, cache, tok)
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            n += 1
+            nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            # masked stop: finished sequences keep re-feeding their last
+            # token, so the jitted step shape never changes
+            tok = jnp.where(jnp.asarray(done)[:, None], tok, nxt)
+            n_gen += ~done
+            if args.eos >= 0:
+                done |= np.asarray(tok[:, 0]) == args.eos
+            done |= n_gen >= max_new
+            steps += 1
         dt = time.perf_counter() - t0
+        total = int(n_gen.sum())
         print(f"request-batch {req}: {args.batch} seqs x "
-              f"({args.prompt_len} prompt + {args.gen} gen) in "
-              f"{dt*1e3:.0f}ms -> {args.batch*args.gen/dt:.1f} tok/s")
+              f"({args.prompt_len} prompt + <= {args.gen} gen) "
+              f"{total} tokens in {dt*1e3:.0f}ms -> {total/dt:.1f} tok/s "
+              f"(stopped early: {int(done.sum())})")
+
+
+def engine_loop(args, cfg, hw):
+    from repro.serve import EngineOptions, run_poisson
+
+    opts = EngineOptions(page_size=args.page_size, max_slots=args.batch,
+                         max_seq_len=args.prompt_len + args.gen,
+                         chunk=args.chunk, hw=hw)
+    engine, dt = run_poisson(cfg, opts, requests=args.requests,
+                             rate=args.rate, prompt_max=args.prompt_len,
+                             gen_max=args.gen, seed=args.seed,
+                             eos_id=args.eos if args.eos >= 0 else None,
+                             time_scale=args.time_scale)
+    s = engine.stats()
+    print(f"engine: {s['requests_done']} requests, "
+          f"{s['tokens_generated']} tokens in {dt:.2f}s "
+          f"({s['requests_done']/dt:.2f} req/s, "
+          f"{s['tokens_generated']/dt:.1f} tok/s)")
+    print(f"latency p50={s['p50_latency_s']*1e3:.0f}ms "
+          f"p99={s['p99_latency_s']*1e3:.0f}ms | "
+          f"KV pool {s['cache_bytes']/2**20:.2f}MiB, "
+          f"peak used {s['peak_kv_used_bytes']/2**20:.2f}MiB | "
+          f"{s['engine_steps']} steps, "
+          f"{s['prefill_compiles']} prefill compiles")
+    for bucket, (n, strat) in sorted(engine.adaptive.resolutions.items()):
+        print(f"  bucket {bucket:4d} -> n={n} strategy={strat}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="legacy: batch size; engine: decode slots")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=2)
+    ap.add_argument("--hw", default="auto",
+                    choices=["auto"] + sorted(HW_SPECS),
+                    help="hardware spec for the MPipeMoE resolver "
+                         "(auto = detect from the jax backend)")
+    ap.add_argument("--eos", type=int, default=-1,
+                    help="EOS token id for early exit (-1 = disabled)")
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine over a Poisson trace")
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="engine: prefill chunk size (tokens)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="engine: KV page size (tokens)")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="engine: Poisson arrival rate (req/s)")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="engine: arrival time multiplier (0 = all at once)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    hw = resolve_hw(args.hw)
+    print(f"hw spec: {hw.name}")
+    cfg = get_config(args.arch).reduced()
+    if args.engine:
+        engine_loop(args, cfg, hw)
+    else:
+        legacy_loop(args, cfg, hw)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,36 @@
 """Model API dispatch: decoder-only LM vs encoder-decoder."""
 from __future__ import annotations
 
+from typing import Tuple
+
 from repro.configs.base import ArchConfig
 from repro.models import encdec, lm
 
 
 def get_model(cfg: ArchConfig):
     return encdec if cfg.kind == "encdec" else lm
+
+
+def supports_paged(cfg: ArchConfig) -> Tuple[bool, str]:
+    """Can ``cfg`` run the paged-KV serving path (``repro.serve``)?
+
+    The paged decode/prefill steps (``lm.decode_step_paged`` /
+    ``lm.prefill_chunk_paged``) cover decoder-only, token-input models
+    whose every mixer is plain attention — MLA latent caches and SSM /
+    xLSTM recurrent state are not paged (they are O(1) per sequence and
+    gain nothing from paging). Returns (ok, reason-if-not).
+    """
+    if cfg.kind != "decoder":
+        return False, "paged serving requires a decoder-only model"
+    if cfg.frontend != "none":
+        return False, f"frontend {cfg.frontend!r} not supported by engine"
+    if cfg.attn.mla is not None:
+        return False, "MLA latent cache is not paged"
+    if cfg.attn.mrope:
+        return False, "m-rope positions not supported by engine"
+    bad = {r["mixer"] for r in cfg.layer_roles()} - {"attn"}
+    if bad:
+        return False, f"non-attention mixers not paged: {sorted(bad)}"
+    if cfg.positional not in ("rope", "learned", "none"):
+        return False, f"positional {cfg.positional!r} not supported"
+    return True, ""

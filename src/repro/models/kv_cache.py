@@ -4,6 +4,15 @@ Shapes are chosen by *role*: sliding-window attention layers allocate a
 ring buffer of ``window`` slots (the gemma3/danube long-context path); MLA
 layers cache only the compressed latent; SSM/xLSTM layers keep O(1)
 recurrent state. ``abstract=True`` returns ShapeDtypeStructs (dry-run).
+
+Paged layout (the serving engine, ``repro.serve``): instead of one dense
+``[batch, max_len]`` block per sequence, K/V live in a global pool of
+fixed-size pages ``[num_pages, page_size, kv_heads, head_dim]`` shared by
+every in-flight sequence; a per-sequence page table maps logical page
+index -> physical page. ``gather_pages``/``scatter_pages`` are the
+page-granular access primitives; page 0 is reserved as a write sink for
+masked (padding / inactive-slot) writes so jitted steps never branch on
+occupancy.
 """
 from __future__ import annotations
 
@@ -96,3 +105,70 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
 def cache_bytes(cache) -> int:
     leaves = jax.tree_util.tree_leaves(cache)
     return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV (serving engine)
+# ---------------------------------------------------------------------------
+
+def paged_layer_pool(cfg: ArchConfig, role: Dict, num_pages: int,
+                     page_size: int, dtype=jnp.bfloat16,
+                     abstract: bool = False):
+    """Page pool for one attention layer: K and V, each
+    ``[num_pages, page_size, kv_heads, head_dim]``."""
+    a = cfg.attn
+    if role["mixer"] != "attn" or a.mla is not None:
+        raise NotImplementedError(
+            f"paged KV supports plain attention layers only "
+            f"(got mixer={role['mixer']!r}, mla={a.mla is not None})")
+    kd = (num_pages, page_size, a.num_kv_heads, cfg.head_dim)
+    return {"k_pool": _mk(kd, dtype, abstract),
+            "v_pool": _mk(kd, dtype, abstract)}
+
+
+def init_paged_pools(cfg: ArchConfig, num_pages: int, page_size: int,
+                     dtype=jnp.bfloat16, abstract: bool = False):
+    """Stacked paged pools: leading dim = num_periods (scanned), matching
+    the parameter tree so ``lax.scan`` zips them per period."""
+    roles = cfg.layer_roles()
+    per_period = {f"l{i}": paged_layer_pool(cfg, role, num_pages, page_size,
+                                            dtype, abstract=True)
+                  for i, role in enumerate(roles)}
+    n = cfg.num_periods
+
+    def _stackify(sds):
+        shape = (n,) + sds.shape
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, sds.dtype)
+        return jnp.zeros(shape, sds.dtype)
+
+    return jax.tree_util.tree_map(_stackify, per_period)
+
+
+def gather_pages(pool, page_table):
+    """pool ``[P, ps, ...]``, page_table ``[B, NP]`` ->
+    position-contiguous view ``[B, NP*ps, ...]`` per sequence."""
+    g = pool[page_table]                       # [B, NP, ps, ...]
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def scatter_pages(pool, page_table, positions, values, valid=None):
+    """Write ``values[b, s]`` at absolute position ``positions[b, s]`` of
+    sequence ``b``'s paged cache.
+
+    pool ``[P, ps, ...]``; page_table ``[B, NP]``; positions ``[B, S]``
+    int32; values ``[B, S, ...]``. Writes masked out by ``valid`` (or
+    falling past the table) are redirected to reserved page 0, so the
+    scatter stays branch-free under jit.
+    """
+    ps = pool.shape[1]
+    np_ = page_table.shape[1]
+    pidx = jnp.clip(positions // ps, 0, np_ - 1)
+    page = jnp.take_along_axis(page_table, pidx, axis=1)       # [B, S]
+    ok = positions < np_ * ps
+    if valid is not None:
+        ok = ok & valid
+    page = jnp.where(ok, page, 0)
+    off = positions % ps
+    flat = values.reshape((-1,) + values.shape[2:]).astype(pool.dtype)
+    return pool.at[page.reshape(-1), off.reshape(-1)].set(flat)

@@ -166,8 +166,9 @@ def decode_attention(q, k, v, cache_len, *, window: int = 0,
                      ring: bool = False):
     """Single-step attention over a cache.
 
-    q: [B,1,Hq,D]; k,v: [B,T,Kv,D]; cache_len: scalar int32 — number of
-    valid entries. If ``ring`` the cache is a ring buffer of size
+    q: [B,1,Hq,D]; k,v: [B,T,Kv,D]; cache_len: int32 scalar or [B] vector
+    — number of valid entries (per sequence in the paged/continuous-
+    batching path). If ``ring`` the cache is a ring buffer of size
     ``window`` (all slots valid once full; positions are implicit).
     """
     b, t, kv_heads, d = k.shape
@@ -176,14 +177,15 @@ def decode_attention(q, k, v, cache_len, *, window: int = 0,
     qe = q.reshape(b, kv_heads, g, d)
     s_ = jnp.einsum("bkgd,btkd->bkgt", qe, k,
                     preferred_element_type=jnp.float32) * (d ** -0.5)
-    idx = jnp.arange(t)
+    cl = jnp.atleast_1d(jnp.asarray(cache_len))[:, None]     # [B or 1, 1]
+    idx = jnp.arange(t)[None, :]
     if ring:
-        valid = idx < jnp.minimum(cache_len, t)
+        valid = idx < jnp.minimum(cl, t)
     else:
-        valid = idx < cache_len
+        valid = idx < cl
         if window > 0:
-            valid = valid & (idx >= cache_len - window)
-    s_ = jnp.where(valid[None, None, None, :], s_, NEG_INF)
+            valid = valid & (idx >= cl - window)
+    s_ = jnp.where(valid[:, None, None, :], s_, NEG_INF)
     m = s_.max(axis=-1, keepdims=True)
     p = jnp.exp(s_ - m)
     l = p.sum(axis=-1, keepdims=True)
@@ -258,6 +260,9 @@ def apply(params, x, *, cfg: ArchConfig, positions, is_global: bool = True,
           dist=None):
     """Self-attention layer. Returns (out, new_cache)."""
     a = cfg.attn
+    if cache is not None and "k_pool" in cache:
+        return _apply_paged(params, x, cfg=cfg, positions=positions,
+                            is_global=is_global, mode=mode, cache=cache)
     if a.mla is not None:
         return _apply_mla(params, x, cfg=cfg, positions=positions,
                           mode=mode, cache=cache)
@@ -323,6 +328,63 @@ def _append_cache(cache, k, v, window: int):
     vc = jax.lax.dynamic_update_slice(
         cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
     return {"k": kc, "v": vc, "len": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# Paged KV (serving engine)
+# ---------------------------------------------------------------------------
+
+def _apply_paged(params, x, *, cfg: ArchConfig, positions, is_global: bool,
+                 mode: str, cache: dict):
+    """Attention over a paged KV pool (``repro.serve``).
+
+    ``cache``: ``k_pool``/``v_pool`` ``[P, ps, Kv, D]``, ``page_table``
+    ``[B, NP]``, ``lens`` ``[B]`` (tokens already cached per sequence)
+    and optionally ``write_valid`` ``[B, S]`` (mask for padding /
+    inactive-slot writes — redirected to reserved page 0).
+
+    Decode (S == 1) runs every slot of the continuous batch with its own
+    cache length; chunked prefill (S > 1) requires B == 1 and attends the
+    chunk against the gathered pages with ``q_offset = lens[0]``. The
+    gathered view is position-contiguous, so sliding windows degrade to
+    plain masking (no ring buffers) — paged pools always hold full
+    positions.
+    """
+    from repro.models import kv_cache as KV
+
+    a = cfg.attn
+    if a.mla is not None:
+        raise NotImplementedError("paged KV path does not support MLA")
+    window = 0 if (is_global and a.global_period > 1) else a.window
+    s = x.shape[1]
+
+    q, k, v = _proj_qkv(params, x, cfg)
+    q, k = _rope_qk(q, k, cfg, positions, is_global=is_global)
+
+    valid = cache.get("write_valid")
+    k_pool = KV.scatter_pages(cache["k_pool"], cache["page_table"],
+                              positions, k, valid)
+    v_pool = KV.scatter_pages(cache["v_pool"], cache["page_table"],
+                              positions, v, valid)
+    new_cache = {"k_pool": k_pool, "v_pool": v_pool}
+
+    kf = KV.gather_pages(k_pool, cache["page_table"])   # [B, NP*ps, Kv, D]
+    vf = KV.gather_pages(v_pool, cache["page_table"])
+    if s == 1:
+        out = decode_attention(q, kf, vf, cache["lens"] + 1, window=window,
+                               ring=False)
+    else:
+        assert x.shape[0] == 1, "paged chunked prefill runs one sequence"
+        g = a.num_heads // a.num_kv_heads
+        if g > 1:
+            # match the dense prefill path: KV repeated to full heads
+            kf = jnp.repeat(kf, g, axis=2)
+            vf = jnp.repeat(vf, g, axis=2)
+        out = flash_attention(q, kf, vf, causal=True, window=window,
+                              q_offset=cache["lens"][0])
+
+    out = jnp.einsum("bshe,hed->bsd", out, params["w_o"].astype(x.dtype))
+    return out, new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -79,10 +79,16 @@ def forward(params, batch, cfg: ArchConfig, *, mode: str = "train",
     dt = jnp.dtype(cfg.compute_dtype)
     tokens = batch["tokens"]
     b = tokens.shape[0]
+    # paged (serving engine) caches carry a page table + per-sequence
+    # lengths instead of a dense [B, max_len] block + scalar pos
+    paged = cache is not None and "page_table" in cache
 
     if mode == "decode":
-        pos0 = cache["pos"]
-        positions = jnp.broadcast_to(pos0[None, None], (b, 1))
+        if paged:
+            positions = cache["lens"][:, None]           # per-slot [B, 1]
+        else:
+            pos0 = cache["pos"]
+            positions = jnp.broadcast_to(pos0[None, None], (b, 1))
     else:
         positions = None  # filled after embeds are known
 
@@ -94,12 +100,19 @@ def forward(params, batch, cfg: ArchConfig, *, mode: str = "train",
     s = x.shape[1]
 
     if mode != "decode":
-        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        base = jnp.arange(s)[None, :]
+        if paged:                          # chunked prefill at an offset
+            positions = cache["lens"][:, None] + base
+        else:
+            positions = jnp.broadcast_to(base, (b, s))
         if cfg.positional == "learned":
             x = x + params["embed"]["pos"][positions[0]].astype(dt)[None]
     positions3 = batch.get("positions3")
 
     roles = cfg.layer_roles()
+    shared_kv = ({"page_table": cache["page_table"], "lens": cache["lens"],
+                  "write_valid": cache.get("write_valid")}
+                 if paged else None)
 
     def period_body(carry, xs):
         x, aux = carry
@@ -107,6 +120,9 @@ def forward(params, batch, cfg: ArchConfig, *, mode: str = "train",
         new_pcache = {} if pcache is not None else None
         for i, role in enumerate(roles):
             lcache = pcache[f"l{i}"] if pcache is not None else None
+            if shared_kv is not None and lcache is not None:
+                lcache = dict(lcache, **{k: v for k, v in shared_kv.items()
+                                         if v is not None})
             x, a, nc = blocks.block_apply(
                 pparams[f"l{i}"], x, cfg=cfg, role=role,
                 positions=positions, mode=mode, cache=lcache, dist=dist,
@@ -136,9 +152,14 @@ def forward(params, batch, cfg: ArchConfig, *, mode: str = "train",
 
     new_cache = None
     if cache is not None:
-        new_pos = (cache["pos"] + 1 if mode == "decode"
-                   else jnp.asarray(s, jnp.int32))
-        new_cache = {"layers": new_layers, "pos": new_pos}
+        if paged:
+            # page_table / lens are host-managed by the serving engine;
+            # only the device pools flow through the step
+            new_cache = {"layers": new_layers}
+        else:
+            new_pos = (cache["pos"] + 1 if mode == "decode"
+                       else jnp.asarray(s, jnp.int32))
+            new_cache = {"layers": new_layers, "pos": new_pos}
     return logits, aux, new_cache
 
 
@@ -206,3 +227,53 @@ def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None,
     logits, _, new_cache = forward(params, batch, cfg, mode="prefill",
                                    cache=cache, dist=dist)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV path (serving engine, repro.serve)
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int,
+                     dtype=jnp.bfloat16, abstract: bool = False):
+    """Global page pools shared by every in-flight sequence (stacked over
+    periods like :func:`init_cache`)."""
+    return kv_cache.init_paged_pools(cfg, num_pages, page_size, dtype,
+                                     abstract=abstract)
+
+
+def decode_step_paged(params, pools, page_table, lens, tokens,
+                      cfg: ArchConfig, active=None, dist=None):
+    """One decode step over the whole continuous batch.
+
+    pools: paged cache tree; page_table ``[slots, NP]``; lens ``[slots]``
+    (tokens cached per slot); tokens ``[slots, 1]``; ``active`` masks
+    finished / mid-prefill slots so their KV writes land in the reserved
+    sink page. Returns (last-token logits ``[slots, vocab]``, new pools).
+    """
+    cache = {"layers": pools, "page_table": page_table, "lens": lens}
+    if active is not None:
+        cache["write_valid"] = active[:, None]
+    logits, _, new_cache = forward(params, {"tokens": tokens}, cfg,
+                                   mode="decode", cache=cache, dist=dist)
+    return logits[:, -1], new_cache["layers"]
+
+
+def prefill_chunk_paged(params, pools, page_table, pos0, tokens, valid_len,
+                        cfg: ArchConfig, dist=None):
+    """One chunked-prefill step for a single sequence.
+
+    tokens ``[1, C]`` (bucket-padded); page_table ``[1, NP]``; pos0
+    ``[1]`` = tokens already prefilled; valid_len scalar = real (unpadded)
+    tokens in this chunk. Pad positions' KV writes are masked and their
+    logits discarded. Returns (logits at the last real token ``[1, vocab]``,
+    new pools).
+    """
+    c = tokens.shape[1]
+    write_valid = jnp.arange(c)[None, :] < valid_len
+    cache = {"layers": pools, "page_table": page_table, "lens": pos0,
+             "write_valid": write_valid}
+    logits, _, new_cache = forward(params, {"tokens": tokens}, cfg,
+                                   mode="prefill", cache=cache, dist=dist)
+    last = jax.lax.dynamic_slice_in_dim(
+        logits, jnp.maximum(valid_len - 1, 0), 1, axis=1)
+    return last[:, 0], new_cache["layers"]

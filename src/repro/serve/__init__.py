@@ -1,0 +1,45 @@
+"""``repro.serve`` — continuous-batching serving engine (PR 2).
+
+Module map
+----------
+``engine.py``     :class:`Engine` / :class:`EngineOptions` — owns params,
+                  page pools, scheduler and the two compiled-step caches
+                  (decode: one program; prefill: LRU per
+                  (bucket, n, strategy)); ``submit()`` / ``step()`` /
+                  ``run_until_idle()`` / ``stats()``.
+``scheduler.py``  :class:`Scheduler` — FCFS admission by KV/token budget
+                  (whole prompt+gen budget reserved up front) and
+                  chunked-prefill / decode interleaving.
+``paged_kv.py``   :class:`PagedKVCache` — host page allocator (free list,
+                  page table, per-slot lengths) over the device pools from
+                  ``models/kv_cache.init_paged_pools``; page 0 is the
+                  reserved masked-write sink; ``cache_bytes`` /
+                  ``used_bytes`` / ``peak_used_bytes`` accounting.
+``adaptive.py``   :class:`PrefillBucketAdaptive` — power-of-two token
+                  buckets resolved once each through the persistent
+                  ``core.Resolver`` (MPipeMoE Algorithm 1 + Eq. 10).
+``request.py``    :class:`Request` / :class:`RequestState` — QUEUED →
+                  PREFILL → DECODE → DONE, streaming ``on_token`` /
+                  ``on_done`` callbacks, per-request ``max_new_tokens``
+                  and ``eos_id`` stop.
+``trace.py``      Poisson arrival traces + wall-clock ``replay``.
+
+Invariants (tested in ``tests/test_serving.py``): paged + continuously
+batched greedy decode emits exactly the tokens of the dense sequential
+loop; a slot's pages are reserved for its full budget at admission and
+all return to the free list on completion; masked writes only ever touch
+the sink page.
+"""
+from repro.serve.adaptive import PrefillBucketAdaptive, force_adaptive
+from repro.serve.engine import Engine, EngineOptions
+from repro.serve.paged_kv import PagedKVCache
+from repro.serve.request import Request, RequestState
+from repro.serve.scheduler import Scheduler
+from repro.serve.trace import (TraceEntry, poisson_trace, replay,
+                               run_poisson)
+
+__all__ = [
+    "Engine", "EngineOptions", "PagedKVCache", "PrefillBucketAdaptive",
+    "Request", "RequestState", "Scheduler", "TraceEntry", "force_adaptive",
+    "poisson_trace", "replay", "run_poisson",
+]

@@ -1,0 +1,74 @@
+"""Per-bucket adaptive (n, strategy) resolution for chunked prefill.
+
+Incoming prefill chunks have arbitrary token counts; jitting one program
+per count would thrash the compile cache, and MPipeMoE's Algorithm 1
+resolves a different optimal pipeline granularity ``n`` per token count.
+So chunk sizes are bucketed to powers of two and each bucket resolved
+once through the persistent :class:`repro.core.Resolver` (the same
+hash/range-cached searcher the train-side controller uses) — the engine
+then keeps one compiled prefill step per (bucket, n, strategy), mirroring
+the train-side LRU cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.configs.base import ArchConfig
+from repro.core.selector import Resolver
+from repro.core.types import TPU_V5E, HardwareSpec, Strategy
+
+log = logging.getLogger("repro.serve")
+
+
+class PrefillBucketAdaptive:
+    """Bucket prefill token counts -> concrete (n, strategy) configs."""
+
+    def __init__(self, cfg: ArchConfig, *, hw: HardwareSpec = TPU_V5E,
+                 ep_size: int = 1, dp: int = 1, min_bucket: int = 8,
+                 max_bucket: int = 512,
+                 measure_fn: Optional[Callable[[int, int, Strategy], float]]
+                 = None):
+        assert min_bucket > 0 and max_bucket >= min_bucket
+        self.cfg = cfg
+        self.min_bucket = min_bucket
+        self.max_bucket = max_bucket
+        self.resolver = (Resolver(cfg, ep_size=ep_size, hw=hw,
+                                  measure_fn=measure_fn, dp=dp)
+                         if cfg.moe is not None else None)
+        # bucket -> (n, strategy); insertion-ordered for reporting
+        self.resolutions: Dict[int, Tuple[int, str]] = {}
+
+    def bucket_of(self, ntok: int) -> int:
+        """Smallest power-of-two bucket >= ntok, clamped to the range."""
+        b = self.min_bucket
+        while b < ntok and b < self.max_bucket:
+            b *= 2
+        return min(b, self.max_bucket)
+
+    def cfg_for(self, bucket: int) -> ArchConfig:
+        """Concrete config for one bucket; resolves (and logs) once."""
+        if self.resolver is None:                  # dense model: no knobs
+            self.resolutions.setdefault(bucket, (1, "none"))
+            return self.cfg
+        rcfg = self.resolver.resolve(bucket)
+        resolved = (rcfg.moe.num_partitions, rcfg.moe.memory_reuse_strategy)
+        if self.resolutions.get(bucket) != resolved:
+            log.info("serve adaptive: bucket %d -> n=%d strategy=%s",
+                     bucket, *resolved)
+            self.resolutions[bucket] = resolved
+        return rcfg
+
+    @property
+    def search_calls(self) -> int:
+        return self.resolver.search_calls if self.resolver else 0
+
+
+def force_adaptive(cfg: ArchConfig) -> ArchConfig:
+    """Reset cfg.moe to the adaptive placeholders so every bucket is
+    resolved by Algorithm 1 / Eq. 10 instead of a baked-in (n, strategy)."""
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, num_partitions=0, memory_reuse_strategy="adaptive"))

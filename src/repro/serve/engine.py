@@ -1,0 +1,271 @@
+"""Continuous-batching serving engine.
+
+One :class:`Engine` owns: the model params, a :class:`PagedKVCache`
+(device page pools + host allocator), a :class:`Scheduler` (admission +
+prefill/decode interleave) and a :class:`PrefillBucketAdaptive`
+(per-bucket MPipeMoE (n, strategy) resolution). Each ``step()`` runs one
+jitted program — either a chunked-prefill step for the head-of-line
+prefilling request or one decode step over the whole slot batch — so
+batch composition can change every step while compiled programs are
+reused from two small caches:
+
+* decode: compiled **once** (slot count is static; finished / mid-prefill
+  slots are masked, their KV writes going to the reserved sink page);
+* prefill: one compiled step per (bucket, n, strategy) in an LRU,
+  mirroring the train-side AdaptiveController cache.
+
+Greedy decoding only (argmax inside the jitted step); sampling is future
+work.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.types import TPU_V5E, HardwareSpec
+from repro.models.api import get_model, supports_paged
+from repro.serve.adaptive import PrefillBucketAdaptive, force_adaptive
+from repro.serve.paged_kv import PagedKVCache
+from repro.serve.request import Request, RequestState
+from repro.serve.scheduler import Scheduler
+
+log = logging.getLogger("repro.serve")
+
+
+@dataclasses.dataclass
+class EngineOptions:
+    page_size: int = 16
+    max_slots: int = 8                 # continuous-batch width (static)
+    max_seq_len: int = 512             # per-request prompt + gen budget
+    num_pages: int = 0                 # 0 = auto (worst case + sink page)
+    chunk: int = 64                    # prefill chunk (tokens per step)
+    min_bucket: int = 8
+    hw: HardwareSpec = TPU_V5E
+    ep_size: int = 1
+    dp: int = 1
+    dtype: Optional[str] = None        # None = cfg.compute_dtype
+    cache_size: int = 16               # LRU bound on compiled prefill steps
+    adaptive: bool = True              # resolve (n, strategy) per bucket
+    measure_fn: Optional[Callable] = None
+
+    @property
+    def max_pages_per_seq(self) -> int:
+        return -(-self.max_seq_len // self.page_size)
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params=None, *,
+                 options: Optional[EngineOptions] = None, key=None):
+        ok, why = supports_paged(cfg)
+        if not ok:
+            raise NotImplementedError(f"{cfg.name}: {why}")
+        self.opts = opts = options or EngineOptions()
+        if opts.adaptive:
+            cfg = force_adaptive(cfg)
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        if params is None:
+            params = self.model.init(cfg, key or jax.random.PRNGKey(0))
+        self.params = params
+
+        num_pages = opts.num_pages or (
+            opts.max_slots * opts.max_pages_per_seq + 1)
+        dtype = jnp.dtype(opts.dtype or cfg.compute_dtype)
+        self.kv = PagedKVCache(cfg, num_pages=num_pages,
+                               page_size=opts.page_size,
+                               max_slots=opts.max_slots,
+                               max_pages_per_seq=opts.max_pages_per_seq,
+                               dtype=dtype)
+        self.scheduler = Scheduler(self.kv, chunk=opts.chunk)
+        self.adaptive = PrefillBucketAdaptive(
+            cfg, hw=opts.hw, ep_size=opts.ep_size, dp=opts.dp,
+            min_bucket=min(opts.min_bucket, opts.chunk),
+            max_bucket=opts.chunk, measure_fn=opts.measure_fn)
+
+        self._decode_fn = jax.jit(self._decode_step)
+        self._prefill_fns: Dict[Tuple, Callable] = {}
+        self._next_rid = 0
+        self.step_count = 0
+        self.prefill_rejits = 0
+        self.done: List[Request] = []
+        self.metrics: Dict[str, Any] = {}
+
+    # -- jitted step bodies ---------------------------------------------
+    def _decode_step(self, params, pools, page_table, lens, tokens, active):
+        logits, new_pools = self.model.decode_step_paged(
+            params, pools, page_table, lens, tokens, self.cfg,
+            active=active)
+        return jnp.argmax(logits, -1).astype(jnp.int32), new_pools
+
+    def _prefill_fn(self, bucket: int, rcfg: ArchConfig) -> Callable:
+        m = rcfg.moe
+        key = (bucket, (m.num_partitions, m.memory_reuse_strategy)
+               if m is not None else (1, "none"))
+        fn = self._prefill_fns.pop(key, None)          # LRU: re-insert
+        if fn is None:
+            def body(params, pools, pt_row, pos0, toks, valid_len,
+                     _cfg=rcfg):
+                logits, new_pools = self.model.prefill_chunk_paged(
+                    params, pools, pt_row, pos0, toks, valid_len, _cfg)
+                return (jnp.argmax(logits, -1).astype(jnp.int32),
+                        new_pools)
+            fn = jax.jit(body)
+            self.prefill_rejits += 1
+        self._prefill_fns[key] = fn
+        while len(self._prefill_fns) > max(1, self.opts.cache_size):
+            self._prefill_fns.pop(next(iter(self._prefill_fns)))
+        return fn
+
+    # -- request API -----------------------------------------------------
+    def submit(self, prompt, *, max_new_tokens: int = 32,
+               eos_id: Optional[int] = None, on_token=None, on_done=None,
+               arrival_s: Optional[float] = None) -> Request:
+        req = Request(rid=self._next_rid, prompt=np.asarray(prompt),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      on_token=on_token, on_done=on_done,
+                      arrival_s=(time.perf_counter() if arrival_s is None
+                                 else arrival_s))
+        self._next_rid += 1
+        cap = self.kv.max_pages_per_seq * self.kv.page_size
+        if req.total_budget > cap or \
+                self.kv.pages_for(req.total_budget) > self.kv.num_pages - 1:
+            raise ValueError(
+                f"request {req.rid}: budget {req.total_budget} tokens "
+                f"exceeds engine capacity ({cap} per seq, "
+                f"{self.kv.num_pages - 1} pages total)")
+        self.scheduler.submit(req)
+        return req
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work
+
+    def warmup(self) -> int:
+        """Compile the decode program and every reachable prefill bucket
+        up front, so serving latency (and benchmark numbers) reflect
+        steady state instead of first-request XLA compiles. All warmup
+        KV writes are masked into the sink page (inactive slots / zeroed
+        page-table rows) and the resulting pools are discarded. Returns
+        the number of programs compiled."""
+        kv = self.kv
+        before = self.prefill_rejits
+        out = self._decode_fn(self.params, kv.pools,
+                              kv.device_page_table(), kv.device_lens(),
+                              jnp.zeros((kv.max_slots, 1), jnp.int32),
+                              jnp.zeros((kv.max_slots,), bool))
+        jax.block_until_ready(out[0])
+        buckets, c = set(), 1
+        while c < self.scheduler.chunk:
+            buckets.add(self.adaptive.bucket_of(c))
+            c *= 2
+        buckets.add(self.adaptive.bucket_of(self.scheduler.chunk))
+        for b in sorted(buckets):
+            fn = self._prefill_fn(b, self.adaptive.cfg_for(b))
+            out = fn(self.params, kv.pools, kv.device_page_table(0),
+                     kv.device_lens(0), jnp.zeros((1, b), jnp.int32),
+                     jnp.asarray(0, jnp.int32))
+            jax.block_until_ready(out[0])
+        return 1 + self.prefill_rejits - before
+
+    # -- engine iteration ------------------------------------------------
+    def step(self) -> Dict[str, Any]:
+        """Admit, then run one jitted step (prefill chunk or decode)."""
+        self.scheduler.admit()
+        action, req = self.scheduler.next_action()
+        info: Dict[str, Any] = {"kind": action}
+        if action == "prefill":
+            info.update(self._run_prefill(req))
+        elif action == "decode":
+            info.update(self._run_decode())
+        elif self.scheduler.waiting:
+            raise RuntimeError(
+                "scheduler idle with waiting requests — admission wedged")
+        self.step_count += 1
+        info.update(cache_bytes=self.kv.cache_bytes,
+                    kv_used_bytes=self.kv.used_bytes,
+                    free_pages=self.kv.free_pages,
+                    running=len(self.scheduler.running),
+                    waiting=len(self.scheduler.waiting))
+        self.metrics = info
+        return info
+
+    def _run_prefill(self, req: Request) -> Dict[str, Any]:
+        kv, slot = self.kv, req.slot
+        c = min(self.scheduler.chunk, req.remaining_prefill)
+        bucket = self.adaptive.bucket_of(c)
+        rcfg = self.adaptive.cfg_for(bucket)
+        fn = self._prefill_fn(bucket, rcfg)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :c] = req.prompt[req.prefill_pos:req.prefill_pos + c]
+        tok, kv.pools = fn(self.params, kv.pools,
+                           kv.device_page_table(slot), kv.device_lens(slot),
+                           jnp.asarray(toks), jnp.asarray(c, jnp.int32))
+        req.prefill_pos += c
+        kv.lens[slot] += c
+        self.scheduler.prefill_advanced(req)
+        if req.remaining_prefill == 0:
+            req.state = RequestState.DECODE
+            if req.emit(int(tok[0]), time.perf_counter()):
+                self._retire(req)
+        info = {"tokens": c, "bucket": bucket, "rid": req.rid}
+        if rcfg.moe is not None:
+            info.update(n=rcfg.moe.num_partitions,
+                        strategy=rcfg.moe.memory_reuse_strategy)
+        return info
+
+    def _run_decode(self) -> Dict[str, Any]:
+        kv = self.kv
+        slots = self.scheduler.decode_slots()
+        tokens = np.zeros((kv.max_slots, 1), np.int32)
+        active = np.zeros((kv.max_slots,), bool)
+        for s in slots:
+            tokens[s, 0] = self.scheduler.running[s].output[-1]
+            active[s] = True
+        toks, kv.pools = self._decode_fn(
+            self.params, kv.pools, kv.device_page_table(), kv.device_lens(),
+            jnp.asarray(tokens), jnp.asarray(active))
+        toks = np.asarray(toks)
+        now = time.perf_counter()
+        for s in slots:
+            req = self.scheduler.running[s]
+            kv.lens[s] += 1                  # the input token's KV slot
+            if req.emit(int(toks[s]), now):
+                self._retire(req)
+        return {"tokens": len(slots)}
+
+    def _retire(self, req: Request) -> None:
+        self.scheduler.finish(req)
+        self.done.append(req)
+
+    def run_until_idle(self, max_steps: int = 1_000_000) -> None:
+        steps = 0
+        while self.has_work:
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"no quiescence in {max_steps} steps")
+
+    # -- reporting -------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        lat = sorted(r.latency_s for r in self.done)
+        pct = (lambda p: lat[min(len(lat) - 1,
+                                 int(p / 100 * len(lat)))] if lat else 0.0)
+        return {
+            "requests_done": len(self.done),
+            "tokens_generated": sum(len(r.output) for r in self.done),
+            "engine_steps": self.step_count,
+            "prefill_compiles": self.prefill_rejits,
+            "p50_latency_s": pct(50),
+            "p99_latency_s": pct(99),
+            "cache_bytes": self.kv.cache_bytes,
+            "peak_kv_used_bytes": self.kv.peak_used_bytes,
+            "resolutions": {str(b): list(r) for b, r in
+                            self.adaptive.resolutions.items()},
+        }

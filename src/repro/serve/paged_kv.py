@@ -1,0 +1,118 @@
+"""Paged KV cache: host-side page allocator over the device page pools.
+
+Device side (``models/kv_cache.init_paged_pools``): per attention layer a
+global pool ``[num_pages, page_size, kv_heads, head_dim]`` shared by every
+in-flight sequence. Host side (this module): a free list of physical
+pages, a ``[max_slots, max_pages_per_seq]`` page table and per-slot
+lengths, mirrored to device as plain int32 arrays each step.
+
+Invariants:
+* page 0 is reserved — never allocated — as the write sink for masked
+  (padding / inactive-slot) scatters;
+* a slot's pages are reserved **up front** for its whole budget
+  (prompt + max_new_tokens) at admission, so a running request can never
+  deadlock on allocation (conservative vLLM-style admission, preemption
+  is future work);
+* freed slots have their page-table row zeroed and length reset, so a
+  stale slot's decode writes land in the sink page, never in pages that
+  were handed to another sequence.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import kv_cache
+
+
+class PagedKVCache:
+    def __init__(self, cfg: ArchConfig, *, num_pages: int, page_size: int,
+                 max_slots: int, max_pages_per_seq: int,
+                 dtype=jnp.bfloat16):
+        assert num_pages >= 2, "need at least the sink page + one real page"
+        self.cfg = cfg
+        self.page_size = int(page_size)
+        self.num_pages = int(num_pages)
+        self.max_slots = int(max_slots)
+        self.max_pages_per_seq = int(max_pages_per_seq)
+        self.pools: Any = kv_cache.init_paged_pools(cfg, num_pages,
+                                                    page_size, dtype)
+        # page 0 reserved as the masked-write sink
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self.page_table = np.zeros((max_slots, max_pages_per_seq), np.int32)
+        self.lens = np.zeros((max_slots,), np.int32)
+        self._slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
+        self.peak_used_pages = 0
+
+    # -- budget ----------------------------------------------------------
+    def pages_for(self, tokens: int) -> int:
+        return -(-int(tokens) // self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def can_admit(self, total_tokens: int) -> bool:
+        need = self.pages_for(total_tokens)
+        return (need <= len(self._free)
+                and need <= self.max_pages_per_seq
+                and total_tokens <= self.max_pages_per_seq * self.page_size)
+
+    # -- slot lifecycle --------------------------------------------------
+    def alloc_slot(self, slot: int, total_tokens: int) -> None:
+        """Reserve every page of the slot's budget up front."""
+        assert not self._slot_pages[slot], f"slot {slot} already allocated"
+        need = self.pages_for(total_tokens)
+        assert self.can_admit(total_tokens), "alloc_slot without can_admit"
+        pages = [self._free.pop() for _ in range(need)]
+        self._slot_pages[slot] = pages
+        self.page_table[slot, :] = 0
+        self.page_table[slot, :need] = pages
+        self.lens[slot] = 0
+        self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
+
+    def free_slot(self, slot: int) -> None:
+        self._free.extend(reversed(self._slot_pages[slot]))
+        self._slot_pages[slot] = []
+        self.page_table[slot, :] = 0
+        self.lens[slot] = 0
+
+    # -- device views ----------------------------------------------------
+    # NOTE: always .copy() — jnp.asarray of a host numpy array can be
+    # zero-copy on CPU, and the engine mutates page_table/lens in place
+    # while the dispatched step is still running asynchronously.
+    def device_page_table(self, slot: Optional[int] = None):
+        pt = (self.page_table if slot is None
+              else self.page_table[slot:slot + 1])
+        return jnp.asarray(pt.copy())
+
+    def device_lens(self, slot: Optional[int] = None):
+        ln = self.lens if slot is None else self.lens[slot:slot + 1]
+        return jnp.asarray(ln.copy())
+
+    # -- accounting ------------------------------------------------------
+    @property
+    def cache_bytes(self) -> int:
+        """Total bytes of the allocated device pools (constant)."""
+        return kv_cache.cache_bytes(self.pools)
+
+    @property
+    def page_bytes(self) -> int:
+        """Bytes of one page across all layers."""
+        return self.cache_bytes // self.num_pages
+
+    @property
+    def used_bytes(self) -> int:
+        """Bytes of pages currently bound to live sequences."""
+        return self.used_pages * self.page_bytes
+
+    @property
+    def peak_used_bytes(self) -> int:
+        return self.peak_used_pages * self.page_bytes

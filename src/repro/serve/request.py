@@ -1,0 +1,90 @@
+"""Request/response API of the serving engine.
+
+A request moves QUEUED -> PREFILL -> DECODE -> DONE. Tokens stream to the
+caller through ``on_token`` as they are produced; ``on_done`` fires once
+with the finished request. Stopping: per-request ``max_new_tokens`` and an
+optional ``eos_id`` early exit — both applied host-side, so jitted step
+shapes stay static.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, List, Optional
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                     # [L] int32 token ids
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    on_token: Optional[Callable[[int, "Request"], None]] = None
+    on_done: Optional[Callable[["Request"], None]] = None
+    arrival_s: float = 0.0                 # submit timestamp (perf_counter)
+
+    # -- runtime state (owned by the scheduler/engine) -------------------
+    state: RequestState = RequestState.QUEUED
+    slot: int = -1                         # continuous-batch slot index
+    prefill_pos: int = 0                   # prompt tokens already cached
+    output: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: str = ""                # "eos" | "length"
+    first_token_s: float = 0.0
+    finish_s: float = 0.0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        assert self.prompt.size > 0, "empty prompt"
+        assert self.max_new_tokens >= 1, "max_new_tokens must be >= 1"
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.size)
+
+    @property
+    def total_budget(self) -> int:
+        """KV positions this request may ever occupy (admission budget)."""
+        return self.prompt_len + self.max_new_tokens
+
+    @property
+    def remaining_prefill(self) -> int:
+        return self.prompt_len - self.prefill_pos
+
+    def emit(self, token: int, now: float) -> bool:
+        """Record one generated token; returns True when the request is
+        finished (EOS or length)."""
+        token = int(token)
+        if not self.output:
+            self.first_token_s = now
+        self.output.append(token)
+        if self.on_token is not None:
+            self.on_token(token, self)
+        if self.eos_id is not None and token == self.eos_id:
+            self.finish_reason = "eos"
+        elif len(self.output) >= self.max_new_tokens:
+            self.finish_reason = "length"
+        else:
+            return False
+        self.state = RequestState.DONE
+        self.finish_s = now
+        if self.on_done is not None:
+            self.on_done(self)
+        return True
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token."""
+        return self.first_token_s - self.arrival_s

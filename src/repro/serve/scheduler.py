@@ -1,0 +1,94 @@
+"""Continuous-batching scheduler: admission + prefill/decode interleave.
+
+Policy:
+* **Admission** is FCFS by a KV/token budget: a queued request is
+  admitted when a batch slot is free and the paged cache can reserve its
+  whole budget (prompt + max_new_tokens) up front — so nothing mid-flight
+  can starve (no preemption needed).
+* **Interleaving**: prefill is chunked (``chunk`` tokens per step) and
+  alternates with decode whenever both have work, bounding decode-token
+  latency by one chunk instead of one whole prompt — the serving analogue
+  of MPipeMoE's pipelining (keep both "streams" busy instead of letting a
+  long prefill stall every running sequence).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.serve.paged_kv import PagedKVCache
+from repro.serve.request import Request, RequestState
+
+
+class Scheduler:
+    def __init__(self, kv: PagedKVCache, *, chunk: int = 64):
+        assert chunk >= 1
+        self.kv = kv
+        self.chunk = chunk
+        self.waiting: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}          # slot -> request
+        self._prefilling: Deque[int] = deque()         # slots, FCFS
+        self._last_was_prefill = False
+
+    # -- queue side ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        assert req.state == RequestState.QUEUED
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.kv.max_slots) if s not in self.running]
+
+    # -- admission -------------------------------------------------------
+    def admit(self) -> List[Request]:
+        """Move QUEUED requests into free slots while the page budget
+        holds. FCFS — a too-big head-of-line request blocks (no unfair
+        overtake that could starve it forever)."""
+        admitted = []
+        free = deque(self.free_slots())
+        while self.waiting and free:
+            req = self.waiting[0]
+            if not self.kv.can_admit(req.total_budget):
+                break
+            self.waiting.popleft()
+            slot = free.popleft()
+            self.kv.alloc_slot(slot, req.total_budget)
+            req.slot = slot
+            req.state = RequestState.PREFILL
+            self.running[slot] = req
+            self._prefilling.append(slot)
+            admitted.append(req)
+        return admitted
+
+    # -- step planning ---------------------------------------------------
+    def decode_slots(self) -> List[int]:
+        return [s for s, r in self.running.items()
+                if r.state == RequestState.DECODE]
+
+    def next_action(self) -> Tuple[str, Optional[Request]]:
+        """('prefill', request) | ('decode', None) | ('idle', None)."""
+        has_prefill = bool(self._prefilling)
+        has_decode = bool(self.decode_slots())
+        if has_prefill and (not has_decode or not self._last_was_prefill):
+            self._last_was_prefill = True
+            return "prefill", self.running[self._prefilling[0]]
+        if has_decode:
+            self._last_was_prefill = False
+            return "decode", None
+        return "idle", None
+
+    def prefill_advanced(self, req: Request) -> None:
+        """Book-keeping after one prefill chunk of ``req`` ran."""
+        if req.remaining_prefill <= 0:
+            assert self._prefilling[0] == req.slot
+            self._prefilling.popleft()
+
+    def finish(self, req: Request) -> None:
+        """Release a DONE request's slot and pages."""
+        assert req.state == RequestState.DONE
+        self.kv.free_slot(req.slot)
+        self.running.pop(req.slot, None)
+        req.slot = -1

@@ -1,0 +1,85 @@
+"""Synthetic request traces for serving benchmarks and the CLI.
+
+Poisson arrivals (exponential inter-arrival gaps at ``rate`` req/s) with
+log-uniform-ish mixed prompt/generation lengths — deterministic in the
+seed, so benchmark runs are reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEntry:
+    arrival_s: float
+    prompt: np.ndarray                 # [L] int32
+    max_new_tokens: int
+
+
+def poisson_trace(num_requests: int, *, rate: float, vocab_size: int,
+                  prompt_len_range=(8, 96), gen_len_range=(4, 48),
+                  seed: int = 0) -> List[TraceEntry]:
+    rng = np.random.Generator(np.random.Philox(key=seed))
+    gaps = rng.exponential(1.0 / rate, size=num_requests)
+    arrivals = np.cumsum(gaps) - gaps[0]          # first request at t=0
+    lo, hi = prompt_len_range
+    plens = np.exp(rng.uniform(np.log(lo), np.log(hi + 1),
+                               size=num_requests)).astype(int).clip(lo, hi)
+    glo, ghi = gen_len_range
+    glens = rng.integers(glo, ghi + 1, size=num_requests)
+    return [TraceEntry(arrival_s=float(arrivals[i]),
+                       prompt=rng.integers(0, vocab_size, size=int(plens[i]),
+                                           dtype=np.int32),
+                       max_new_tokens=int(glens[i]))
+            for i in range(num_requests)]
+
+
+def run_poisson(cfg, options, *, requests: int, rate: float,
+                prompt_max: int, gen_max: int, seed: int = 0,
+                eos_id=None, time_scale: float = 1.0):
+    """Build an Engine for ``cfg``/``options``, replay a Poisson trace
+    through it, and return ``(engine, wall_s)`` — the shared body of the
+    serving CLI and ``benchmarks/serving.py``."""
+    import time
+
+    from repro.serve.engine import Engine
+
+    engine = Engine(cfg, options=options)
+    engine.warmup()        # steady-state numbers, not XLA compile time
+    trace = poisson_trace(requests, rate=rate, vocab_size=cfg.vocab_size,
+                          prompt_len_range=(4, prompt_max),
+                          gen_len_range=(2, gen_max), seed=seed)
+    t0 = time.perf_counter()
+    replay(engine, trace, eos_id=eos_id, time_scale=time_scale)
+    return engine, time.perf_counter() - t0
+
+
+def replay(engine, trace: List[TraceEntry], *, eos_id=None,
+           time_scale: float = 1.0):
+    """Drive ``engine`` through ``trace`` in wall-clock time (arrival
+    offsets multiplied by ``time_scale``; 0 submits everything up front).
+    Returns the list of submitted Requests (done when this returns)."""
+    import time
+
+    t0 = time.perf_counter()
+    pending = list(trace)
+    requests = []
+    while pending or engine.has_work:
+        now = time.perf_counter() - t0
+        while pending and pending[0].arrival_s * time_scale <= now:
+            e = pending.pop(0)
+            # latency clocks start at the *scheduled* arrival, so
+            # queueing delay accrued while the engine was mid-step is
+            # part of the reported percentiles
+            requests.append(engine.submit(
+                e.prompt, max_new_tokens=e.max_new_tokens, eos_id=eos_id,
+                arrival_s=t0 + e.arrival_s * time_scale))
+        if engine.has_work:
+            engine.step()
+        elif pending:
+            time.sleep(max(0.0, min(
+                0.001, pending[0].arrival_s * time_scale - now)))
+    return requests
