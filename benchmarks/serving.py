@@ -7,32 +7,74 @@ percentiles and KV memory accounting.
 
 ``--smoke`` is the CI configuration (reduced MoE arch on CPU, small
 trace) that seeds the perf trajectory: the emitted JSON carries
-requests/s, p50/p99 request latency, p50 TTFT, peak ``cache_bytes`` in
-use, and the per-bucket MPipeMoE (n, strategy) resolutions.
+requests/s, p50/p99 request latency, TTFT and inter-token-latency
+percentiles (reported *separately* — folding a preempted-and-resumed
+request's stall into a single latency mix hides where time went), peak
+``cache_bytes`` in use, and the per-bucket MPipeMoE (n, strategy)
+resolutions.
+
+``--overload`` runs the overload scenario instead: calibrate the
+sustainable request rate with the admission-blocking baseline, then
+replay a Poisson trace at **2x** that rate through a page pool sized for
+only ~2 full request budgets — once with the blocking baseline
+(``preempt="never"``) and once with the preemptive scheduler — and
+report goodput (tokens of requests meeting the baseline's median-TTFT
+SLO per second), preemption counts, swap bytes and tail latency. The
+preemptive run is also checked token-exact against the dense golden
+loop.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+
+import jax
 
 from repro.configs import get_config
 from repro.core import resolve_hw
-from repro.serve import EngineOptions, run_poisson
+from repro.models import lm
+from repro.serve import (Engine, EngineOptions, dense_greedy_reference,
+                         poisson_trace, replay, run_poisson)
+
+
+def _engine_stats(engine, wall_s: float) -> dict:
+    s = engine.stats()
+    return {
+        "wall_s": wall_s,
+        "requests_per_s": s["requests_done"] / wall_s,
+        "tokens_per_s": s["tokens_generated"] / wall_s,
+        "tokens_generated": s["tokens_generated"],
+        "p50_latency_s": s["p50_latency_s"],
+        "p99_latency_s": s["p99_latency_s"],
+        "p50_ttft_s": s["p50_ttft_s"],
+        "p99_ttft_s": s["p99_ttft_s"],
+        "p50_itl_s": s["p50_itl_s"],
+        "p99_itl_s": s["p99_itl_s"],
+        "engine_steps": s["engine_steps"],
+        "prefill_compiles": s["prefill_compiles"],
+        "preempt_recompute": s["preempt_recompute"],
+        "preempt_offload": s["preempt_offload"],
+        "resumes": s["resumes"],
+        "swap_out_bytes": s["swap_out_bytes"],
+        "swap_in_bytes": s["swap_in_bytes"],
+        "cache_bytes": s["cache_bytes"],
+        "peak_kv_used_bytes": s["peak_kv_used_bytes"],
+        "resolutions": s["resolutions"],
+    }
 
 
 def run(*, arch: str, requests: int, rate: float, slots: int, chunk: int,
         page_size: int, prompt_max: int, gen_max: int, seed: int,
-        hw_name: str, time_scale: float) -> dict:
+        hw_name: str, time_scale: float, preempt: str = "auto") -> dict:
     cfg = get_config(arch).reduced()
     hw = resolve_hw(hw_name)
     opts = EngineOptions(page_size=page_size, max_slots=slots,
                          max_seq_len=prompt_max + gen_max, chunk=chunk,
-                         hw=hw)
+                         hw=hw, preempt=preempt)
     engine, wall_s = run_poisson(cfg, opts, requests=requests, rate=rate,
                                  prompt_max=prompt_max, gen_max=gen_max,
                                  seed=seed, time_scale=time_scale)
-    s = engine.stats()
-    ttfts = sorted(r.ttft_s for r in engine.done)
     return {
         "arch": cfg.name,
         "hw": hw.name,
@@ -41,19 +83,163 @@ def run(*, arch: str, requests: int, rate: float, slots: int, chunk: int,
         "slots": slots,
         "chunk": chunk,
         "page_size": page_size,
-        "wall_s": wall_s,
-        "requests_per_s": s["requests_done"] / wall_s,
-        "tokens_per_s": s["tokens_generated"] / wall_s,
-        "tokens_generated": s["tokens_generated"],
-        "p50_latency_s": s["p50_latency_s"],
-        "p99_latency_s": s["p99_latency_s"],
-        "p50_ttft_s": ttfts[len(ttfts) // 2] if ttfts else 0.0,
-        "engine_steps": s["engine_steps"],
-        "prefill_compiles": s["prefill_compiles"],
-        "cache_bytes": s["cache_bytes"],
-        "peak_kv_used_bytes": s["peak_kv_used_bytes"],
-        "resolutions": s["resolutions"],
+        "preempt": preempt,
+        **_engine_stats(engine, wall_s),
     }
+
+
+# ---------------------------------------------------------------------------
+# Overload scenario (arrival rate >= 2x sustainable)
+# ---------------------------------------------------------------------------
+
+def _golden_cfg(arch: str):
+    """Config whose paged/chunked execution is bit-exact vs the dense
+    loop (float32, no dropped MoE tokens) so overload runs can be
+    verified against the golden reference."""
+    cfg = get_config(arch).reduced()
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(moe, capacity_factor=8.0)
+    return dataclasses.replace(cfg, compute_dtype="float32", moe=moe)
+
+
+def _dense_refs(cfg, params, trace) -> list:
+    """Golden greedy outputs of every trace entry via the dense loop."""
+    return [dense_greedy_reference(params, cfg, e.prompt,
+                                   e.max_new_tokens) for e in trace]
+
+
+def _goodput(engine, wall_s: float, slo_ttft_s: float) -> float:
+    """Tokens/s of requests whose TTFT met the SLO."""
+    good = sum(len(r.output) for r in engine.done
+               if r.ttft_s <= slo_ttft_s)
+    return good / wall_s
+
+
+def run_overload(*, arch: str, requests: int, slots: int, chunk: int,
+                 page_size: int, prompt_max: int, gen_max: int, seed: int,
+                 hw_name: str, preempt: str = "auto",
+                 pool_budgets: float = 1.25) -> dict:
+    import time
+
+    # pool_budgets sizes the page pool in units of the *maximum* request
+    # budget: ~1.25 lets the blocking baseline run only 1-2 requests at
+    # a time while the preemptive engine packs all slots on demand
+    cfg = _golden_cfg(arch)
+    hw = resolve_hw(hw_name)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    budget = prompt_max + gen_max
+    pages_per_budget = -(-budget // page_size)
+    num_pages = int(pool_budgets * pages_per_budget) + 1
+    common = dict(page_size=page_size, max_slots=slots,
+                  max_seq_len=budget, chunk=chunk, hw=hw,
+                  num_pages=num_pages)
+    # one trace, replayed by every engine: generation runs long enough
+    # (>= gen_max/2) that page demand, not prefill, dominates occupancy.
+    # Arrivals are generated at 1 req/s and rescaled via time_scale below.
+    trace = poisson_trace(requests, rate=1.0, vocab_size=cfg.vocab_size,
+                          prompt_len_range=(8, prompt_max),
+                          gen_len_range=(max(2, gen_max // 2), gen_max),
+                          seed=seed)
+
+    def one(preempt_mode: str, time_scale: float):
+        opts = EngineOptions(preempt=preempt_mode, **common)
+        engine = Engine(cfg, params, options=opts)
+        engine.warmup()
+        t0 = time.perf_counter()
+        replay(engine, trace, time_scale=time_scale)
+        return engine, time.perf_counter() - t0
+
+    # phase 1: sustainable rate = the blocking baseline draining a burst
+    # (all arrivals at t=0) as fast as it can
+    _, cal_wall = one("never", time_scale=0.0)
+    sustainable = requests / cal_wall
+    rate = 2.0 * sustainable
+
+    # phase 2: both engines replay the same trace with arrivals rescaled
+    # to 2x the sustainable rate, in real time
+    ts = 1.0 / rate
+    block_engine, block_wall = one("never", time_scale=ts)
+    pre_engine, pre_wall = one(preempt, time_scale=ts)
+
+    # token-exactness of the preemptive run vs the dense golden loop
+    refs = _dense_refs(cfg, params, trace)
+    outs = [r.output for r in sorted(pre_engine.done, key=lambda r: r.rid)]
+    token_exact = outs == refs
+
+    # goodput SLO: the blocking baseline's own median TTFT — by
+    # construction half the baseline's requests meet it
+    slo = block_engine.stats()["p50_ttft_s"]
+    block = dict(_engine_stats(block_engine, block_wall),
+                 goodput_tok_s=_goodput(block_engine, block_wall, slo))
+    pre = dict(_engine_stats(pre_engine, pre_wall),
+               goodput_tok_s=_goodput(pre_engine, pre_wall, slo))
+    return {
+        "scenario": "overload",
+        "arch": cfg.name,
+        "hw": hw.name,
+        "requests": requests,
+        "slots": slots,
+        "chunk": chunk,
+        "page_size": page_size,
+        "num_pages": num_pages,
+        "pool_budgets": pool_budgets,
+        "sustainable_req_s": sustainable,
+        "overload_rate_req_s": rate,
+        "overload_factor": 2.0,
+        "slo_ttft_s": slo,
+        "preempt_policy": preempt,
+        "token_exact": token_exact,
+        "blocking": block,
+        "preemptive": pre,
+        "goodput_ratio": (pre["goodput_tok_s"]
+                          / max(block["goodput_tok_s"], 1e-12)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _print_overload(res: dict) -> None:
+    print(f"\noverload: {res['arch']} on {res['hw']}, {res['requests']} "
+          f"requests @ {res['overload_rate_req_s']:.2f} req/s "
+          f"(2x sustainable {res['sustainable_req_s']:.2f}), "
+          f"pool {res['num_pages']} pages (~{res['pool_budgets']} budgets)")
+    for name in ("blocking", "preemptive"):
+        r = res[name]
+        print(f"  {name:10s}: goodput {r['goodput_tok_s']:8.1f} tok/s "
+              f"(SLO ttft<={res['slo_ttft_s']*1e3:.0f}ms) | "
+              f"ttft p50 {r['p50_ttft_s']*1e3:.0f}ms "
+              f"p99 {r['p99_ttft_s']*1e3:.0f}ms | "
+              f"itl p99 {r['p99_itl_s']*1e3:.1f}ms | "
+              f"lat p99 {r['p99_latency_s']*1e3:.0f}ms | "
+              f"preempts {r['preempt_recompute']}r/"
+              f"{r['preempt_offload']}o | "
+              f"swap {r['swap_out_bytes']/2**20:.2f}MiB")
+    print(f"  goodput ratio (preemptive/blocking): "
+          f"{res['goodput_ratio']:.2f}x | token-exact vs dense golden: "
+          f"{res['token_exact']}")
+
+
+def _print_standard(res: dict) -> None:
+    print(f"\n{res['arch']} on {res['hw']}: {res['requests']} requests @ "
+          f"{res['rate_req_s']} req/s (Poisson), {res['slots']} slots, "
+          f"chunk {res['chunk']}, page {res['page_size']}, "
+          f"preempt {res['preempt']}")
+    print(f"throughput {res['requests_per_s']:.2f} req/s, "
+          f"{res['tokens_per_s']:.1f} tok/s")
+    print(f"latency p50 {res['p50_latency_s']*1e3:.0f}ms, "
+          f"p99 {res['p99_latency_s']*1e3:.0f}ms; "
+          f"TTFT p50 {res['p50_ttft_s']*1e3:.0f}ms, "
+          f"p99 {res['p99_ttft_s']*1e3:.0f}ms; "
+          f"ITL p50 {res['p50_itl_s']*1e3:.1f}ms, "
+          f"p99 {res['p99_itl_s']*1e3:.1f}ms")
+    print(f"KV pool {res['cache_bytes']/2**20:.2f}MiB, peak used "
+          f"{res['peak_kv_used_bytes']/2**20:.2f}MiB")
+    for bucket, (n, strat) in sorted(res["resolutions"].items(),
+                                     key=lambda kv: int(kv[0])):
+        print(f"  bucket {int(bucket):4d} -> n={n} strategy={strat}")
 
 
 def main():
@@ -64,6 +250,11 @@ def main():
                 prompt_max=48, gen_max=24)
     smoke = dict(requests=12, rate=50.0, slots=4, chunk=16, page_size=4,
                  prompt_max=32, gen_max=12)
+    # the overload scenario replaces `rate` with the calibrated 2x rate,
+    # uses fewer requests (each one is also golden-verified) and longer
+    # generations (page demand, not prefill, must dominate occupancy)
+    over = {"full": dict(requests=16, gen_max=32),
+            "smoke": dict(requests=8, gen_max=24)}
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="moe-gpt3-s")
     for name, v in full.items():
@@ -74,32 +265,34 @@ def main():
     ap.add_argument("--hw", default="auto")
     ap.add_argument("--time-scale", type=float, default=1.0,
                     help="arrival time multiplier (0 = all at once)")
+    ap.add_argument("--preempt", default="auto",
+                    choices=["auto", "recompute", "offload", "never"])
+    ap.add_argument("--overload", action="store_true",
+                    help="overload scenario: blocking vs preemptive at "
+                         "2x the sustainable rate on a constrained pool")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI configuration")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
 
     profile = smoke if args.smoke else full
-    kw = dict(arch=args.arch, seed=args.seed, hw_name=args.hw,
-              time_scale=args.time_scale)
+    kw = dict(arch=args.arch, seed=args.seed, hw_name=args.hw)
     for name in full:
         v = getattr(args, name)
         kw[name] = profile[name] if v is None else v
-    res = run(**kw)
-
-    print(f"\n{res['arch']} on {res['hw']}: {res['requests']} requests @ "
-          f"{res['rate_req_s']} req/s (Poisson), {res['slots']} slots, "
-          f"chunk {res['chunk']}, page {res['page_size']}")
-    print(f"throughput {res['requests_per_s']:.2f} req/s, "
-          f"{res['tokens_per_s']:.1f} tok/s")
-    print(f"latency p50 {res['p50_latency_s']*1e3:.0f}ms, "
-          f"p99 {res['p99_latency_s']*1e3:.0f}ms; "
-          f"TTFT p50 {res['p50_ttft_s']*1e3:.0f}ms")
-    print(f"KV pool {res['cache_bytes']/2**20:.2f}MiB, peak used "
-          f"{res['peak_kv_used_bytes']/2**20:.2f}MiB")
-    for bucket, (n, strat) in sorted(res["resolutions"].items(),
-                                     key=lambda kv: int(kv[0])):
-        print(f"  bucket {int(bucket):4d} -> n={n} strategy={strat}")
+    if args.overload:
+        if args.rate is not None or args.time_scale != 1.0:
+            ap.error("--overload calibrates its own arrival rate; "
+                     "--rate/--time-scale do not apply")
+        kw.pop("rate")
+        for name, v in over["smoke" if args.smoke else "full"].items():
+            if getattr(args, name) is None:
+                kw[name] = v
+        res = run_overload(preempt=args.preempt, **kw)
+        _print_overload(res)
+    else:
+        res = run(time_scale=args.time_scale, preempt=args.preempt, **kw)
+        _print_standard(res)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2, sort_keys=True)
     print(f"wrote {args.out}")

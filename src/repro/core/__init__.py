@@ -1,6 +1,15 @@
-"""MPipeMoE core: adaptive pipelined expert parallelism + memory reuse."""
+"""MPipeMoE core: adaptive pipelined expert parallelism + memory reuse.
+
+Layer map (see ``docs/architecture.md``): analytic models
+(``memory_model`` Eqs. 1–6 + serving :class:`PreemptionCost`,
+``perf_model`` Eqs. 7–10, ``pipeline_sim``), the runtime knob resolvers
+(``granularity`` Algorithm 1, ``selector`` — one-shot :func:`resolve`
+and the persistent :class:`Resolver`), the memory-reuse strategy
+policies (``strategies`` S1–S4 as remat/offload policies), and the
+pipelined MoE layer body itself (``pipeline_moe``).
+"""
 from repro.core.granularity import GranularitySearcher
-from repro.core.memory_model import MoEMemory
+from repro.core.memory_model import MoEMemory, PreemptionCost
 from repro.core.perf_model import (MoEWorkload, all_costs, cost,
                                    select_strategy, stream_times)
 from repro.core.pipeline_moe import capacity_for, pipelined_moe
@@ -15,8 +24,9 @@ from repro.core.types import (CPU_HOST, GPU_A100, HW_SPECS, Q_TABLE,
 
 __all__ = [
     "CPU_HOST", "GPU_A100", "GranularitySearcher", "HW_SPECS", "MoEMemory",
-    "MoEWorkload", "Q_TABLE", "TPU_V5E", "HardwareSpec", "Interference",
-    "Resolver", "Strategy", "all_costs", "capacity_for", "cost",
+    "MoEWorkload", "PreemptionCost", "Q_TABLE", "TPU_V5E", "HardwareSpec",
+    "Interference", "Resolver", "Strategy", "all_costs", "capacity_for",
+    "cost",
     "host_offload_supported", "make_searcher", "moe_workload",
     "pipelined_moe", "remat_policy", "resolve", "resolve_hw",
     "resolve_strategy", "select_strategy", "simulate", "stream_times",

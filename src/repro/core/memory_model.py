@@ -1,8 +1,18 @@
-"""Analytic memory-footprint model of an MoE layer (paper Eqs. 1–6).
+"""Analytic memory models: MoE layer footprint + serving preemption cost.
 
-All quantities in *elements* by default (paper convention); multiply by
-``bytes_per`` for bytes. B is the token batch, M model dim, H hidden dim,
-E experts, n pipeline partitions.
+:class:`MoEMemory` is the paper's footprint model of an MoE layer
+(Eqs. 1–6). All quantities in *elements* by default (paper convention);
+multiply by ``bytes_per`` for bytes. B is the token batch, M model dim,
+H hidden dim, E experts, n pipeline partitions.
+
+:class:`PreemptionCost` extends the same capacity-vs-bandwidth trade to
+the serving engine's KV cache: when the paged pool runs dry, a victim
+request is preempted either by *recompute* (drop its pages, pay the
+re-prefill FLOPs again) or by *offload* (round-trip its pages over the
+host link — the serving analogue of strategies S1–S3's activation
+offload). The selector mirrors the paper's Eq. 7–10 structure: compare
+seconds of redundant compute against seconds of host-link copies, masked
+by hardware capability (no host offload ⇒ recompute only).
 """
 from __future__ import annotations
 
@@ -72,3 +82,40 @@ class MoEMemory:
             "buf_reused": (self.m_buf_pipe - self.delta_buf) * scale,
             "phi": self.phi,
         }
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionCost:
+    """Offload-vs-recompute decision for one preemption victim.
+
+    * recompute: free the victim's KV pages now (cost ~0) and re-prefill
+      its ``tokens_cached`` tokens at resume — pay the forward FLOPs once
+      more, at ``mfu`` fraction of device peak;
+    * offload: copy ``bytes_held`` of pages to host now and back at
+      resume — pay ``2 * bytes / host_bw``, degraded by the memcpy
+      interference factor ``eta`` (paper Fig. 3).
+
+    Both costs are *added latency for this request*; the engine picks the
+    argmin per victim, gated by host-offload capability.
+    """
+    tokens_cached: int
+    bytes_held: int
+    flops_per_token: float       # forward FLOPs per token (~2 x active P)
+    flops: float                 # device peak FLOP/s
+    host_bw: float               # host link B/s
+    mfu: float = 0.5             # achieved fraction of peak at re-prefill
+    eta: float = 0.95            # memcpy interference (Interference.eta)
+
+    @property
+    def recompute_s(self) -> float:
+        return self.tokens_cached * self.flops_per_token \
+            / max(self.flops * self.mfu, 1.0)
+
+    @property
+    def offload_s(self) -> float:
+        return 2.0 * self.bytes_held / max(self.host_bw * self.eta, 1.0)
+
+    @property
+    def choice(self) -> str:
+        return "offload" if self.offload_s < self.recompute_s \
+            else "recompute"

@@ -3,8 +3,10 @@
 Two paths share one CLI:
 
 * ``--engine``: the continuous-batching engine (``repro.serve``) replays
-  a Poisson arrival trace of mixed-length requests with paged KV and
-  per-bucket adaptive (n, strategy) prefill —
+  a Poisson arrival trace of mixed-length requests with paged KV,
+  per-bucket adaptive (n, strategy) prefill, preemptive scheduling under
+  page pressure (``--preempt``, ``--num-pages``) and temperature /
+  top-k / top-p sampling (``--temperature`` …) —
 
       PYTHONPATH=src python -m repro.launch.serve --engine --requests 16
 
@@ -87,16 +89,22 @@ def legacy_loop(args, cfg, hw):
 
 
 def engine_loop(args, cfg, hw):
-    from repro.serve import EngineOptions, run_poisson
+    from repro.serve import EngineOptions, SamplingParams, run_poisson
 
     opts = EngineOptions(page_size=args.page_size, max_slots=args.batch,
                          max_seq_len=args.prompt_len + args.gen,
-                         chunk=args.chunk, hw=hw)
+                         chunk=args.chunk, hw=hw, preempt=args.preempt,
+                         num_pages=args.num_pages, measure=args.measure)
+    sampling = None
+    if args.temperature > 0:
+        sampling = SamplingParams(temperature=args.temperature,
+                                  top_k=args.top_k, top_p=args.top_p,
+                                  seed=args.sample_seed)
     engine, dt = run_poisson(cfg, opts, requests=args.requests,
                              rate=args.rate, prompt_max=args.prompt_len,
                              gen_max=args.gen, seed=args.seed,
                              eos_id=args.eos if args.eos >= 0 else None,
-                             time_scale=args.time_scale)
+                             time_scale=args.time_scale, sampling=sampling)
     s = engine.stats()
     print(f"engine: {s['requests_done']} requests, "
           f"{s['tokens_generated']} tokens in {dt:.2f}s "
@@ -104,10 +112,18 @@ def engine_loop(args, cfg, hw):
           f"{s['tokens_generated']/dt:.1f} tok/s)")
     print(f"latency p50={s['p50_latency_s']*1e3:.0f}ms "
           f"p99={s['p99_latency_s']*1e3:.0f}ms | "
-          f"KV pool {s['cache_bytes']/2**20:.2f}MiB, "
+          f"TTFT p50={s['p50_ttft_s']*1e3:.0f}ms | "
+          f"ITL p50={s['p50_itl_s']*1e3:.1f}ms "
+          f"p99={s['p99_itl_s']*1e3:.1f}ms")
+    print(f"KV pool {s['cache_bytes']/2**20:.2f}MiB, "
           f"peak used {s['peak_kv_used_bytes']/2**20:.2f}MiB | "
           f"{s['engine_steps']} steps, "
           f"{s['prefill_compiles']} prefill compiles")
+    if s["preempt_recompute"] or s["preempt_offload"]:
+        print(f"preemptions: {s['preempt_recompute']} recompute, "
+              f"{s['preempt_offload']} offload, {s['resumes']} resumes, "
+              f"swap {s['swap_out_bytes']/2**20:.2f}MiB out / "
+              f"{s['swap_in_bytes']/2**20:.2f}MiB in")
     for bucket, (n, strat) in sorted(engine.adaptive.resolutions.items()):
         print(f"  bucket {bucket:4d} -> n={n} strategy={strat}")
 
@@ -136,6 +152,27 @@ def main():
                     help="engine: Poisson arrival rate (req/s)")
     ap.add_argument("--time-scale", type=float, default=1.0,
                     help="engine: arrival time multiplier (0 = all at once)")
+    ap.add_argument("--preempt", default="auto",
+                    choices=["auto", "recompute", "offload", "never"],
+                    help="engine: overload policy — on-demand pages with "
+                         "preemption (auto picks offload vs recompute per "
+                         "victim by cost), or 'never' for the conservative "
+                         "full-budget admission-blocking baseline")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="engine: KV pool size in pages (0 = worst case; "
+                         "smaller values exercise preemption)")
+    ap.add_argument("--measure", default="auto",
+                    choices=["auto", "wallclock", "simulate"],
+                    help="engine: bucket (n, strategy) resolution measure "
+                         "(auto = wallclock on non-CPU backends)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="engine: sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="engine: top-k filter (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="engine: nucleus (top-p) filter (1 = disabled)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="engine: per-request sampling seed")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -12,7 +12,9 @@ every in-flight sequence; a per-sequence page table maps logical page
 index -> physical page. ``gather_pages``/``scatter_pages`` are the
 page-granular access primitives; page 0 is reserved as a write sink for
 masked (padding / inactive-slot) writes so jitted steps never branch on
-occupancy.
+occupancy. ``extract_pages``/``insert_pages`` round-trip physical pages
+through host memory — the swap halves of the serving engine's
+preempt-by-offload path.
 """
 from __future__ import annotations
 
@@ -150,6 +152,40 @@ def gather_pages(pool, page_table):
     position-contiguous view ``[B, NP*ps, ...]`` per sequence."""
     g = pool[page_table]                       # [B, NP, ps, ...]
     return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def extract_pages(pools, page_ids):
+    """Copy physical pages out of the stacked pools to host numpy.
+
+    pools: per-period tree of ``[n_periods, P, ps, ...]`` leaves;
+    ``page_ids``: sequence of physical page indices. Returns a matching
+    tree of numpy arrays ``[n_periods, len(page_ids), ps, ...]`` — the
+    swap-out half of preempt-by-offload (``repro.serve``). The gather
+    produces a fresh immutable buffer, so a zero-copy ``np.asarray`` view
+    on CPU is safe (unlike the live page-table case, nothing mutates it).
+    """
+    idx = jnp.asarray(np.asarray(page_ids, np.int32))
+    return jax.tree_util.tree_map(
+        lambda leaf: np.asarray(leaf[:, idx]), pools)
+
+
+def insert_pages(pools, page_ids, host):
+    """Write host page copies back into the stacked pools (swap-in).
+
+    Inverse of :func:`extract_pages`: ``host`` leaves are
+    ``[n_periods, len(page_ids), ps, ...]``; returns new pools with those
+    physical pages overwritten.
+    """
+    idx = jnp.asarray(np.asarray(page_ids, np.int32))
+    return jax.tree_util.tree_map(
+        lambda leaf, h: leaf.at[:, idx].set(jnp.asarray(h, leaf.dtype)),
+        pools, host)
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a (host or device) array tree."""
+    return sum(int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+               for x in jax.tree_util.tree_leaves(tree))
 
 
 def scatter_pages(pool, page_table, positions, values, valid=None):

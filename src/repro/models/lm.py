@@ -231,6 +231,11 @@ def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None,
 
 # ---------------------------------------------------------------------------
 # Paged KV path (serving engine, repro.serve)
+#
+# Both steps return *logits* (the last real position's row), leaving the
+# token choice — greedy argmax or the masked temperature/top-k/top-p
+# sampler in repro.serve.sampling — to the engine's jitted step bodies,
+# so one compiled program serves every per-request sampling setting.
 # ---------------------------------------------------------------------------
 
 def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int,

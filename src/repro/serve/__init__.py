@@ -1,4 +1,4 @@
-"""``repro.serve`` — continuous-batching serving engine (PR 2).
+"""``repro.serve`` — continuous-batching serving engine (PR 2 + PR 3).
 
 Module map
 ----------
@@ -6,40 +6,55 @@ Module map
                   page pools, scheduler and the two compiled-step caches
                   (decode: one program; prefill: LRU per
                   (bucket, n, strategy)); ``submit()`` / ``step()`` /
-                  ``run_until_idle()`` / ``stats()``.
-``scheduler.py``  :class:`Scheduler` — FCFS admission by KV/token budget
-                  (whole prompt+gen budget reserved up front) and
-                  chunked-prefill / decode interleaving.
+                  ``run_until_idle()`` / ``stats()``; preemption
+                  orchestration (victim pick + offload-vs-recompute cost
+                  model) and serve-side wall-clock (n, strategy)
+                  measurement.
+``scheduler.py``  :class:`Scheduler` — FCFS admission (full-budget
+                  reservation with ``full_reserve``, prompt-only
+                  reservation + on-demand decode growth otherwise),
+                  preemption / resume queues, chunked-prefill / decode
+                  interleaving.
 ``paged_kv.py``   :class:`PagedKVCache` — host page allocator (free list,
-                  page table, per-slot lengths) over the device pools from
-                  ``models/kv_cache.init_paged_pools``; page 0 is the
-                  reserved masked-write sink; ``cache_bytes`` /
-                  ``used_bytes`` / ``peak_used_bytes`` accounting.
+                  page table, per-slot lengths, host offload pool) over
+                  the device pools from ``models/kv_cache
+                  .init_paged_pools``; page 0 is the reserved
+                  masked-write sink; ``cache_bytes`` / ``used_bytes`` /
+                  ``swap_*_bytes`` accounting.
 ``adaptive.py``   :class:`PrefillBucketAdaptive` — power-of-two token
                   buckets resolved once each through the persistent
-                  ``core.Resolver`` (MPipeMoE Algorithm 1 + Eq. 10).
+                  ``core.Resolver`` (MPipeMoE Algorithm 1 + Eq. 10),
+                  by analytic simulation or wall-clock candidate timing.
 ``request.py``    :class:`Request` / :class:`RequestState` — QUEUED →
-                  PREFILL → DECODE → DONE, streaming ``on_token`` /
-                  ``on_done`` callbacks, per-request ``max_new_tokens``
-                  and ``eos_id`` stop.
+                  PREFILL → DECODE → DONE with PREEMPTED round-trips,
+                  streaming ``on_token`` / ``on_done`` callbacks,
+                  ``max_new_tokens`` / ``eos_id`` / stop-sequence stops,
+                  per-token timestamps (TTFT vs inter-token latency).
+``sampling.py``   :class:`SamplingParams` / :func:`sample_tokens` —
+                  jit-stable temperature / top-k / top-p with
+                  per-request seeded streams; host-side stop matching.
 ``trace.py``      Poisson arrival traces + wall-clock ``replay``.
 
-Invariants (tested in ``tests/test_serving.py``): paged + continuously
-batched greedy decode emits exactly the tokens of the dense sequential
-loop; a slot's pages are reserved for its full budget at admission and
-all return to the free list on completion; masked writes only ever touch
-the sink page.
+Invariants (tested in ``tests/test_serving.py`` /
+``tests/test_preemption.py`` / ``tests/test_sampling.py``): paged +
+continuously batched greedy decode emits exactly the tokens of the dense
+sequential loop — including through recompute and offload preemptions;
+every page returns to the free list once the pool drains; masked writes
+only ever touch the sink page; a request's sampled tokens depend only on
+(request, seed), never on batch composition.
 """
 from repro.serve.adaptive import PrefillBucketAdaptive, force_adaptive
 from repro.serve.engine import Engine, EngineOptions
 from repro.serve.paged_kv import PagedKVCache
 from repro.serve.request import Request, RequestState
+from repro.serve.sampling import SamplingParams, sample_tokens, stop_hit
 from repro.serve.scheduler import Scheduler
-from repro.serve.trace import (TraceEntry, poisson_trace, replay,
-                               run_poisson)
+from repro.serve.trace import (TraceEntry, dense_greedy_reference,
+                               poisson_trace, replay, run_poisson)
 
 __all__ = [
     "Engine", "EngineOptions", "PagedKVCache", "PrefillBucketAdaptive",
-    "Request", "RequestState", "Scheduler", "TraceEntry", "force_adaptive",
-    "poisson_trace", "replay", "run_poisson",
+    "Request", "RequestState", "SamplingParams", "Scheduler", "TraceEntry",
+    "dense_greedy_reference", "force_adaptive", "poisson_trace", "replay",
+    "run_poisson", "sample_tokens", "stop_hit",
 ]

@@ -8,6 +8,13 @@ once through the persistent :class:`repro.core.Resolver` (the same
 hash/range-cached searcher the train-side controller uses) — the engine
 then keeps one compiled prefill step per (bucket, n, strategy), mirroring
 the train-side LRU cache.
+
+``measure_fn(bucket_tokens, n, strategy) -> seconds`` injects the
+measurement Algorithm 1 ranks candidates by: the analytic pipeline
+simulator by default, or the engine's wall-clock candidate timer
+(``EngineOptions.measure="wallclock"``, the auto choice on non-CPU
+backends — the same split the train-side ``AdaptiveOptions.measure``
+makes).
 """
 from __future__ import annotations
 
@@ -20,6 +27,8 @@ from repro.core.selector import Resolver
 from repro.core.types import TPU_V5E, HardwareSpec, Strategy
 
 log = logging.getLogger("repro.serve")
+
+__all__ = ["PrefillBucketAdaptive", "force_adaptive"]
 
 
 class PrefillBucketAdaptive:

@@ -1,42 +1,68 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine with preemptive scheduling.
 
 One :class:`Engine` owns: the model params, a :class:`PagedKVCache`
-(device page pools + host allocator), a :class:`Scheduler` (admission +
-prefill/decode interleave) and a :class:`PrefillBucketAdaptive`
-(per-bucket MPipeMoE (n, strategy) resolution). Each ``step()`` runs one
-jitted program — either a chunked-prefill step for the head-of-line
-prefilling request or one decode step over the whole slot batch — so
-batch composition can change every step while compiled programs are
-reused from two small caches:
+(device page pools + host allocator + host offload pool), a
+:class:`Scheduler` (admission + prefill/decode interleave + preemption
+bookkeeping) and a :class:`PrefillBucketAdaptive` (per-bucket MPipeMoE
+(n, strategy) resolution). Each ``step()`` runs one jitted program —
+either a chunked-prefill step for the head-of-line prefilling request or
+one decode step over the whole slot batch — so batch composition can
+change every step while compiled programs are reused from two small
+caches:
 
 * decode: compiled **once** (slot count is static; finished / mid-prefill
   slots are masked, their KV writes going to the reserved sink page);
 * prefill: one compiled step per (bucket, n, strategy) in an LRU,
   mirroring the train-side AdaptiveController cache.
 
-Greedy decoding only (argmax inside the jitted step); sampling is future
-work.
+Overload behaviour (``EngineOptions.preempt``): with the default
+``"auto"`` policy, admission reserves only the first prefill chunk and
+slots grow page-by-page on demand; when the pool runs dry the engine
+preempts the lowest-priority (then youngest) victim, choosing per victim
+between *recompute* (drop pages, re-prefill at resume) and *offload*
+(round-trip pages over the host link) via
+:class:`repro.core.memory_model.PreemptionCost` — the serving analogue
+of the paper's strategy selector, gated by
+``core.strategies.host_offload_supported``. ``"never"`` restores the
+conservative full-budget admission-blocking baseline.
+
+Sampling: temperature / top-k / top-p with per-request seeds and stop
+sequences (``repro.serve.sampling``), executed inside the jitted steps
+with per-slot parameter arrays so the one-compile invariant holds;
+``temperature <= 0`` (default) is exact greedy argmax.
+
+Bucket (n, strategy) resolution can measure candidates by wall clock
+(``EngineOptions.measure``): compiled prefill candidates are timed
+against the live pools (writes masked into the sink page) through the
+same LRU the serving steps use — the winner's program is already warm.
 """
 from __future__ import annotations
 
 import dataclasses
 import logging
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.types import TPU_V5E, HardwareSpec
+from repro.core.memory_model import PreemptionCost
+from repro.core.strategies import host_offload_supported
+from repro.core.types import TPU_V5E, HardwareSpec, Strategy
 from repro.models.api import get_model, supports_paged
 from repro.serve.adaptive import PrefillBucketAdaptive, force_adaptive
 from repro.serve.paged_kv import PagedKVCache
 from repro.serve.request import Request, RequestState
+from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import Scheduler
 
 log = logging.getLogger("repro.serve")
+
+__all__ = ["Engine", "EngineOptions"]
+
+PREEMPT_POLICIES = ("auto", "recompute", "offload", "never")
 
 
 @dataclasses.dataclass
@@ -53,7 +79,12 @@ class EngineOptions:
     dtype: Optional[str] = None        # None = cfg.compute_dtype
     cache_size: int = 16               # LRU bound on compiled prefill steps
     adaptive: bool = True              # resolve (n, strategy) per bucket
+    measure: str = "auto"              # auto | wallclock | simulate
+    measure_steps: int = 2             # wallclock reps per candidate
     measure_fn: Optional[Callable] = None
+    preempt: str = "auto"              # auto | recompute | offload | never
+    allow_offload: Optional[bool] = None   # None = host_offload_supported
+    preempt_mfu: float = 0.5           # assumed MFU of re-prefill (cost)
 
     @property
     def max_pages_per_seq(self) -> int:
@@ -67,6 +98,7 @@ class Engine:
         if not ok:
             raise NotImplementedError(f"{cfg.name}: {why}")
         self.opts = opts = options or EngineOptions()
+        assert opts.preempt in PREEMPT_POLICIES, opts.preempt
         if opts.adaptive:
             cfg = force_adaptive(cfg)
         self.cfg = cfg
@@ -83,26 +115,41 @@ class Engine:
                                max_slots=opts.max_slots,
                                max_pages_per_seq=opts.max_pages_per_seq,
                                dtype=dtype)
-        self.scheduler = Scheduler(self.kv, chunk=opts.chunk)
+        self.scheduler = Scheduler(self.kv, chunk=opts.chunk,
+                                   full_reserve=(opts.preempt == "never"))
+        measure_fn = opts.measure_fn
+        mode = opts.measure
+        if mode == "auto":
+            mode = ("wallclock" if jax.default_backend() != "cpu"
+                    else "simulate")
+        if measure_fn is None and mode == "wallclock":
+            measure_fn = self._wallclock_measure
         self.adaptive = PrefillBucketAdaptive(
             cfg, hw=opts.hw, ep_size=opts.ep_size, dp=opts.dp,
             min_bucket=min(opts.min_bucket, opts.chunk),
-            max_bucket=opts.chunk, measure_fn=opts.measure_fn)
+            max_bucket=opts.chunk, measure_fn=measure_fn)
+        # forward FLOPs/token of the active parameter set, for the
+        # offload-vs-recompute preemption cost model
+        self._flops_per_token = 2.0 * self.model.count_params(
+            cfg, active_only=True)
 
         self._decode_fn = jax.jit(self._decode_step)
         self._prefill_fns: Dict[Tuple, Callable] = {}
         self._next_rid = 0
         self.step_count = 0
         self.prefill_rejits = 0
+        self.preempts: Dict[str, int] = {"recompute": 0, "offload": 0}
         self.done: List[Request] = []
         self.metrics: Dict[str, Any] = {}
 
     # -- jitted step bodies ---------------------------------------------
-    def _decode_step(self, params, pools, page_table, lens, tokens, active):
+    def _decode_step(self, params, pools, page_table, lens, tokens, active,
+                     temp, top_k, top_p, seed, pos):
         logits, new_pools = self.model.decode_step_paged(
             params, pools, page_table, lens, tokens, self.cfg,
             active=active)
-        return jnp.argmax(logits, -1).astype(jnp.int32), new_pools
+        return sample_tokens(logits, temp, top_k, top_p, seed, pos), \
+            new_pools
 
     def _prefill_fn(self, bucket: int, rcfg: ArchConfig) -> Callable:
         m = rcfg.moe
@@ -111,11 +158,11 @@ class Engine:
         fn = self._prefill_fns.pop(key, None)          # LRU: re-insert
         if fn is None:
             def body(params, pools, pt_row, pos0, toks, valid_len,
-                     _cfg=rcfg):
+                     temp, top_k, top_p, seed, pos, _cfg=rcfg):
                 logits, new_pools = self.model.prefill_chunk_paged(
                     params, pools, pt_row, pos0, toks, valid_len, _cfg)
-                return (jnp.argmax(logits, -1).astype(jnp.int32),
-                        new_pools)
+                return sample_tokens(logits, temp, top_k, top_p, seed,
+                                     pos), new_pools
             fn = jax.jit(body)
             self.prefill_rejits += 1
         self._prefill_fns[key] = fn
@@ -123,13 +170,68 @@ class Engine:
             self._prefill_fns.pop(next(iter(self._prefill_fns)))
         return fn
 
+    # -- sampling parameter arrays ---------------------------------------
+    @staticmethod
+    def _sample_args(reqs: Sequence[Optional[Request]]):
+        """Per-slot sampling arrays for ``sample_tokens`` (None slots are
+        masked-off: greedy with dummy state, output discarded)."""
+        n = len(reqs)
+        temp = np.zeros((n,), np.float32)
+        top_k = np.zeros((n,), np.int32)
+        top_p = np.ones((n,), np.float32)
+        seed = np.zeros((n,), np.int32)
+        pos = np.zeros((n,), np.int32)
+        for i, r in enumerate(reqs):
+            if r is None:
+                continue
+            sp = r.sampling
+            temp[i], top_k[i], top_p[i], seed[i] = (
+                sp.temperature, sp.top_k, sp.top_p, sp.seed)
+            pos[i] = len(r.output)
+        return tuple(jnp.asarray(a) for a in (temp, top_k, top_p, seed,
+                                              pos))
+
+    # -- serve-side wall-clock measurement -------------------------------
+    def _wallclock_measure(self, b: int, n: int,
+                           strategy: Strategy) -> float:
+        """Algorithm 1's measure function for prefill buckets: time the
+        compiled candidate (n, strategy) chunk step against the live
+        pools. All writes go through a zeroed page-table row, i.e. into
+        the reserved sink page, and the output pools are discarded — the
+        probe cannot perturb serving state. Candidates land in the same
+        prefill LRU the engine serves from, so the winner is pre-warmed.
+        """
+        rcfg = dataclasses.replace(
+            self.cfg, moe=dataclasses.replace(
+                self.cfg.moe, num_partitions=n,
+                memory_reuse_strategy=strategy.value))
+        fn = self._prefill_fn(b, rcfg)
+        kv = self.kv
+        args = (self.params, kv.pools,
+                jnp.zeros((1, kv.max_pages_per_seq), jnp.int32),
+                jnp.zeros((1,), jnp.int32),
+                jnp.zeros((1, b), jnp.int32), jnp.asarray(b, jnp.int32),
+                *self._sample_args([None]))
+        out = fn(*args)
+        jax.block_until_ready(out[0])            # compile + warm up
+        reps = max(1, self.opts.measure_steps)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(*args)
+        jax.block_until_ready(out[0])
+        return (time.perf_counter() - t0) / reps
+
     # -- request API -----------------------------------------------------
     def submit(self, prompt, *, max_new_tokens: int = 32,
-               eos_id: Optional[int] = None, on_token=None, on_done=None,
+               eos_id: Optional[int] = None, stop=(),
+               sampling: Optional[SamplingParams] = None,
+               priority: int = 0, on_token=None, on_done=None,
                arrival_s: Optional[float] = None) -> Request:
         req = Request(rid=self._next_rid, prompt=np.asarray(prompt),
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
-                      on_token=on_token, on_done=on_done,
+                      stop=stop, sampling=sampling or SamplingParams(),
+                      priority=priority, on_token=on_token,
+                      on_done=on_done,
                       arrival_s=(time.perf_counter() if arrival_s is None
                                  else arrival_s))
         self._next_rid += 1
@@ -159,7 +261,8 @@ class Engine:
         out = self._decode_fn(self.params, kv.pools,
                               kv.device_page_table(), kv.device_lens(),
                               jnp.zeros((kv.max_slots, 1), jnp.int32),
-                              jnp.zeros((kv.max_slots,), bool))
+                              jnp.zeros((kv.max_slots,), bool),
+                              *self._sample_args([None] * kv.max_slots))
         jax.block_until_ready(out[0])
         buckets, c = set(), 1
         while c < self.scheduler.chunk:
@@ -170,9 +273,63 @@ class Engine:
             fn = self._prefill_fn(b, self.adaptive.cfg_for(b))
             out = fn(self.params, kv.pools, kv.device_page_table(0),
                      kv.device_lens(0), jnp.zeros((1, b), jnp.int32),
-                     jnp.asarray(0, jnp.int32))
+                     jnp.asarray(0, jnp.int32), *self._sample_args([None]))
             jax.block_until_ready(out[0])
         return 1 + self.prefill_rejits - before
+
+    # -- preemption ------------------------------------------------------
+    def _pick_victim(self) -> Optional[Request]:
+        """Lowest priority, then youngest, among running requests that
+        actually hold pages."""
+        cands = [r for r in self.scheduler.running.values()
+                 if self.kv.slot_page_count(r.slot) > 0]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (r.priority, -r.rid))
+
+    def _preempt_mode(self, req: Request) -> str:
+        """Per-victim offload-vs-recompute choice (PreemptionCost), gated
+        by hardware/host capability like the train-side strategy mask."""
+        if self.opts.preempt in ("recompute", "offload"):
+            return self.opts.preempt
+        offload_ok = self.opts.allow_offload
+        if offload_ok is None:
+            offload_ok = (self.opts.hw.has_host_offload
+                          and host_offload_supported())
+        if not offload_ok:
+            return "recompute"
+        hw = self.opts.hw
+        cost = PreemptionCost(
+            tokens_cached=int(self.kv.lens[req.slot]),
+            bytes_held=self.kv.slot_page_count(req.slot)
+            * self.kv.page_bytes,
+            flops_per_token=self._flops_per_token, flops=hw.flops,
+            host_bw=hw.host_bw, mfu=self.opts.preempt_mfu,
+            eta=hw.interference.eta_comp)
+        return cost.choice
+
+    def _do_preempt(self, victim: Request) -> None:
+        mode = self.scheduler.preempt(victim, self._preempt_mode(victim))
+        self.preempts[mode] += 1
+        log.info("preempt rid=%d mode=%s cached=%d", victim.rid, mode,
+                 victim.cached_tokens if mode == "offload" else 0)
+
+    def _ensure(self, slot: int, tokens: int) -> bool:
+        """Grow ``slot`` until it can hold ``tokens``, preempting victims
+        while the pool is dry. Returns False if the slot's own request
+        was chosen as the victim (it must skip this step)."""
+        while self.kv.slot_capacity(slot) < tokens:
+            if self.kv.grow_slot(slot):
+                continue
+            victim = self._pick_victim()
+            if victim is None:
+                raise RuntimeError(
+                    "page pool wedged: no free pages and no victim")
+            vslot = victim.slot
+            self._do_preempt(victim)
+            if vslot == slot:
+                return False
+        return True
 
     # -- engine iteration ------------------------------------------------
     def step(self) -> Dict[str, Any]:
@@ -184,7 +341,7 @@ class Engine:
             info.update(self._run_prefill(req))
         elif action == "decode":
             info.update(self._run_decode())
-        elif self.scheduler.waiting:
+        elif self.scheduler.waiting or self.scheduler.resuming:
             raise RuntimeError(
                 "scheduler idle with waiting requests — admission wedged")
         self.step_count += 1
@@ -192,27 +349,36 @@ class Engine:
                     kv_used_bytes=self.kv.used_bytes,
                     free_pages=self.kv.free_pages,
                     running=len(self.scheduler.running),
-                    waiting=len(self.scheduler.waiting))
+                    waiting=len(self.scheduler.waiting),
+                    preempted=len(self.scheduler.resuming))
         self.metrics = info
         return info
 
     def _run_prefill(self, req: Request) -> Dict[str, Any]:
         kv, slot = self.kv, req.slot
         c = min(self.scheduler.chunk, req.remaining_prefill)
+        if not self._ensure(slot, int(kv.lens[slot]) + c):
+            return {"tokens": 0, "rid": req.rid, "self_preempted": True}
         bucket = self.adaptive.bucket_of(c)
         rcfg = self.adaptive.cfg_for(bucket)
         fn = self._prefill_fn(bucket, rcfg)
         toks = np.zeros((1, bucket), np.int32)
-        toks[0, :c] = req.prompt[req.prefill_pos:req.prefill_pos + c]
+        toks[0, :c] = req.prefill_tokens[req.prefill_pos:
+                                         req.prefill_pos + c]
         tok, kv.pools = fn(self.params, kv.pools,
                            kv.device_page_table(slot), kv.device_lens(slot),
-                           jnp.asarray(toks), jnp.asarray(c, jnp.int32))
+                           jnp.asarray(toks), jnp.asarray(c, jnp.int32),
+                           *self._sample_args([req]))
         req.prefill_pos += c
         kv.lens[slot] += c
         self.scheduler.prefill_advanced(req)
         if req.remaining_prefill == 0:
             req.state = RequestState.DECODE
-            if req.emit(int(tok[0]), time.perf_counter()):
+            # a resumed re-prefill (recompute preemption) replays tokens
+            # that were already emitted — its final-chunk sample is the
+            # pending decode input, not a new token
+            if not req.output and req.emit(int(tok[0]),
+                                           time.perf_counter()):
                 self._retire(req)
         info = {"tokens": c, "bucket": bucket, "rid": req.rid}
         if rcfg.moe is not None:
@@ -222,15 +388,29 @@ class Engine:
 
     def _run_decode(self) -> Dict[str, Any]:
         kv = self.kv
+        # every decoding slot writes one KV position this step — grow
+        # on-demand slots first, preempting victims if the pool is dry
+        # (a victim may itself be one of the decoding slots)
+        for s in list(self.scheduler.decode_slots()):
+            req = self.scheduler.running.get(s)
+            if req is None or req.state != RequestState.DECODE:
+                continue                       # preempted by an earlier
+            self._ensure(s, int(kv.lens[s]) + 1)  # slot's growth
         slots = self.scheduler.decode_slots()
+        if not slots:
+            return {"tokens": 0}
         tokens = np.zeros((kv.max_slots, 1), np.int32)
         active = np.zeros((kv.max_slots,), bool)
+        by_slot: List[Optional[Request]] = [None] * kv.max_slots
         for s in slots:
-            tokens[s, 0] = self.scheduler.running[s].output[-1]
+            req = self.scheduler.running[s]
+            tokens[s, 0] = req.output[-1]
             active[s] = True
+            by_slot[s] = req
         toks, kv.pools = self._decode_fn(
             self.params, kv.pools, kv.device_page_table(), kv.device_lens(),
-            jnp.asarray(tokens), jnp.asarray(active))
+            jnp.asarray(tokens), jnp.asarray(active),
+            *self._sample_args(by_slot))
         toks = np.asarray(toks)
         now = time.perf_counter()
         for s in slots:
@@ -254,16 +434,29 @@ class Engine:
 
     # -- reporting -------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
+        def pct(xs: List[float], p: float) -> float:
+            return xs[min(len(xs) - 1, int(p / 100 * len(xs)))] \
+                if xs else 0.0
+
         lat = sorted(r.latency_s for r in self.done)
-        pct = (lambda p: lat[min(len(lat) - 1,
-                                 int(p / 100 * len(lat)))] if lat else 0.0)
+        ttft = sorted(r.ttft_s for r in self.done)
+        itl = sorted(g for r in self.done for g in r.itl_s)
         return {
             "requests_done": len(self.done),
             "tokens_generated": sum(len(r.output) for r in self.done),
             "engine_steps": self.step_count,
             "prefill_compiles": self.prefill_rejits,
-            "p50_latency_s": pct(50),
-            "p99_latency_s": pct(99),
+            "p50_latency_s": pct(lat, 50),
+            "p99_latency_s": pct(lat, 99),
+            "p50_ttft_s": pct(ttft, 50),
+            "p99_ttft_s": pct(ttft, 99),
+            "p50_itl_s": pct(itl, 50),
+            "p99_itl_s": pct(itl, 99),
+            "preempt_recompute": self.preempts["recompute"],
+            "preempt_offload": self.preempts["offload"],
+            "resumes": self.scheduler.resume_count,
+            "swap_out_bytes": self.kv.swap_out_bytes,
+            "swap_in_bytes": self.kv.swap_in_bytes,
             "cache_bytes": self.kv.cache_bytes,
             "peak_kv_used_bytes": self.kv.peak_used_bytes,
             "resolutions": {str(b): list(r) for b, r in

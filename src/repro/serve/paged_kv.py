@@ -4,28 +4,37 @@ Device side (``models/kv_cache.init_paged_pools``): per attention layer a
 global pool ``[num_pages, page_size, kv_heads, head_dim]`` shared by every
 in-flight sequence. Host side (this module): a free list of physical
 pages, a ``[max_slots, max_pages_per_seq]`` page table and per-slot
-lengths, mirrored to device as plain int32 arrays each step.
+lengths, mirrored to device as plain int32 arrays each step — plus a
+host-side offload pool holding the page contents of preempted-by-offload
+requests until they resume.
 
 Invariants:
 * page 0 is reserved — never allocated — as the write sink for masked
   (padding / inactive-slot) scatters;
-* a slot's pages are reserved **up front** for its whole budget
-  (prompt + max_new_tokens) at admission, so a running request can never
-  deadlock on allocation (conservative vLLM-style admission, preemption
-  is future work);
+* pages are allocated either **up front** for a slot's whole budget
+  (``alloc_slot`` with the full prompt + max_new token count — the
+  conservative admission-blocking baseline) or **on demand** one page at
+  a time (``grow_slot`` — the preemptive scheduler's path, where running
+  dry triggers a preemption instead of a deadlock);
 * freed slots have their page-table row zeroed and length reset, so a
   stale slot's decode writes land in the sink page, never in pages that
-  were handed to another sequence.
+  were handed to another sequence;
+* an offloaded request holds **zero** device pages: ``offload_slot``
+  copies its pages to host and returns them to the free list, and
+  ``restore_slot`` later re-allocates (different physical pages are fine
+  — the page table re-maps them) and copies the contents back.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import kv_cache
+
+__all__ = ["PagedKVCache"]
 
 
 class PagedKVCache:
@@ -45,7 +54,12 @@ class PagedKVCache:
         self.page_table = np.zeros((max_slots, max_pages_per_seq), np.int32)
         self.lens = np.zeros((max_slots,), np.int32)
         self._slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
+        # rid -> (host page-content tree, page count): preempted-by-
+        # offload requests parked until resume
+        self._offloaded: Dict[int, Tuple[Any, int]] = {}
         self.peak_used_pages = 0
+        self.swap_out_bytes = 0
+        self.swap_in_bytes = 0
 
     # -- budget ----------------------------------------------------------
     def pages_for(self, tokens: int) -> int:
@@ -66,11 +80,13 @@ class PagedKVCache:
                 and total_tokens <= self.max_pages_per_seq * self.page_size)
 
     # -- slot lifecycle --------------------------------------------------
-    def alloc_slot(self, slot: int, total_tokens: int) -> None:
-        """Reserve every page of the slot's budget up front."""
+    def alloc_slot(self, slot: int, tokens: int) -> None:
+        """Reserve ``pages_for(tokens)`` pages for the slot — the full
+        budget (blocking admission) or just an initial watermark (the
+        on-demand path, which then grows via :meth:`grow_slot`)."""
         assert not self._slot_pages[slot], f"slot {slot} already allocated"
-        need = self.pages_for(total_tokens)
-        assert self.can_admit(total_tokens), "alloc_slot without can_admit"
+        need = self.pages_for(tokens)
+        assert self.can_admit(tokens), "alloc_slot without can_admit"
         pages = [self._free.pop() for _ in range(need)]
         self._slot_pages[slot] = pages
         self.page_table[slot, :] = 0
@@ -78,11 +94,89 @@ class PagedKVCache:
         self.lens[slot] = 0
         self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
 
+    def slot_page_count(self, slot: int) -> int:
+        return len(self._slot_pages[slot])
+
+    def slot_capacity(self, slot: int) -> int:
+        """Tokens the slot can hold with its currently-bound pages."""
+        return len(self._slot_pages[slot]) * self.page_size
+
+    def grow_slot(self, slot: int) -> bool:
+        """Bind one more free page to the slot. False when the pool is
+        dry (the caller preempts a victim and retries)."""
+        held = self._slot_pages[slot]
+        assert len(held) < self.max_pages_per_seq, \
+            f"slot {slot} grew past its per-sequence page budget"
+        if not self._free:
+            return False
+        page = self._free.pop()
+        self.page_table[slot, len(held)] = page
+        held.append(page)
+        self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
+        return True
+
     def free_slot(self, slot: int) -> None:
         self._free.extend(reversed(self._slot_pages[slot]))
         self._slot_pages[slot] = []
         self.page_table[slot, :] = 0
         self.lens[slot] = 0
+
+    # -- preempt-by-offload ----------------------------------------------
+    def offload_slot(self, slot: int, rid: int) -> int:
+        """Swap the slot's pages out to the host pool (keyed by request
+        id) and free them. Only the pages covering ``lens[slot]`` are
+        copied — growth can run ahead of a chunk that was then preempted
+        away, and those tail pages hold nothing worth saving. Returns
+        bytes copied."""
+        pages = self._slot_pages[slot]
+        need = self.pages_for(int(self.lens[slot]))
+        assert pages and need >= 1, f"offload of empty slot {slot}"
+        assert rid not in self._offloaded, f"rid {rid} already offloaded"
+        self._free.extend(reversed(pages[need:]))   # trim unused tail
+        pages = self._slot_pages[slot] = pages[:need]
+        host = kv_cache.extract_pages(self.pools, pages)
+        nbytes = kv_cache.tree_bytes(host)
+        self._offloaded[rid] = (host, len(pages))
+        self.swap_out_bytes += nbytes
+        self.free_slot(slot)
+        return nbytes
+
+    def offloaded_pages(self, rid: int) -> int:
+        return self._offloaded[rid][1]
+
+    def can_restore(self, rid: int) -> bool:
+        return self._offloaded[rid][1] <= len(self._free)
+
+    def restore_slot(self, rid: int, slot: int, tokens: int) -> int:
+        """Swap a preempted request's pages back in: allocate fresh
+        physical pages (the table re-maps), copy the host contents into
+        the pools, and rebind the slot at length ``tokens``. Returns
+        bytes copied."""
+        host, need = self._offloaded.pop(rid)
+        assert not self._slot_pages[slot], f"slot {slot} already allocated"
+        assert need <= len(self._free), "restore_slot without can_restore"
+        assert self.pages_for(tokens) == need, \
+            f"restore of {tokens} tokens into {need} pages"
+        pages = [self._free.pop() for _ in range(need)]
+        self.pools = kv_cache.insert_pages(self.pools, pages, host)
+        self._slot_pages[slot] = pages
+        self.page_table[slot, :] = 0
+        self.page_table[slot, :need] = pages
+        self.lens[slot] = tokens
+        nbytes = kv_cache.tree_bytes(host)
+        self.swap_in_bytes += nbytes
+        self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
+        return nbytes
+
+    @property
+    def offloaded_count(self) -> int:
+        return len(self._offloaded)
+
+    @property
+    def host_bytes(self) -> int:
+        """Bytes currently parked in the host offload pool."""
+        return sum(kv_cache.tree_bytes(host)
+                   for host, _ in self._offloaded.values())
 
     # -- device views ----------------------------------------------------
     # NOTE: always .copy() — jnp.asarray of a host numpy array can be

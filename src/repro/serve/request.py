@@ -1,24 +1,40 @@
 """Request/response API of the serving engine.
 
-A request moves QUEUED -> PREFILL -> DECODE -> DONE. Tokens stream to the
-caller through ``on_token`` as they are produced; ``on_done`` fires once
-with the finished request. Stopping: per-request ``max_new_tokens`` and an
-optional ``eos_id`` early exit — both applied host-side, so jitted step
-shapes stay static.
+A request moves QUEUED -> PREFILL -> DECODE -> DONE, possibly bouncing
+through PREEMPTED (back to the scheduler's resume queue) any number of
+times when the paged KV pool runs dry. Tokens stream to the caller
+through ``on_token`` as they are produced; ``on_done`` fires once with
+the finished request. Stopping: per-request ``max_new_tokens``, optional
+``eos_id`` and optional ``stop`` token sequences — all applied
+host-side, so jitted step shapes stay static.
+
+Preemption bookkeeping lives here so it survives the request leaving its
+slot: ``preempt_mode`` ("recompute" dropped the pages and re-prefills
+:attr:`prefill_tokens` from scratch; "offload" parked ``cached_tokens``
+worth of pages in the host pool), ``resume_to`` remembers whether the
+request was mid-prefill or decoding. Every emitted token is timestamped
+(:attr:`token_times`) so TTFT and inter-token latency can be reported
+separately — a resumed request's stall shows up as one long inter-token
+gap, not a corrupted TTFT.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.serve.sampling import SamplingParams, normalize_stops, stop_hit
+
+__all__ = ["Request", "RequestState"]
 
 
 class RequestState(enum.Enum):
     QUEUED = "queued"
     PREFILL = "prefill"
     DECODE = "decode"
+    PREEMPTED = "preempted"
     DONE = "done"
 
 
@@ -28,6 +44,9 @@ class Request:
     prompt: np.ndarray                     # [L] int32 token ids
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
+    stop: Sequence[Sequence[int]] = ()     # token-id stop sequences
+    sampling: SamplingParams = SamplingParams()
+    priority: int = 0                      # higher = preempted later
     on_token: Optional[Callable[[int, "Request"], None]] = None
     on_done: Optional[Callable[["Request"], None]] = None
     arrival_s: float = 0.0                 # submit timestamp (perf_counter)
@@ -35,14 +54,22 @@ class Request:
     # -- runtime state (owned by the scheduler/engine) -------------------
     state: RequestState = RequestState.QUEUED
     slot: int = -1                         # continuous-batch slot index
-    prefill_pos: int = 0                   # prompt tokens already cached
+    prefill_pos: int = 0                   # source tokens already cached
     output: List[int] = dataclasses.field(default_factory=list)
-    finish_reason: str = ""                # "eos" | "length"
+    finish_reason: str = ""                # "eos" | "length" | "stop"
     first_token_s: float = 0.0
     finish_s: float = 0.0
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+    # -- preemption state ------------------------------------------------
+    preempt_mode: str = ""                 # "recompute" | "offload" | ""
+    resume_to: str = ""                    # "prefill" | "decode"
+    cached_tokens: int = 0                 # KV tokens parked in host pool
+    preempt_count: int = 0
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        self.stop = normalize_stops(self.stop)
         assert self.prompt.size > 0, "empty prompt"
         assert self.max_new_tokens >= 1, "max_new_tokens must be >= 1"
 
@@ -52,24 +79,43 @@ class Request:
 
     @property
     def total_budget(self) -> int:
-        """KV positions this request may ever occupy (admission budget)."""
+        """KV positions this request may ever occupy."""
         return self.prompt_len + self.max_new_tokens
+
+    # -- prefill source --------------------------------------------------
+    # After a recompute preemption mid-decode, "prefill" replays the
+    # prompt plus every generated token except the last (the last one is
+    # the pending decode input — its KV is written by the decode step that
+    # consumes it, exactly as in the never-preempted run).
+    @property
+    def prefill_len(self) -> int:
+        return self.prompt_len + max(0, len(self.output) - 1)
+
+    @property
+    def prefill_tokens(self) -> np.ndarray:
+        if not self.output:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.output[:-1], np.int32)])
 
     @property
     def remaining_prefill(self) -> int:
-        return self.prompt_len - self.prefill_pos
+        return self.prefill_len - self.prefill_pos
 
     def emit(self, token: int, now: float) -> bool:
         """Record one generated token; returns True when the request is
-        finished (EOS or length)."""
+        finished (EOS, stop sequence, or length)."""
         token = int(token)
         if not self.output:
             self.first_token_s = now
         self.output.append(token)
+        self.token_times.append(now)
         if self.on_token is not None:
             self.on_token(token, self)
         if self.eos_id is not None and token == self.eos_id:
             self.finish_reason = "eos"
+        elif self.stop and stop_hit(self.output, self.stop) is not None:
+            self.finish_reason = "stop"
         elif len(self.output) >= self.max_new_tokens:
             self.finish_reason = "length"
         else:
@@ -88,3 +134,11 @@ class Request:
     def ttft_s(self) -> float:
         """Time to first token."""
         return self.first_token_s - self.arrival_s
+
+    @property
+    def itl_s(self) -> List[float]:
+        """Inter-token latencies (gaps between consecutive emits). A
+        preemption stall appears here as one long gap — never folded into
+        :attr:`ttft_s`."""
+        t = self.token_times
+        return [b - a for a, b in zip(t, t[1:])]

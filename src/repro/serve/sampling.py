@@ -1,0 +1,108 @@
+"""Sampling for the serving engine: temperature / top-k / top-p + stops.
+
+The decode and prefill step bodies call :func:`sample_tokens` *inside*
+jit with per-slot parameter arrays (temperature, top-k, top-p, seed,
+position), so the one-compile invariant holds: changing a request's
+sampling settings changes traced array *values*, never shapes, and the
+whole continuous batch — greedy and sampled slots mixed — runs through
+one program. ``temperature <= 0`` means greedy (exact ``argmax``, the
+golden-test reference path).
+
+Determinism: each sampled token's PRNG key is
+``fold_in(PRNGKey(seed), position)`` where ``position`` is the index of
+the token being generated — a pure function of the request, independent
+of batch composition, slot assignment or preemption history. The same
+request with the same seed emits the same tokens whether it runs alone,
+continuously batched with others, or preempted and resumed mid-stream.
+
+Stop sequences are matched host-side against the output suffix
+(:func:`stop_hit`), like the ``eos_id`` / ``max_new_tokens`` stops, so
+jitted step shapes stay static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+__all__ = ["SamplingParams", "sample_tokens", "stop_hit"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs.
+
+    ``temperature <= 0`` selects greedy decoding (the default); ``top_k
+    <= 0`` and ``top_p`` outside (0, 1) disable the respective filter.
+    ``seed`` names the request's private PRNG stream.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def _sample_row(logits, temperature, top_k, top_p, seed, position):
+    """One slot: masked top-k/top-p categorical sample (or argmax)."""
+    v = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    greedy = temperature <= 0.0
+    scaled = lg / jnp.where(greedy, 1.0, temperature)
+    order = jnp.sort(scaled)[::-1]                       # descending
+    # top-k threshold: the k-th largest scaled logit (0 => keep all)
+    k_eff = jnp.clip(jnp.where(top_k <= 0, v, top_k), 1, v)
+    kth = order[k_eff - 1]
+    # top-p (nucleus) threshold: smallest prefix with mass >= top_p
+    p_eff = jnp.where((top_p <= 0.0) | (top_p >= 1.0), 1.0, top_p)
+    probs = jax.nn.softmax(order)
+    below = jnp.cumsum(probs) - probs                    # mass before each
+    n_keep = jnp.maximum(jnp.sum(below < p_eff), 1)
+    pth = order[n_keep - 1]
+    masked = jnp.where(scaled >= jnp.maximum(kth, pth), scaled, NEG_INF)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), position)
+    sampled = jax.random.categorical(key, masked)
+    return jnp.where(greedy, jnp.argmax(lg), sampled).astype(jnp.int32)
+
+
+def sample_tokens(logits, temperature, top_k, top_p, seed, position):
+    """Sample one token per slot, jit-stable.
+
+    logits ``[S, V]``; all other args ``[S]`` (float32 temperature/top_p,
+    int32 top_k/seed/position). Rows are independent: a slot's token
+    depends only on its own logits and sampling state, so batch
+    composition cannot perturb it. Returns int32 ``[S]``.
+    """
+    return jax.vmap(_sample_row)(
+        logits, temperature.astype(jnp.float32),
+        top_k.astype(jnp.int32), top_p.astype(jnp.float32),
+        seed.astype(jnp.int32), position.astype(jnp.int32))
+
+
+def normalize_stops(stop) -> Tuple[Tuple[int, ...], ...]:
+    """Canonicalize stop sequences: tuple of non-empty int tuples."""
+    if not stop:
+        return ()
+    out = []
+    for s in stop:
+        s = (int(s),) if isinstance(s, int) else tuple(int(t) for t in s)
+        if s:
+            out.append(s)
+    return tuple(out)
+
+
+def stop_hit(output: Sequence[int],
+             stop: Sequence[Sequence[int]]) -> Optional[Tuple[int, ...]]:
+    """The stop sequence the output now ends with, or None."""
+    for s in stop:
+        n = len(s)
+        if n and len(output) >= n and tuple(output[-n:]) == tuple(s):
+            return tuple(s)
+    return None

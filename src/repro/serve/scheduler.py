@@ -1,10 +1,26 @@
-"""Continuous-batching scheduler: admission + prefill/decode interleave.
+"""Continuous-batching scheduler: admission, preemption, interleave.
 
 Policy:
-* **Admission** is FCFS by a KV/token budget: a queued request is
-  admitted when a batch slot is free and the paged cache can reserve its
-  whole budget (prompt + max_new_tokens) up front — so nothing mid-flight
-  can starve (no preemption needed).
+* **Admission** is FCFS. Two reservation modes:
+  - ``full_reserve=True`` (the conservative baseline): a queued request
+    is admitted only when the paged cache can reserve its whole budget
+    (prompt + max_new_tokens) up front — nothing mid-flight can ever
+    starve, but the pool is massively over-reserved and bursty traffic
+    queues behind it;
+  - ``full_reserve=False`` (default): admission needs only a free slot
+    plus pages for the request's *prompt* (its ``max_new_tokens`` decode
+    budget is NOT reserved); decode grows page by page on demand, and
+    when the pool runs dry the engine preempts a victim instead of
+    wedging. Reserving the whole prompt up front keeps prefill from
+    stealing pages mid-flight — only decode growth preempts — which
+    damps preemption ping-pong under overload.
+* **Preemption** (:meth:`preempt`): the victim leaves its slot as
+  PREEMPTED, either dropping its pages for later re-prefill (recompute)
+  or parking them in the host pool (offload), and joins the resume
+  queue. Resumes are strictly prioritized over fresh admissions, oldest
+  first (lowest rid), with head-of-line blocking in both queues — the
+  oldest work always makes progress, which is what guarantees the
+  preemption storm converges.
 * **Interleaving**: prefill is chunked (``chunk`` tokens per step) and
   alternates with decode whenever both have work, bounding decode-token
   latency by one chunk instead of one whole prompt — the serving analogue
@@ -19,16 +35,22 @@ from typing import Deque, Dict, List, Optional, Tuple
 from repro.serve.paged_kv import PagedKVCache
 from repro.serve.request import Request, RequestState
 
+__all__ = ["Scheduler"]
+
 
 class Scheduler:
-    def __init__(self, kv: PagedKVCache, *, chunk: int = 64):
+    def __init__(self, kv: PagedKVCache, *, chunk: int = 64,
+                 full_reserve: bool = False):
         assert chunk >= 1
         self.kv = kv
         self.chunk = chunk
+        self.full_reserve = full_reserve
         self.waiting: Deque[Request] = deque()
+        self.resuming: List[Request] = []              # PREEMPTED requests
         self.running: Dict[int, Request] = {}          # slot -> request
         self._prefilling: Deque[int] = deque()         # slots, FCFS
         self._last_was_prefill = False
+        self.resume_count = 0
 
     # -- queue side ------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -37,31 +59,89 @@ class Scheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running)
+        return bool(self.waiting or self.resuming or self.running)
 
     def free_slots(self) -> List[int]:
         return [s for s in range(self.kv.max_slots) if s not in self.running]
 
     # -- admission -------------------------------------------------------
+    def _admit_resume(self, req: Request, slot: int) -> None:
+        if req.preempt_mode == "offload":
+            self.kv.restore_slot(req.rid, slot, req.cached_tokens)
+            req.state = (RequestState.PREFILL if req.resume_to == "prefill"
+                         else RequestState.DECODE)
+        else:                                   # recompute: re-prefill
+            self.kv.alloc_slot(slot, req.prefill_len)
+            req.state = RequestState.PREFILL
+        self.resuming.remove(req)
+        req.preempt_mode = ""
+        req.cached_tokens = 0
+        self.resume_count += 1
+
     def admit(self) -> List[Request]:
-        """Move QUEUED requests into free slots while the page budget
-        holds. FCFS — a too-big head-of-line request blocks (no unfair
-        overtake that could starve it forever)."""
+        """Move resumable then QUEUED requests into free slots while the
+        page budget holds. FCFS with head-of-line blocking in both queues
+        (no unfair overtake that could starve the head forever); resumes
+        strictly precede fresh admissions so preempted work cannot be
+        starved by new arrivals stealing its pages."""
         admitted = []
         free = deque(self.free_slots())
-        while self.waiting and free:
-            req = self.waiting[0]
-            if not self.kv.can_admit(req.total_budget):
+        while free:
+            if self.resuming:
+                req = min(self.resuming, key=lambda r: r.rid)
+                if req.preempt_mode == "offload":
+                    if not self.kv.can_restore(req.rid):
+                        break
+                elif not self.kv.can_admit(req.prefill_len):
+                    break
+                slot = free.popleft()
+                self._admit_resume(req, slot)
+            elif self.waiting:
+                req = self.waiting[0]
+                need = (req.total_budget if self.full_reserve
+                        else req.prompt_len)
+                if not self.kv.can_admit(need):
+                    break
+                slot = free.popleft()
+                self.kv.alloc_slot(slot, need)
+                self.waiting.popleft()
+                req.state = RequestState.PREFILL
+            else:
                 break
-            self.waiting.popleft()
-            slot = free.popleft()
-            self.kv.alloc_slot(slot, req.total_budget)
             req.slot = slot
-            req.state = RequestState.PREFILL
             self.running[slot] = req
-            self._prefilling.append(slot)
+            if req.state == RequestState.PREFILL:
+                self._prefilling.append(slot)
             admitted.append(req)
         return admitted
+
+    # -- preemption ------------------------------------------------------
+    def preempt(self, req: Request, mode: str) -> str:
+        """Evict a running request: free or offload its pages, move it to
+        the resume queue. Returns the mode actually applied (offload of
+        an empty cache degrades to recompute)."""
+        slot = req.slot
+        assert self.running.get(slot) is req, f"request {req.rid} not running"
+        req.resume_to = ("prefill" if req.state == RequestState.PREFILL
+                         else "decode")
+        req.cached_tokens = int(self.kv.lens[slot])
+        if mode == "offload" and req.cached_tokens > 0:
+            self.kv.offload_slot(slot, req.rid)
+        else:
+            mode = "recompute"
+            self.kv.free_slot(slot)
+            req.prefill_pos = 0
+            req.cached_tokens = 0
+            req.resume_to = "prefill"
+        if slot in self._prefilling:
+            self._prefilling.remove(slot)
+        del self.running[slot]
+        req.slot = -1
+        req.state = RequestState.PREEMPTED
+        req.preempt_mode = mode
+        req.preempt_count += 1
+        self.resuming.append(req)
+        return mode
 
     # -- step planning ---------------------------------------------------
     def decode_slots(self) -> List[int]:

@@ -11,6 +11,30 @@ from typing import List
 
 import numpy as np
 
+__all__ = ["TraceEntry", "dense_greedy_reference", "poisson_trace",
+           "replay", "run_poisson"]
+
+
+def dense_greedy_reference(params, cfg, prompt, max_new: int):
+    """Golden reference: dense-cache sequential prefill + greedy decode,
+    one request at a time (the legacy serve loop). The token-exactness
+    oracle the paged / continuously-batched / preemptive engine is
+    checked against in tests and the overload benchmark."""
+    import jax.numpy as jnp
+
+    from repro.models import lm
+
+    toks = np.asarray(prompt)[None, :]
+    logits, cache = lm.prefill(params, {"tokens": toks}, cfg,
+                               max_len=len(prompt) + max_new,
+                               dtype=jnp.float32)
+    out = [int(np.argmax(np.asarray(logits[0, -1])))]
+    for _ in range(max_new - 1):
+        lg, cache = lm.decode_step(
+            params, cache, np.asarray([[out[-1]]], np.int32), cfg)
+        out.append(int(np.argmax(np.asarray(lg[0]))))
+    return out
+
 
 @dataclasses.dataclass(frozen=True)
 class TraceEntry:
@@ -39,26 +63,31 @@ def poisson_trace(num_requests: int, *, rate: float, vocab_size: int,
 
 def run_poisson(cfg, options, *, requests: int, rate: float,
                 prompt_max: int, gen_max: int, seed: int = 0,
-                eos_id=None, time_scale: float = 1.0):
+                eos_id=None, time_scale: float = 1.0, sampling=None,
+                params=None):
     """Build an Engine for ``cfg``/``options``, replay a Poisson trace
     through it, and return ``(engine, wall_s)`` — the shared body of the
-    serving CLI and ``benchmarks/serving.py``."""
+    serving CLI and ``benchmarks/serving.py``. ``sampling`` (a
+    :class:`repro.serve.sampling.SamplingParams`) applies to every
+    request; ``params`` reuses an existing parameter tree (so two engines
+    can be compared on identical weights)."""
     import time
 
     from repro.serve.engine import Engine
 
-    engine = Engine(cfg, options=options)
+    engine = Engine(cfg, params, options=options)
     engine.warmup()        # steady-state numbers, not XLA compile time
     trace = poisson_trace(requests, rate=rate, vocab_size=cfg.vocab_size,
                           prompt_len_range=(4, prompt_max),
                           gen_len_range=(2, gen_max), seed=seed)
     t0 = time.perf_counter()
-    replay(engine, trace, eos_id=eos_id, time_scale=time_scale)
+    replay(engine, trace, eos_id=eos_id, time_scale=time_scale,
+           sampling=sampling)
     return engine, time.perf_counter() - t0
 
 
 def replay(engine, trace: List[TraceEntry], *, eos_id=None,
-           time_scale: float = 1.0):
+           time_scale: float = 1.0, sampling=None):
     """Drive ``engine`` through ``trace`` in wall-clock time (arrival
     offsets multiplied by ``time_scale``; 0 submits everything up front).
     Returns the list of submitted Requests (done when this returns)."""
@@ -67,6 +96,7 @@ def replay(engine, trace: List[TraceEntry], *, eos_id=None,
     t0 = time.perf_counter()
     pending = list(trace)
     requests = []
+    kw = {} if sampling is None else {"sampling": sampling}
     while pending or engine.has_work:
         now = time.perf_counter() - t0
         while pending and pending[0].arrival_s * time_scale <= now:
@@ -76,7 +106,7 @@ def replay(engine, trace: List[TraceEntry], *, eos_id=None,
             # part of the reported percentiles
             requests.append(engine.submit(
                 e.prompt, max_new_tokens=e.max_new_tokens, eos_id=eos_id,
-                arrival_s=t0 + e.arrival_s * time_scale))
+                arrival_s=t0 + e.arrival_s * time_scale, **kw))
         if engine.has_work:
             engine.step()
         elif pending:

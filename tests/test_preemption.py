@@ -1,0 +1,347 @@
+"""Preemptive scheduling (repro.serve): token-exactness through
+recompute and offload preemption storms, victim selection, the
+offload-vs-recompute cost model, allocator integrity under preemption
+(including a hypothesis property test), and the serve-side wall-clock
+measure path."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.memory_model import PreemptionCost
+from repro.models import lm
+from repro.serve import (Engine, EngineOptions, PagedKVCache, RequestState,
+                         dense_greedy_reference as ref_decode)
+
+PROMPT_LENS = (13, 29, 7, 21, 5)
+MAX_NEW = (6, 4, 8, 5, 7)
+
+
+def _cfg():
+    return dataclasses.replace(get_config("llama3-8b").reduced(),
+                               compute_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.Generator(np.random.Philox(key=7))
+    prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in PROMPT_LENS]
+    refs = [ref_decode(params, cfg, p, m)
+            for p, m in zip(prompts, MAX_NEW)]
+    return cfg, params, prompts, refs
+
+
+def _engine(cfg, params, **over):
+    # pool of 11 real pages vs ~28 pages of total demand: on-demand
+    # admission packs 3 slots in and page exhaustion preempts repeatedly
+    kw = dict(page_size=4, max_slots=3, max_seq_len=64, chunk=16,
+              min_bucket=8, num_pages=12)
+    kw.update(over)
+    return Engine(cfg, params, options=EngineOptions(**kw))
+
+
+def _run_all(eng, prompts, refs):
+    for p, m in zip(prompts, MAX_NEW):
+        eng.submit(p, max_new_tokens=m, arrival_s=0.0)
+    eng.run_until_idle()
+    outs = [r.output for r in sorted(eng.done, key=lambda r: r.rid)]
+    assert outs == refs
+
+
+def _assert_drained(kv: PagedKVCache):
+    """Free-list integrity: every page back, no aliasing, no leftovers."""
+    assert sorted(kv._free) == list(range(1, kv.num_pages))
+    assert len(set(kv._free)) == len(kv._free)
+    assert not any(kv._slot_pages)
+    assert (kv.page_table == 0).all() and (kv.lens == 0).all()
+    assert kv.offloaded_count == 0 and kv.host_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# Token-exactness through preemption (the tentpole invariant)
+# ---------------------------------------------------------------------------
+
+def test_preempt_recompute_token_exact(setup):
+    cfg, params, prompts, refs = setup
+    eng = _engine(cfg, params, preempt="recompute")
+    _run_all(eng, prompts, refs)
+    assert eng.preempts["recompute"] > 0          # the storm happened
+    assert eng.preempts["offload"] == 0
+    assert eng.stats()["resumes"] == sum(r.preempt_count
+                                         for r in eng.done)
+    assert any(r.preempt_count > 0 for r in eng.done)
+    _assert_drained(eng.kv)
+
+
+def test_preempt_offload_token_exact(setup):
+    cfg, params, prompts, refs = setup
+    eng = _engine(cfg, params, preempt="offload")
+    _run_all(eng, prompts, refs)
+    assert eng.preempts["offload"] > 0
+    s = eng.stats()
+    assert s["swap_out_bytes"] > 0
+    assert s["swap_in_bytes"] == s["swap_out_bytes"]  # all restored
+    _assert_drained(eng.kv)
+
+
+def test_preempt_auto_respects_host_gate(setup):
+    """auto on this CPU backend (no pinned_host) must degrade to
+    recompute-only — the same capacity mask the train-side strategy
+    selector applies."""
+    cfg, params, prompts, refs = setup
+    eng = _engine(cfg, params, preempt="auto")
+    _run_all(eng, prompts, refs)
+    assert eng.preempts["recompute"] > 0
+    assert eng.preempts["offload"] == 0
+
+
+def test_preempt_auto_cost_model_offload(setup):
+    """With offload force-allowed and recompute made expensive, the
+    per-victim cost model must choose offload."""
+    cfg, params, prompts, refs = setup
+    eng = _engine(cfg, params, preempt="auto", allow_offload=True)
+    eng._flops_per_token = 1e15        # re-prefill "costs" ~hours
+    choices, orig = [], eng._preempt_mode
+
+    def spy(req):
+        mode = orig(req)
+        choices.append((int(eng.kv.lens[req.slot]), mode))
+        return mode
+
+    eng._preempt_mode = spy
+    _run_all(eng, prompts, refs)
+    assert eng.preempts["offload"] > 0
+    # whenever the victim had cached KV to save, offload won; a victim
+    # with an empty cache has nothing to swap and recomputes for free
+    assert all(mode == ("offload" if cached else "recompute")
+               for cached, mode in choices)
+    _assert_drained(eng.kv)
+
+
+def test_victim_is_lowest_priority_then_youngest(setup):
+    # 12 real pages: both prompts admit (4 + 8 pages, pool full) and
+    # the first decode growth forces a preemption
+    cfg, params, prompts, refs = setup
+    eng = _engine(cfg, params, preempt="recompute", max_slots=2,
+                  num_pages=13)
+    hi = eng.submit(prompts[0], max_new_tokens=MAX_NEW[0], priority=1)
+    lo = eng.submit(prompts[1], max_new_tokens=MAX_NEW[1], priority=0)
+    eng.run_until_idle()
+    assert hi.preempt_count == 0                  # protected
+    assert lo.preempt_count > 0                   # sacrificed
+    assert [hi.output, lo.output] == [refs[0], refs[1]]
+
+
+def test_preempted_state_round_trip(setup):
+    """A victim visibly passes through PREEMPTED and back."""
+    cfg, params, prompts, refs = setup
+    eng = _engine(cfg, params, preempt="recompute", max_slots=2,
+                  num_pages=13)
+    r0 = eng.submit(prompts[0], max_new_tokens=MAX_NEW[0])
+    r1 = eng.submit(prompts[1], max_new_tokens=MAX_NEW[1])
+    seen = set()
+    while eng.has_work:
+        eng.step()
+        seen.update(r.state for r in (r0, r1))
+    assert RequestState.PREEMPTED in seen
+    assert r0.state == r1.state == RequestState.DONE
+
+
+def test_overload_preemption_admits_earlier(setup):
+    """The overload acceptance property, measured deterministically in
+    engine steps (no wall clock): under a burst of decode-heavy requests
+    over a constrained pool, preemptive prompt-only admission emits
+    first tokens strictly earlier than the admission-blocking baseline
+    (whose full prompt+max_new reservation fits only one request at a
+    time), while staying token-exact."""
+    cfg, params, _, _ = setup
+    rng = np.random.Generator(np.random.Philox(key=23))
+    # 3-page prompts with 6-page total budgets over 8 real pages:
+    # blocking serializes completely, preemptive packs 2 prompts + growth
+    prompts = [rng.integers(0, cfg.vocab_size, size=12, dtype=np.int32)
+               for _ in range(4)]
+    refs = [ref_decode(params, cfg, p, 12) for p in prompts]
+
+    def first_token_steps(policy):
+        eng = _engine(cfg, params, num_pages=9, preempt=policy)
+        firsts = {}
+        for p in prompts:
+            eng.submit(p, max_new_tokens=12, arrival_s=0.0,
+                       on_token=lambda t, r:
+                       firsts.setdefault(r.rid, eng.step_count))
+        eng.run_until_idle()
+        outs = [r.output for r in sorted(eng.done, key=lambda r: r.rid)]
+        assert outs == refs
+        return sorted(firsts.values())
+
+    blocking = first_token_steps("never")
+    preemptive = first_token_steps("recompute")
+    # strictly earlier at the median and for the worst request
+    assert preemptive[len(preemptive) // 2] < blocking[len(blocking) // 2]
+    assert preemptive[-1] < blocking[-1]
+
+
+# ---------------------------------------------------------------------------
+# Cost model (core.memory_model.PreemptionCost)
+# ---------------------------------------------------------------------------
+
+def test_preemption_cost_crossover():
+    base = dict(tokens_cached=64, bytes_held=1 << 20, flops=200e12,
+                host_bw=32e9)
+    # tiny model: re-prefill is nearly free -> recompute
+    cheap = PreemptionCost(flops_per_token=2e6, **base)
+    assert cheap.choice == "recompute"
+    # huge model: re-prefill dwarfs a 1 MiB swap -> offload
+    heavy = PreemptionCost(flops_per_token=2e12, **base)
+    assert heavy.choice == "offload"
+    assert heavy.recompute_s > heavy.offload_s
+    # both costs scale linearly in cached state
+    twice = PreemptionCost(flops_per_token=2e12,
+                           **dict(base, tokens_cached=128,
+                                  bytes_held=2 << 20))
+    assert twice.offload_s == pytest.approx(2 * heavy.offload_s)
+    assert twice.recompute_s == pytest.approx(2 * heavy.recompute_s)
+
+
+# ---------------------------------------------------------------------------
+# Allocator integrity (property test)
+# ---------------------------------------------------------------------------
+
+def test_allocator_property_preemption_storm(setup):
+    """Random alloc/grow/offload/restore/free op sequences keep the page
+    allocator consistent: pages are never aliased, never leaked, and the
+    sink page is never handed out."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    cfg, params, _, _ = setup
+    from hypothesis import HealthCheck, given, settings
+
+    NP, PS, SLOTS, MPS = 8, 2, 3, 4
+
+    def check(kv, held, offl):
+        free = set(kv._free)
+        bound = [p for pages in kv._slot_pages for p in pages]
+        assert 0 not in free and 0 not in bound
+        assert len(bound) == len(set(bound))
+        assert free | set(bound) == set(range(1, NP))
+        for slot in range(SLOTS):
+            n = len(kv._slot_pages[slot])
+            assert list(kv.page_table[slot, :n]) == kv._slot_pages[slot]
+            assert (kv.page_table[slot, n:] == 0).all()
+        assert kv.offloaded_count == len(offl)
+
+    @settings(max_examples=30, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(ops=st.lists(st.tuples(st.integers(0, 4),
+                                  st.integers(0, SLOTS - 1),
+                                  st.integers(1, MPS * PS)),
+                        min_size=1, max_size=60))
+    def run(ops):
+        kv = PagedKVCache(cfg, num_pages=NP, page_size=PS,
+                          max_slots=SLOTS, max_pages_per_seq=MPS,
+                          dtype=np.float32)
+        held, offl, rid = {}, {}, 0
+        for op, slot, tokens in ops:
+            if op == 0 and slot not in held and kv.can_admit(tokens):
+                kv.alloc_slot(slot, tokens)
+                held[slot] = tokens
+            elif op == 1 and slot in held:
+                if len(kv._slot_pages[slot]) < MPS:
+                    kv.grow_slot(slot)          # may be a no-op when dry
+            elif op == 2 and slot in held and kv.slot_page_count(slot):
+                cached = kv.slot_capacity(slot)     # page-aligned length
+                kv.lens[slot] = cached
+                kv.offload_slot(slot, rid)
+                offl[rid] = (cached, kv.offloaded_pages(rid))
+                del held[slot]
+                rid += 1
+            elif op == 3 and offl:
+                r, (cached, pages) = next(iter(offl.items()))
+                free_slots = [s for s in range(SLOTS) if s not in held]
+                if free_slots and kv.can_restore(r):
+                    s = free_slots[0]
+                    kv.restore_slot(r, s, cached)
+                    held[s] = cached
+                    del offl[r]
+            elif op == 4 and slot in held:
+                kv.free_slot(slot)
+                del held[slot]
+            check(kv, held, offl)
+
+    run()
+
+
+def test_offload_restore_preserves_page_contents(setup):
+    """Swap-out/swap-in round-trips exact page contents even when the
+    restore lands on different physical pages."""
+    cfg, _, _, _ = setup
+    kv = PagedKVCache(cfg, num_pages=8, page_size=2, max_slots=2,
+                      max_pages_per_seq=3, dtype=np.float32)
+    kv.alloc_slot(0, 6)
+    pages0 = list(kv._slot_pages[0])
+    # write a recognizable pattern into slot 0's pages
+    import jax.numpy as jnp
+    from repro.models import kv_cache as KV
+    pat = KV.extract_pages(kv.pools, pages0)
+    pat = jax.tree_util.tree_map(
+        lambda h: np.arange(h.size, dtype=h.dtype).reshape(h.shape), pat)
+    kv.pools = KV.insert_pages(kv.pools, pages0, pat)
+    kv.lens[0] = 6
+    kv.offload_slot(0, rid=42)
+    kv.alloc_slot(0, 6)                 # steal the just-freed pages
+    kv.restore_slot(42, 1, 6)           # forced onto other physical pages
+    assert kv._slot_pages[1] != pages0
+    got = KV.extract_pages(kv.pools, kv._slot_pages[1])
+    jax.tree_util.tree_map(np.testing.assert_array_equal, got, pat)
+
+
+# ---------------------------------------------------------------------------
+# Serve-side wall-clock resolution
+# ---------------------------------------------------------------------------
+
+def _moe_cfg():
+    cfg = get_config("moe-gpt3-s").reduced()
+    moe = dataclasses.replace(cfg.moe, capacity_factor=8.0)
+    return dataclasses.replace(cfg, compute_dtype="float32", moe=moe)
+
+
+def test_injected_measure_fn_drives_resolution():
+    cfg = _moe_cfg()
+    calls = []
+
+    def fake(b, n, strategy):
+        calls.append((b, n, strategy.value))
+        return 1.0 / n                   # prefer the largest feasible n
+
+    eng = Engine(cfg, options=EngineOptions(
+        page_size=4, max_slots=2, max_seq_len=32, chunk=8, min_bucket=8,
+        measure_fn=fake))
+    eng.submit(np.arange(6, dtype=np.int32) % cfg.vocab_size,
+               max_new_tokens=2)
+    eng.run_until_idle()
+    assert calls and all(b == 8 for b, _, _ in calls)
+    (n, _), = set(eng.adaptive.resolutions.values())
+    assert n == max(n_ for _, n_, _ in calls)
+
+
+def test_wallclock_measure_times_real_candidates():
+    """measure="wallclock" forced on CPU: candidates are compiled through
+    the prefill LRU and timed; serving stays token-exact afterwards."""
+    cfg = _moe_cfg()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    opts = EngineOptions(page_size=4, max_slots=2, max_seq_len=32,
+                         chunk=8, min_bucket=8, measure="wallclock",
+                         measure_steps=1)
+    eng = Engine(cfg, params, options=opts)
+    prompt = np.arange(6, dtype=np.int32) % cfg.vocab_size
+    ref = ref_decode(params, cfg, prompt, 3)
+    r = eng.submit(prompt, max_new_tokens=3)
+    eng.run_until_idle()
+    assert r.output == ref
+    assert eng.adaptive.resolutions          # bucket resolved by timing
+    assert eng.prefill_rejits >= 2           # >1 candidate was compiled

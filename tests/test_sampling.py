@@ -1,0 +1,183 @@
+"""Sampling suite (repro.serve.sampling): masked top-k/top-p kernel
+semantics, per-seed determinism across batch compositions (and through
+preemption), stop sequences, and the one-compile invariant."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve import Engine, EngineOptions, SamplingParams, sample_tokens
+from repro.serve.sampling import stop_hit
+
+
+def _sample(logits, *, temp=1.0, top_k=0, top_p=1.0, seed=0, pos=0):
+    n = logits.shape[0]
+    arr = lambda v, dt: jnp.full((n,), v, dt)
+    return np.asarray(sample_tokens(
+        jnp.asarray(logits), arr(temp, jnp.float32), arr(top_k, jnp.int32),
+        arr(top_p, jnp.float32), arr(seed, jnp.int32),
+        arr(pos, jnp.int32)))
+
+
+# ---------------------------------------------------------------------------
+# Kernel semantics
+# ---------------------------------------------------------------------------
+
+def test_greedy_is_exact_argmax():
+    rng = np.random.Generator(np.random.Philox(key=1))
+    lg = rng.standard_normal((5, 37)).astype(np.float32)
+    assert (_sample(lg, temp=0.0) == lg.argmax(-1)).all()
+
+
+def test_top_k_one_is_argmax_at_any_temperature():
+    rng = np.random.Generator(np.random.Philox(key=2))
+    lg = rng.standard_normal((4, 50)).astype(np.float32)
+    assert (_sample(lg, temp=5.0, top_k=1) == lg.argmax(-1)).all()
+
+
+def test_tiny_top_p_is_argmax():
+    rng = np.random.Generator(np.random.Philox(key=3))
+    lg = rng.standard_normal((4, 50)).astype(np.float32)
+    assert (_sample(lg, temp=2.0, top_p=1e-6) == lg.argmax(-1)).all()
+
+
+def test_top_k_restricts_support():
+    rng = np.random.Generator(np.random.Philox(key=4))
+    lg = rng.standard_normal((1, 64)).astype(np.float32)
+    top5 = set(np.argsort(lg[0])[::-1][:5].tolist())
+    seen = {int(_sample(lg, temp=3.0, top_k=5, pos=p)[0])
+            for p in range(50)}
+    assert seen <= top5 and len(seen) > 1
+
+
+def test_top_p_restricts_support():
+    # 3 dominant logits carry ~all the mass; nucleus 0.9 keeps only them
+    lg = np.full((1, 16), -10.0, np.float32)
+    lg[0, [3, 7, 11]] = [5.0, 5.2, 4.8]
+    seen = {int(_sample(lg, temp=1.0, top_p=0.9, pos=p)[0])
+            for p in range(40)}
+    assert seen <= {3, 7, 11} and len(seen) > 1
+
+
+def test_same_seed_same_position_same_token_rows_independent():
+    rng = np.random.Generator(np.random.Philox(key=5))
+    lg = rng.standard_normal((3, 40)).astype(np.float32)
+    a = _sample(lg, temp=1.0, seed=9, pos=4)
+    b = _sample(lg, temp=1.0, seed=9, pos=4)
+    assert (a == b).all()
+    # a row's sample is unchanged when its neighbours' logits change
+    lg2 = lg.copy()
+    lg2[0] = rng.standard_normal(40)
+    c = _sample(lg2, temp=1.0, seed=9, pos=4)
+    assert (c[1:] == a[1:]).all()
+
+
+def test_stop_hit_matches_suffix_only():
+    assert stop_hit([1, 2, 3], [(2, 3)]) == (2, 3)
+    assert stop_hit([1, 2, 3], [(1, 2)]) is None
+    assert stop_hit([3], [(3,), (1, 3)]) == (3,)
+    assert stop_hit([], [(3,)]) is None
+
+
+# ---------------------------------------------------------------------------
+# Engine integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              compute_dtype="float32")
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.Generator(np.random.Philox(key=11))
+    prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in (11, 19, 7)]
+    return cfg, params, prompts
+
+
+def _engine(cfg, params, **over):
+    kw = dict(page_size=4, max_slots=3, max_seq_len=64, chunk=16,
+              min_bucket=8)
+    kw.update(over)
+    return Engine(cfg, params, options=EngineOptions(**kw))
+
+
+SP = SamplingParams(temperature=0.8, top_k=8, top_p=0.95, seed=7)
+
+
+def test_sampling_deterministic_across_batch_compositions(setup):
+    """The same request + seed emits identical tokens whether it runs
+    alone, continuously batched with other requests, or preempted and
+    resumed mid-stream — the key serving-determinism guarantee."""
+    cfg, params, prompts = setup
+    alone = _engine(cfg, params)
+    r = alone.submit(prompts[0], max_new_tokens=8, sampling=SP)
+    alone.run_until_idle()
+    want = list(r.output)
+    assert len(want) == 8
+
+    batched = _engine(cfg, params)
+    r2 = batched.submit(prompts[0], max_new_tokens=8, sampling=SP)
+    batched.submit(prompts[1], max_new_tokens=6)        # greedy neighbour
+    batched.submit(prompts[2], max_new_tokens=7,
+                   sampling=SamplingParams(temperature=1.3, seed=99))
+    batched.run_until_idle()
+    assert r2.output == want
+
+    stormy = _engine(cfg, params, num_pages=10, preempt="recompute")
+    r3 = stormy.submit(prompts[0], max_new_tokens=8, sampling=SP)
+    stormy.submit(prompts[1], max_new_tokens=6)
+    stormy.submit(prompts[2], max_new_tokens=7,
+                  sampling=SamplingParams(temperature=1.3, seed=99))
+    stormy.run_until_idle()
+    assert stormy.preempts["recompute"] > 0
+    assert r3.output == want
+
+
+def test_seed_changes_sampled_stream(setup):
+    cfg, params, prompts = setup
+    eng = _engine(cfg, params)
+    a = eng.submit(prompts[0], max_new_tokens=8,
+                   sampling=dataclasses.replace(SP, seed=1))
+    b = eng.submit(prompts[0], max_new_tokens=8,
+                   sampling=dataclasses.replace(SP, seed=2))
+    eng.run_until_idle()
+    assert a.output != b.output
+
+
+def test_one_compile_across_sampling_settings(setup):
+    """Changing sampling parameters must not re-jit: decode is one
+    program, prefill one per bucket, regardless of settings."""
+    cfg, params, prompts = setup
+    eng = _engine(cfg, params)
+    eng.warmup()
+    compiles = eng.prefill_rejits
+    for i, sp in enumerate([SamplingParams(),
+                            SamplingParams(temperature=0.5, seed=3),
+                            SamplingParams(temperature=1.0, top_k=4),
+                            SamplingParams(temperature=1.0, top_p=0.5)]):
+        eng.submit(prompts[i % 3], max_new_tokens=4, sampling=sp)
+    eng.run_until_idle()
+    assert eng.prefill_rejits == compiles
+
+
+def test_stop_sequence_stops_and_streams(setup):
+    cfg, params, prompts = setup
+    ref_eng = _engine(cfg, params)
+    r = ref_eng.submit(prompts[0], max_new_tokens=6)
+    ref_eng.run_until_idle()
+    ref = list(r.output)
+
+    eng = _engine(cfg, params)
+    streamed = []
+    r2 = eng.submit(prompts[0], max_new_tokens=6, stop=[ref[1:3], [12345]],
+                    on_token=lambda t, _r: streamed.append(t))
+    eng.run_until_idle()
+    assert r2.output == ref[:3]                 # stopped at the match
+    assert r2.finish_reason == "stop"
+    assert streamed == r2.output
+    assert r2.token_times == sorted(r2.token_times)
+    assert len(r2.itl_s) == len(r2.output) - 1

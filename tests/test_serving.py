@@ -12,7 +12,8 @@ from repro.configs import get_config
 from repro.core import CPU_HOST, TPU_V5E, resolve_hw
 from repro.models import kv_cache, lm
 from repro.models.api import supports_paged
-from repro.serve import Engine, EngineOptions, RequestState
+from repro.serve import (Engine, EngineOptions, RequestState,
+                         dense_greedy_reference as ref_decode)
 
 PROMPT_LENS = (13, 29, 7, 21, 5)
 MAX_NEW = (6, 4, 8, 5, 7)
@@ -27,21 +28,6 @@ def _cfg(name):
         # the golden test relies on)
         moe = dataclasses.replace(moe, capacity_factor=8.0)
     return dataclasses.replace(cfg, compute_dtype="float32", moe=moe)
-
-
-def ref_decode(params, cfg, prompt, max_new):
-    """Golden reference: dense-cache sequential prefill + greedy decode
-    (the legacy serve.py loop, one request at a time)."""
-    toks = jnp.asarray(prompt)[None, :]
-    logits, cache = lm.prefill(params, {"tokens": toks}, cfg,
-                               max_len=len(prompt) + max_new,
-                               dtype=jnp.float32)
-    out = [int(jnp.argmax(logits[0, -1]))]
-    for _ in range(max_new - 1):
-        lg, cache = lm.decode_step(
-            params, cache, jnp.asarray([[out[-1]]], jnp.int32), cfg)
-        out.append(int(jnp.argmax(lg[0])))
-    return out
 
 
 @pytest.fixture(scope="module", params=["llama3-8b", "moe-gpt3-s"])
@@ -215,10 +201,13 @@ def test_engine_surfaces_kv_metrics(setup):
 # ---------------------------------------------------------------------------
 
 def test_admission_by_page_budget(setup):
+    """The conservative admission-blocking baseline (preempt="never"):
+    a request's whole budget is reserved up front, so a too-small pool
+    queues instead of preempting."""
     cfg, params, prompts, refs = setup
     # pool so small only one request fits at a time: budget 13+6=19 tokens
     # -> 5 pages; pool has 6 real pages
-    eng = _engine(cfg, params, num_pages=7, max_slots=3)
+    eng = _engine(cfg, params, num_pages=7, max_slots=3, preempt="never")
     r0 = eng.submit(prompts[0], max_new_tokens=MAX_NEW[0], arrival_s=0.0)
     r2 = eng.submit(prompts[2], max_new_tokens=MAX_NEW[2], arrival_s=0.0)
     eng.step()

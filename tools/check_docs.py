@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Docs CI gate: every CLI command shown in README.md / docs/*.md must
+parse (``--help`` smoke), and every relative markdown link must point at
+a file that exists.
+
+    PYTHONPATH=src python tools/check_docs.py [--root DIR]
+
+Command extraction: fenced code blocks are scanned for lines invoking
+``python -m <module> ...``, ``python <script>.py ...`` or
+``python -m pytest ...``. Each distinct target is run once with
+``--help`` (pytest with ``--version``) and must exit 0. Flags shown in
+the docs are also cross-checked against the target's ``--help`` text,
+so renaming a CLI flag without updating the docs fails CI.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+FENCE = re.compile(r"```(?:bash|sh|console)?\n(.*?)```", re.DOTALL)
+CMD = re.compile(r"python\s+(-m\s+[\w.]+|\S+\.py)((?:\s+\S+)*)")
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def md_files(root: str):
+    out = [os.path.join(root, "README.md")]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        out += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                      if f.endswith(".md"))
+    return [f for f in out if os.path.exists(f)]
+
+
+def extract_commands(text: str):
+    """(target, flags) pairs from fenced code blocks."""
+    cmds = []
+    for block in FENCE.findall(text):
+        for line in block.splitlines():
+            line = line.strip().rstrip("\\").strip()
+            m = CMD.search(line)
+            if m:
+                target = " ".join(m.group(1).split())
+                flags = [a for a in m.group(2).split()
+                         if a.startswith("--")]
+                cmds.append((target, flags))
+    return cmds
+
+
+def check_commands(root: str, files) -> list:
+    errors = []
+    by_target = {}
+    for f in files:
+        for target, flags in extract_commands(open(f).read()):
+            by_target.setdefault(target, {"flags": set(), "where": f})
+            by_target[target]["flags"].update(flags)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    for target, info in sorted(by_target.items()):
+        argv = [sys.executable] + target.split()
+        argv += ["--version"] if target == "-m pytest" else ["--help"]
+        r = subprocess.run(argv, cwd=root, env=env, capture_output=True,
+                           text=True, timeout=600)
+        if r.returncode != 0:
+            errors.append(f"{info['where']}: `python {target} --help` "
+                          f"exited {r.returncode}:\n{r.stderr[-800:]}")
+            continue
+        print(f"ok: python {target} --help")
+        if target == "-m pytest":
+            continue
+        for flag in sorted(info["flags"]):
+            bare = flag.split("=")[0]
+            if bare not in ("--help",) and bare not in r.stdout:
+                errors.append(f"{info['where']}: `python {target}` help "
+                              f"does not mention documented flag {bare}")
+    return errors
+
+
+def check_links(files) -> list:
+    errors = []
+    for f in files:
+        base = os.path.dirname(os.path.abspath(f))
+        for link in LINK.findall(open(f).read()):
+            if link.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = os.path.normpath(os.path.join(base, link.split("#")[0]))
+            if not os.path.exists(path):
+                errors.append(f"{f}: broken link -> {link}")
+            else:
+                print(f"ok: {f} -> {link}")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    args = ap.parse_args()
+    files = md_files(args.root)
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 1
+    print(f"checking {len(files)} files: "
+          f"{[os.path.relpath(f, args.root) for f in files]}")
+    errors = check_commands(args.root, files) + check_links(files)
+    if errors:
+        print("\n--- doc check failures ---", file=sys.stderr)
+        for e in errors:
+            print(e, file=sys.stderr)
+        return 1
+    print("docs OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
