@@ -22,6 +22,19 @@ report goodput (tokens of requests meeting the baseline's median-TTFT
 SLO per second), preemption counts, swap bytes and tail latency. The
 preemptive run is also checked token-exact against the dense golden
 loop.
+
+``--devices N`` runs the mesh-sharded scenario (default out:
+``BENCH_serving_sharded.json``): the same trace is replayed through a
+single-device engine and through an engine on an N-device dp x ep mesh
+(EP-sharded prefill, replicated psum decode, replicated paged KV — see
+``docs/distributed.md``), both over a constrained pool so preemption
+fires while sharded; both runs are checked token-exact against the
+dense golden loop. On CPU the benchmark re-execs itself with
+``--xla_force_host_platform_device_count=N`` when fewer than N devices
+are attached:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python benchmarks/serving.py --devices 8 --smoke
 """
 from __future__ import annotations
 
@@ -198,6 +211,92 @@ def run_overload(*, arch: str, requests: int, slots: int, chunk: int,
 
 
 # ---------------------------------------------------------------------------
+# Mesh-sharded scenario (--devices N)
+# ---------------------------------------------------------------------------
+
+def run_sharded(*, arch: str, devices: int, requests: int, slots: int,
+                chunk: int, page_size: int, prompt_max: int, gen_max: int,
+                seed: int, hw_name: str, preempt: str = "auto",
+                pool_budgets: float = 1.25) -> dict:
+    """Single-device vs mesh-sharded engine over one trace, both golden-
+    verified. The pool is constrained (like --overload) so the sharded
+    run also exercises preemption — offload round-trips must survive the
+    replicated pools."""
+    import time
+
+    cfg = _golden_cfg(arch)
+    hw = resolve_hw(hw_name)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    budget = prompt_max + gen_max
+    pages_per_budget = -(-budget // page_size)
+    num_pages = int(pool_budgets * pages_per_budget) + 1
+    common = dict(page_size=page_size, max_slots=slots, max_seq_len=budget,
+                  chunk=chunk, hw=hw, num_pages=num_pages, preempt=preempt)
+    trace = poisson_trace(requests, rate=1.0, vocab_size=cfg.vocab_size,
+                          prompt_len_range=(8, prompt_max),
+                          gen_len_range=(max(2, gen_max // 2), gen_max),
+                          seed=seed)
+    refs = _dense_refs(cfg, params, trace)
+
+    def one(n_devices: int):
+        opts = EngineOptions(devices=n_devices, **common)
+        engine = Engine(cfg, params, options=opts)
+        engine.warmup()
+        t0 = time.perf_counter()
+        replay(engine, trace, time_scale=0.0)       # drain a burst
+        wall = time.perf_counter() - t0
+        outs = [r.output
+                for r in sorted(engine.done, key=lambda r: r.rid)]
+        return engine, wall, outs == refs
+
+    single_engine, single_wall, single_exact = one(0)
+    sharded_engine, sharded_wall, sharded_exact = one(devices)
+    s = sharded_engine.stats()
+    return {
+        "scenario": "sharded",
+        "arch": cfg.name,
+        "hw": hw.name,
+        "devices": devices,
+        "ep_size": s["ep_size"],
+        "dp_size": s["dp_size"],
+        "requests": requests,
+        "slots": slots,
+        "chunk": chunk,
+        "page_size": page_size,
+        "num_pages": num_pages,
+        "preempt_policy": preempt,
+        "token_exact": sharded_exact,
+        "token_exact_single": single_exact,
+        "single": _engine_stats(single_engine, single_wall),
+        "sharded": _engine_stats(sharded_engine, sharded_wall),
+        # virtual CPU devices make this < 1; on real accelerators it is
+        # the EP-parallel prefill speedup
+        "sharded_vs_single_tok_s": (
+            (s["tokens_generated"] / sharded_wall)
+            / max(single_engine.stats()["tokens_generated"]
+                  / single_wall, 1e-12)),
+    }
+
+
+def _print_sharded(res: dict) -> None:
+    print(f"\nsharded: {res['arch']} on {res['hw']}, "
+          f"{res['devices']} devices = dp {res['dp_size']} x "
+          f"ep {res['ep_size']}, {res['requests']} requests, "
+          f"pool {res['num_pages']} pages")
+    for name in ("single", "sharded"):
+        r = res[name]
+        print(f"  {name:8s}: {r['tokens_per_s']:8.1f} tok/s | "
+              f"ttft p50 {r['p50_ttft_s']*1e3:.0f}ms | "
+              f"itl p50 {r['p50_itl_s']*1e3:.1f}ms | "
+              f"preempts {r['preempt_recompute']}r/"
+              f"{r['preempt_offload']}o | "
+              f"{r['prefill_compiles']} prefill compiles")
+    print(f"  sharded/single tok/s: {res['sharded_vs_single_tok_s']:.2f}x"
+          f" | token-exact vs dense golden: sharded={res['token_exact']} "
+          f"single={res['token_exact_single']}")
+
+
+# ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
 
@@ -270,32 +369,59 @@ def main():
     ap.add_argument("--overload", action="store_true",
                     help="overload scenario: blocking vs preemptive at "
                          "2x the sustainable rate on a constrained pool")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="mesh-sharded scenario: single-device vs an "
+                         "N-device dp x ep mesh over the same trace "
+                         "(0 = off); CPU re-execs with virtual host "
+                         "devices when fewer are attached")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI configuration")
-    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: BENCH_serving.json / "
+                         "BENCH_serving_overload.json / "
+                         "BENCH_serving_sharded.json by scenario)")
     args = ap.parse_args()
+
+    if args.overload and args.devices:
+        ap.error("--overload and --devices are separate scenarios")
+    if args.devices and args.devices < 2:
+        ap.error("--devices needs >= 2 devices to compare against the "
+                 "single-device engine (0 = off)")
+    if args.devices > 1:
+        from repro.compat import ensure_host_device_count
+        ensure_host_device_count(args.devices)
 
     profile = smoke if args.smoke else full
     kw = dict(arch=args.arch, seed=args.seed, hw_name=args.hw)
     for name in full:
         v = getattr(args, name)
         kw[name] = profile[name] if v is None else v
-    if args.overload:
+    if args.overload or args.devices:
+        # both scenarios drive their own arrivals over the constrained-
+        # pool sizing profile
         if args.rate is not None or args.time_scale != 1.0:
-            ap.error("--overload calibrates its own arrival rate; "
+            ap.error("--overload/--devices drive their own arrivals; "
                      "--rate/--time-scale do not apply")
         kw.pop("rate")
         for name, v in over["smoke" if args.smoke else "full"].items():
             if getattr(args, name) is None:
                 kw[name] = v
+    if args.overload:
+        out = args.out or "BENCH_serving_overload.json"
         res = run_overload(preempt=args.preempt, **kw)
         _print_overload(res)
+    elif args.devices:
+        out = args.out or "BENCH_serving_sharded.json"
+        res = run_sharded(devices=args.devices, preempt=args.preempt,
+                          **kw)
+        _print_sharded(res)
     else:
+        out = args.out or "BENCH_serving.json"
         res = run(time_scale=args.time_scale, preempt=args.preempt, **kw)
         _print_standard(res)
-    with open(args.out, "w") as f:
+    with open(out, "w") as f:
         json.dump(res, f, indent=2, sort_keys=True)
-    print(f"wrote {args.out}")
+    print(f"wrote {out}")
 
 
 if __name__ == "__main__":

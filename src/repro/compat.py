@@ -4,12 +4,21 @@ The repo targets current jax (``jax.make_mesh(..., axis_types=...)``,
 ``jax.set_mesh``, ``jax.shard_map``); older CPU containers pin 0.4.x
 where those live elsewhere or don't exist. Every call site goes through
 these helpers so both resolve identically.
+
+Also hosts :func:`ensure_host_device_count`, the CPU virtual-device
+shim the multi-device CLIs (``launch/serve --devices``,
+``benchmarks/serving.py --devices``) use to re-exec themselves with
+``--xla_force_host_platform_device_count`` when asked for more devices
+than are attached.
 """
 from __future__ import annotations
 
 from typing import Sequence
 
 import jax
+
+__all__ = ["ensure_host_device_count", "make_mesh", "set_mesh",
+           "shard_map"]
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]):
@@ -27,6 +36,39 @@ def set_mesh(mesh):
     if hasattr(jax, "set_mesh"):
         return jax.set_mesh(mesh)
     return mesh
+
+
+def ensure_host_device_count(n: int) -> None:
+    """Re-exec the current CLI with ``n`` virtual CPU devices.
+
+    XLA only honours ``--xla_force_host_platform_device_count`` before
+    the first jax import, which has already happened by the time a CLI
+    parses ``--devices N``. When fewer than ``n`` devices are attached
+    (and the backend is CPU), re-exec the same argv with the flag added
+    to ``XLA_FLAGS`` and exit with the child's status. No-op when
+    enough devices already exist; raises on non-CPU backends (real
+    accelerators cannot be conjured) or if a re-exec already happened.
+    """
+    import os
+    import subprocess
+    import sys
+
+    if n <= 1 or jax.device_count() >= n:
+        return
+    if jax.default_backend() != "cpu":
+        raise RuntimeError(
+            f"need {n} devices but only {jax.device_count()} "
+            f"{jax.default_backend()} device(s) are attached")
+    if os.environ.get("_REPRO_HOST_DEVICE_REEXEC"):
+        raise RuntimeError(
+            f"still only {jax.device_count()} devices after re-exec "
+            f"with --xla_force_host_platform_device_count={n}")
+    env = dict(os.environ, _REPRO_HOST_DEVICE_REEXEC="1")
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n}").strip()
+    raise SystemExit(
+        subprocess.call([sys.executable] + sys.argv, env=env))
 
 
 def shard_map(f, *, mesh, in_specs, out_specs):

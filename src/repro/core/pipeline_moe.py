@@ -25,6 +25,12 @@ Two distributed layouts:
 * ``replicated`` (decode): tokens replicated over the EP axis (batches at
   decode are far smaller than the mesh); each device computes only its
   local experts and the combine is a psum — no A2A on the critical path.
+
+Both layouts are live at inference time: the serving engine
+(``repro.serve``, see ``docs/distributed.md``) drives chunked prefill
+through the ``sharded`` path and continuous-batch decode through
+``replicated``, selected purely by ``mode`` — there is no separate
+serving fork of this module.
 """
 from __future__ import annotations
 
@@ -40,6 +46,8 @@ from repro.core.strategies import Strategy, wrap_chunk
 from repro.moe import dispatch as D
 from repro.moe import experts as E
 from repro.moe import router as R
+
+__all__ = ["capacity_for", "gather_expert_weights", "pipelined_moe"]
 
 
 def capacity_for(tokens: int, top_k: int, cf: float, num_experts: int,

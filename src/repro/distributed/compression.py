@@ -10,6 +10,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+__all__ = ["compress_with_feedback", "dequantize_int8", "quantize_int8"]
+
 
 def quantize_int8(x):
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True) if x.ndim else \

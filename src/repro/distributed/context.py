@@ -1,10 +1,26 @@
-"""Distribution context threaded through model apply functions."""
+"""Distribution context threaded through model apply functions.
+
+:class:`DistContext` bundles the device mesh with the logical-axis
+assignment (which mesh axes carry data, expert and tensor parallelism)
+and provides divisibility-aware activation sharding constraints. It is
+the single object the model stack consumes — layers never look at the
+mesh directly.
+
+Serving: :func:`make_serving_context` builds the dp x ep mesh the
+continuous-batching engine (``repro.serve``) runs on — expert-parallel
+prefill through ``pipelined_moe``'s ``sharded`` layout, replicated
+psum-combine decode. Mesh construction goes through ``repro.compat``
+(never ``jax.*`` mesh calls directly) so jax 0.4.x and current resolve
+identically.
+"""
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Tuple
 
 import jax
+
+__all__ = ["DistContext", "constrain", "ep_split", "make_serving_context"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,4 +75,51 @@ class DistContext:
 
 
 def constrain(dist: Optional[DistContext], x, dims):
+    """Module-level convenience: no-op when ``dist`` is None."""
     return x if dist is None else dist.constrain(x, dims)
+
+
+def ep_split(devices: int, num_experts: int) -> Tuple[int, int]:
+    """Factor ``devices`` into ``(dp, ep)`` for serving.
+
+    ``ep`` is the largest divisor of ``devices`` that also divides
+    ``num_experts`` (every device must own the same number of whole
+    experts); the rest of the machine becomes data parallelism. Dense
+    models (``num_experts == 0``) get ``ep = 1``.
+    """
+    assert devices >= 1
+    ep = 1
+    if num_experts > 0:
+        for d in range(min(devices, num_experts), 0, -1):
+            if devices % d == 0 and num_experts % d == 0:
+                ep = d
+                break
+    return devices // ep, ep
+
+
+def make_serving_context(devices: int, *,
+                         num_experts: int = 0) -> Optional[DistContext]:
+    """Mesh + context for mesh-sharded serving (``repro.serve``).
+
+    Builds a ``(data=dp, model=ep)`` mesh over the first ``devices``
+    jax devices via the ``repro.compat`` shims and returns a
+    :class:`DistContext` with ``ep_axis="model"`` (expert parallelism
+    only — ``tp_axis`` is None so attention stays unsharded and the
+    paged-KV pools replicate). Returns None for ``devices <= 1`` — the
+    caller's single-device path.
+    """
+    if devices <= 1:
+        return None
+    avail = len(jax.devices())
+    if avail < devices:
+        raise RuntimeError(
+            f"serving mesh needs {devices} devices but jax sees {avail}; "
+            f"on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{devices} before the first jax import (the serve CLI and "
+            f"benchmarks/serving.py re-exec themselves to do this)")
+    from repro.compat import make_mesh
+    dp, ep = ep_split(devices, num_experts)
+    mesh = make_mesh((dp, ep), ("data", "model"))
+    return DistContext(mesh=mesh, dp_axes=("data",),
+                       ep_axis="model" if ep > 1 else None,
+                       tp_axis=None)

@@ -26,6 +26,9 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import module
 
+__all__ = ["AxisVal", "Rules", "batch_shardings", "cache_shardings",
+           "like_params", "make_rules", "param_shardings"]
+
 AxisVal = Union[None, str, Tuple[str, ...]]
 
 

@@ -10,6 +10,11 @@ Two paths share one CLI:
 
       PYTHONPATH=src python -m repro.launch.serve --engine --requests 16
 
+  ``--devices N`` serves over an N-device dp x ep mesh (EP-sharded
+  prefill, replicated psum decode — see docs/distributed.md); on CPU
+  the launcher re-execs itself with virtual host devices when fewer
+  than N are attached.
+
 * default: the legacy fixed-batch loop (kept as the golden reference the
   engine is tested against), now with per-request ``max_new_tokens`` and
   EOS early exit — stopping is masked host-side so jitted shapes stay
@@ -94,7 +99,8 @@ def engine_loop(args, cfg, hw):
     opts = EngineOptions(page_size=args.page_size, max_slots=args.batch,
                          max_seq_len=args.prompt_len + args.gen,
                          chunk=args.chunk, hw=hw, preempt=args.preempt,
-                         num_pages=args.num_pages, measure=args.measure)
+                         num_pages=args.num_pages, measure=args.measure,
+                         devices=args.devices)
     sampling = None
     if args.temperature > 0:
         sampling = SamplingParams(temperature=args.temperature,
@@ -106,6 +112,9 @@ def engine_loop(args, cfg, hw):
                              eos_id=args.eos if args.eos >= 0 else None,
                              time_scale=args.time_scale, sampling=sampling)
     s = engine.stats()
+    if s["devices"] > 1:
+        print(f"mesh: {s['devices']} devices = dp {s['dp_size']} x "
+              f"ep {s['ep_size']} (EP-sharded prefill, replicated decode)")
     print(f"engine: {s['requests_done']} requests, "
           f"{s['tokens_generated']} tokens in {dt:.2f}s "
           f"({s['requests_done']/dt:.2f} req/s, "
@@ -165,6 +174,10 @@ def main():
                     choices=["auto", "wallclock", "simulate"],
                     help="engine: bucket (n, strategy) resolution measure "
                          "(auto = wallclock on non-CPU backends)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="engine: serve over an N-device dp x ep mesh "
+                         "(0 = single device); CPU re-execs with virtual "
+                         "host devices when fewer are attached")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="engine: sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -176,6 +189,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.devices > 1:
+        if not args.engine:
+            ap.error("--devices requires --engine (the legacy loop is "
+                     "single-device)")
+        from repro.compat import ensure_host_device_count
+        ensure_host_device_count(args.devices)
     hw = resolve_hw(args.hw)
     print(f"hw spec: {hw.name}")
     cfg = get_config(args.arch).reduced()

@@ -14,7 +14,11 @@ page-granular access primitives; page 0 is reserved as a write sink for
 masked (padding / inactive-slot) writes so jitted steps never branch on
 occupancy. ``extract_pages``/``insert_pages`` round-trip physical pages
 through host memory — the swap halves of the serving engine's
-preempt-by-offload path.
+preempt-by-offload path. Under a serving mesh the pools are replicated
+(one logical pool, one replica per device — see
+``serve.paged_kv.PagedKVCache``); ``extract_pages`` reads the
+replicated value and ``insert_pages(..., sharding=)`` writes it back
+without collapsing the layout.
 """
 from __future__ import annotations
 
@@ -169,17 +173,25 @@ def extract_pages(pools, page_ids):
         lambda leaf: np.asarray(leaf[:, idx]), pools)
 
 
-def insert_pages(pools, page_ids, host):
+def insert_pages(pools, page_ids, host, *, sharding=None):
     """Write host page copies back into the stacked pools (swap-in).
 
     Inverse of :func:`extract_pages`: ``host`` leaves are
     ``[n_periods, len(page_ids), ps, ...]``; returns new pools with those
-    physical pages overwritten.
+    physical pages overwritten. ``sharding`` (mesh-sharded serving)
+    places the host copies before the scatter so the updated pools keep
+    the pool's replicated layout instead of pulling everything through
+    one device.
     """
     idx = jnp.asarray(np.asarray(page_ids, np.int32))
-    return jax.tree_util.tree_map(
-        lambda leaf, h: leaf.at[:, idx].set(jnp.asarray(h, leaf.dtype)),
-        pools, host)
+
+    def one(leaf, h):
+        h = jnp.asarray(h, leaf.dtype)
+        if sharding is not None:
+            h = jax.device_put(h, sharding)
+        return leaf.at[:, idx].set(h)
+
+    return jax.tree_util.tree_map(one, pools, host)
 
 
 def tree_bytes(tree) -> int:

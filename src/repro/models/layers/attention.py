@@ -262,7 +262,8 @@ def apply(params, x, *, cfg: ArchConfig, positions, is_global: bool = True,
     a = cfg.attn
     if cache is not None and "k_pool" in cache:
         return _apply_paged(params, x, cfg=cfg, positions=positions,
-                            is_global=is_global, mode=mode, cache=cache)
+                            is_global=is_global, mode=mode, cache=cache,
+                            dist=dist)
     if a.mla is not None:
         return _apply_mla(params, x, cfg=cfg, positions=positions,
                           mode=mode, cache=cache)
@@ -335,7 +336,7 @@ def _append_cache(cache, k, v, window: int):
 # ---------------------------------------------------------------------------
 
 def _apply_paged(params, x, *, cfg: ArchConfig, positions, is_global: bool,
-                 mode: str, cache: dict):
+                 mode: str, cache: dict, dist=None):
     """Attention over a paged KV pool (``repro.serve``).
 
     ``cache``: ``k_pool``/``v_pool`` ``[P, ps, Kv, D]``, ``page_table``
@@ -349,7 +350,13 @@ def _apply_paged(params, x, *, cfg: ArchConfig, positions, is_global: bool,
     gathered view is position-contiguous, so sliding windows degrade to
     plain masking (no ring buffers) — paged pools always hold full
     positions.
+
+    Mesh-sharded serving (``dist``): the pools are replicated, so this
+    layer's math is device-local; the only hint GSPMD needs is to keep
+    the decode batch sharded over the dp axes (dropped automatically
+    when the slot count does not divide — ``DistContext.constrain``).
     """
+    from repro.distributed.context import constrain
     from repro.models import kv_cache as KV
 
     a = cfg.attn
@@ -360,6 +367,8 @@ def _apply_paged(params, x, *, cfg: ArchConfig, positions, is_global: bool,
 
     q, k, v = _proj_qkv(params, x, cfg)
     q, k = _rope_qk(q, k, cfg, positions, is_global=is_global)
+    if dist is not None and s == 1:
+        q = constrain(dist, q, ("dp", None, None, None))
 
     valid = cache.get("write_valid")
     k_pool = KV.scatter_pages(cache["k_pool"], cache["page_table"],

@@ -236,6 +236,12 @@ def prefill(params, batch, cfg: ArchConfig, max_len: int, dist=None,
 # token choice — greedy argmax or the masked temperature/top-k/top-p
 # sampler in repro.serve.sampling — to the engine's jitted step bodies,
 # so one compiled program serves every per-request sampling setting.
+#
+# ``dist`` (mesh-sharded serving) threads the engine's DistContext down
+# to the MoE layers: prefill chunks then run pipelined_moe's sharded
+# layout (tokens split over EP, real All-to-Alls) and decode the
+# replicated psum-combine layout — selected by mode alone, no separate
+# code path.
 # ---------------------------------------------------------------------------
 
 def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int,

@@ -35,12 +35,19 @@ Module map
                   per-request seeded streams; host-side stop matching.
 ``trace.py``      Poisson arrival traces + wall-clock ``replay``.
 
+Mesh-sharded serving (``EngineOptions.devices``): the engine builds a
+dp x ep mesh (``distributed.context.make_serving_context``), shards
+expert weights over EP, replicates the paged pools, and drives chunked
+prefill through ``pipelined_moe``'s sharded (All-to-All) layout and
+decode through the replicated psum layout — see ``docs/distributed.md``.
+
 Invariants (tested in ``tests/test_serving.py`` /
-``tests/test_preemption.py`` / ``tests/test_sampling.py``): paged +
-continuously batched greedy decode emits exactly the tokens of the dense
-sequential loop — including through recompute and offload preemptions;
-every page returns to the free list once the pool drains; masked writes
-only ever touch the sink page; a request's sampled tokens depend only on
+``tests/test_preemption.py`` / ``tests/test_sampling.py`` /
+``tests/test_serving_sharded.py``): paged + continuously batched greedy
+decode emits exactly the tokens of the dense sequential loop — including
+through recompute and offload preemptions, and on a device mesh; every
+page returns to the free list once the pool drains; masked writes only
+ever touch the sink page; a request's sampled tokens depend only on
 (request, seed), never on batch composition.
 """
 from repro.serve.adaptive import PrefillBucketAdaptive, force_adaptive

@@ -15,6 +15,18 @@ simulator by default, or the engine's wall-clock candidate timer
 (``EngineOptions.measure="wallclock"``, the auto choice on non-CPU
 backends — the same split the train-side ``AdaptiveOptions.measure``
 makes).
+
+Mesh-sharded serving: buckets stay keyed by **global** chunk token
+counts (the LRU of compiled steps is global-shaped too), while
+``shards`` (= the mesh's EP extent) makes the analytic *granularity*
+measure model each device's ``bucket / shards`` token share. A
+wall-clock ``measure_fn`` needs no such correction — it times the
+compiled *global* chunk, whose execution already contains the
+per-device split and the real All-to-Alls. The Eq. 10 *strategy*
+selection inside the Resolver still sees the global count — accepted,
+because memory-reuse strategies only change execution under training's
+``wrap_chunk`` remat; at serving time the strategy is inert (it is part
+of the cache key, nothing more).
 """
 from __future__ import annotations
 
@@ -23,7 +35,8 @@ import logging
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.configs.base import ArchConfig
-from repro.core.selector import Resolver
+from repro.core.pipeline_sim import simulate
+from repro.core.selector import Resolver, moe_workload
 from repro.core.types import TPU_V5E, HardwareSpec, Strategy
 
 log = logging.getLogger("repro.serve")
@@ -38,11 +51,20 @@ class PrefillBucketAdaptive:
                  ep_size: int = 1, dp: int = 1, min_bucket: int = 8,
                  max_bucket: int = 512,
                  measure_fn: Optional[Callable[[int, int, Strategy], float]]
-                 = None):
+                 = None, shards: int = 1):
         assert min_bucket > 0 and max_bucket >= min_bucket
         self.cfg = cfg
         self.min_bucket = min_bucket
         self.max_bucket = max_bucket
+        self.shards = max(1, int(shards))
+        if cfg.moe is not None and self.shards > 1 and measure_fn is None:
+            # analytic path under a mesh: model the per-device share of
+            # the bucket (the wall-clock path times the global chunk)
+            def measure_fn(b: int, n: int, strategy: Strategy,
+                           _cfg=cfg) -> float:
+                w = moe_workload(_cfg, max(1, b // self.shards), ep_size,
+                                 dp=dp)
+                return simulate(w, hw, n, strategy)
         self.resolver = (Resolver(cfg, ep_size=ep_size, hw=hw,
                                   measure_fn=measure_fn, dp=dp)
                          if cfg.moe is not None else None)

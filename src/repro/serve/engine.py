@@ -35,9 +35,24 @@ Bucket (n, strategy) resolution can measure candidates by wall clock
 (``EngineOptions.measure``): compiled prefill candidates are timed
 against the live pools (writes masked into the sink page) through the
 same LRU the serving steps use — the winner's program is already warm.
+
+Mesh-sharded serving (``EngineOptions.devices > 1``): the engine builds
+a ``(data=dp, model=ep)`` mesh through
+``distributed.context.make_serving_context`` (all mesh calls via the
+``repro.compat`` shims), shards the expert weights over the EP axis and
+replicates everything else, and threads the resulting ``DistContext``
+into both jitted step bodies. Chunked prefill then runs
+``pipelined_moe``'s **sharded** layout (tokens split over EP, real
+dispatch/combine All-to-Alls — which the wall-clock measure therefore
+times too) while decode runs the **replicated** psum-combine layout;
+the paged KV pools, page tables and lens are replicated across the
+mesh (see :class:`PagedKVCache`). Everything host-side — scheduler,
+allocator, preemption, offload — is unchanged: one logical engine, N
+devices under it. See ``docs/distributed.md``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import logging
 import time
@@ -47,10 +62,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.configs.base import ArchConfig
 from repro.core.memory_model import PreemptionCost
 from repro.core.strategies import host_offload_supported
 from repro.core.types import TPU_V5E, HardwareSpec, Strategy
+from repro.distributed.context import make_serving_context
 from repro.models.api import get_model, supports_paged
 from repro.serve.adaptive import PrefillBucketAdaptive, force_adaptive
 from repro.serve.paged_kv import PagedKVCache
@@ -74,8 +91,10 @@ class EngineOptions:
     chunk: int = 64                    # prefill chunk (tokens per step)
     min_bucket: int = 8
     hw: HardwareSpec = TPU_V5E
-    ep_size: int = 1
-    dp: int = 1
+    devices: int = 0                   # 0/1 = single device; N>1 = build
+                                       # a dp x ep mesh over N devices
+    ep_size: int = 1                   # resolver hints; overridden by the
+    dp: int = 1                        # mesh when devices > 1
     dtype: Optional[str] = None        # None = cfg.compute_dtype
     cache_size: int = 16               # LRU bound on compiled prefill steps
     adaptive: bool = True              # resolve (n, strategy) per bucket
@@ -103,9 +122,21 @@ class Engine:
             cfg = force_adaptive(cfg)
         self.cfg = cfg
         self.model = get_model(cfg)
+        # device mesh (devices > 1): expert weights sharded over EP,
+        # everything else (incl. the KV pools) replicated
+        self.dist = make_serving_context(
+            opts.devices,
+            num_experts=cfg.moe.num_experts if cfg.moe is not None else 0)
+        self._replicated = None
+        if self.dist is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._replicated = NamedSharding(self.dist.mesh,
+                                             PartitionSpec())
+        ep_size = self.dist.ep_size if self.dist else opts.ep_size
+        dp = self.dist.dp_size if self.dist else opts.dp
         if params is None:
             params = self.model.init(cfg, key or jax.random.PRNGKey(0))
-        self.params = params
+        self.params = self._place_params(params)
 
         num_pages = opts.num_pages or (
             opts.max_slots * opts.max_pages_per_seq + 1)
@@ -114,7 +145,7 @@ class Engine:
                                page_size=opts.page_size,
                                max_slots=opts.max_slots,
                                max_pages_per_seq=opts.max_pages_per_seq,
-                               dtype=dtype)
+                               dtype=dtype, dist=self.dist)
         self.scheduler = Scheduler(self.kv, chunk=opts.chunk,
                                    full_reserve=(opts.preempt == "never"))
         measure_fn = opts.measure_fn
@@ -125,9 +156,10 @@ class Engine:
         if measure_fn is None and mode == "wallclock":
             measure_fn = self._wallclock_measure
         self.adaptive = PrefillBucketAdaptive(
-            cfg, hw=opts.hw, ep_size=opts.ep_size, dp=opts.dp,
+            cfg, hw=opts.hw, ep_size=ep_size, dp=dp,
             min_bucket=min(opts.min_bucket, opts.chunk),
-            max_bucket=opts.chunk, measure_fn=measure_fn)
+            max_bucket=opts.chunk, measure_fn=measure_fn,
+            shards=ep_size)
         # forward FLOPs/token of the active parameter set, for the
         # offload-vs-recompute preemption cost model
         self._flops_per_token = 2.0 * self.model.count_params(
@@ -142,14 +174,64 @@ class Engine:
         self.done: List[Request] = []
         self.metrics: Dict[str, Any] = {}
 
+    # -- mesh plumbing ---------------------------------------------------
+    def _place_params(self, params):
+        """Place the parameter tree on the mesh: expert weights sharded
+        over the EP axis (matching ``moe.layer``'s shard_map in_specs, so
+        no resharding on entry), everything else replicated. Leaves keep
+        their single-device placement when there is no mesh."""
+        if self.dist is None:
+            return params
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh, ep = self.dist.mesh, self.dist.ep_size
+        repl = self._replicated
+
+        def place(path, leaf):
+            under_experts = any(
+                getattr(k, "key", None) == "experts" for k in path)
+            # stacked expert leaves: [num_periods, num_experts, ...]
+            if (ep > 1 and under_experts and leaf.ndim >= 2
+                    and leaf.shape[1] % ep == 0):
+                return jax.device_put(
+                    leaf, NamedSharding(mesh, P(None, "model")))
+            return jax.device_put(leaf, repl)
+
+        return jax.tree_util.tree_map_with_path(place, params)
+
+    def _put(self, x):
+        """Host value -> device array (replicated under a mesh), so every
+        step input carries one consistent committed sharding. Delegates
+        to the KV cache's placement policy — the single source of truth
+        for where step state lives."""
+        return self.kv.to_device(x)
+
+    def _mesh_scope(self):
+        """Context activating the mesh around traces/executions (the
+        jax-0.4.x resource env that bare-PartitionSpec constraints in
+        ``DistContext.constrain`` need)."""
+        if self.dist is None:
+            return contextlib.nullcontext()
+        return set_mesh(self.dist.mesh)
+
+    def _pin_pools(self, pools):
+        """Keep step outputs on the replicated pool layout — without the
+        constraint GSPMD may scatter the updated pools over whatever
+        layout the (EP-sharded) chunk activations suggest, and the next
+        step would recompile against it."""
+        if self.dist is None:
+            return pools
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x, self._replicated), pools)
+
     # -- jitted step bodies ---------------------------------------------
     def _decode_step(self, params, pools, page_table, lens, tokens, active,
                      temp, top_k, top_p, seed, pos):
         logits, new_pools = self.model.decode_step_paged(
             params, pools, page_table, lens, tokens, self.cfg,
-            active=active)
+            active=active, dist=self.dist)
         return sample_tokens(logits, temp, top_k, top_p, seed, pos), \
-            new_pools
+            self._pin_pools(new_pools)
 
     def _prefill_fn(self, bucket: int, rcfg: ArchConfig) -> Callable:
         m = rcfg.moe
@@ -160,9 +242,10 @@ class Engine:
             def body(params, pools, pt_row, pos0, toks, valid_len,
                      temp, top_k, top_p, seed, pos, _cfg=rcfg):
                 logits, new_pools = self.model.prefill_chunk_paged(
-                    params, pools, pt_row, pos0, toks, valid_len, _cfg)
+                    params, pools, pt_row, pos0, toks, valid_len, _cfg,
+                    dist=self.dist)
                 return sample_tokens(logits, temp, top_k, top_p, seed,
-                                     pos), new_pools
+                                     pos), self._pin_pools(new_pools)
             fn = jax.jit(body)
             self.prefill_rejits += 1
         self._prefill_fns[key] = fn
@@ -171,8 +254,7 @@ class Engine:
         return fn
 
     # -- sampling parameter arrays ---------------------------------------
-    @staticmethod
-    def _sample_args(reqs: Sequence[Optional[Request]]):
+    def _sample_args(self, reqs: Sequence[Optional[Request]]):
         """Per-slot sampling arrays for ``sample_tokens`` (None slots are
         masked-off: greedy with dummy state, output discarded)."""
         n = len(reqs)
@@ -188,8 +270,8 @@ class Engine:
             temp[i], top_k[i], top_p[i], seed[i] = (
                 sp.temperature, sp.top_k, sp.top_p, sp.seed)
             pos[i] = len(r.output)
-        return tuple(jnp.asarray(a) for a in (temp, top_k, top_p, seed,
-                                              pos))
+        return tuple(self._put(a) for a in (temp, top_k, top_p, seed,
+                                            pos))
 
     # -- serve-side wall-clock measurement -------------------------------
     def _wallclock_measure(self, b: int, n: int,
@@ -208,17 +290,19 @@ class Engine:
         fn = self._prefill_fn(b, rcfg)
         kv = self.kv
         args = (self.params, kv.pools,
-                jnp.zeros((1, kv.max_pages_per_seq), jnp.int32),
-                jnp.zeros((1,), jnp.int32),
-                jnp.zeros((1, b), jnp.int32), jnp.asarray(b, jnp.int32),
+                self._put(np.zeros((1, kv.max_pages_per_seq), np.int32)),
+                self._put(np.zeros((1,), np.int32)),
+                self._put(np.zeros((1, b), np.int32)),
+                self._put(np.asarray(b, np.int32)),
                 *self._sample_args([None]))
-        out = fn(*args)
-        jax.block_until_ready(out[0])            # compile + warm up
-        reps = max(1, self.opts.measure_steps)
-        t0 = time.perf_counter()
-        for _ in range(reps):
+        with self._mesh_scope():
             out = fn(*args)
-        jax.block_until_ready(out[0])
+            jax.block_until_ready(out[0])        # compile + warm up
+            reps = max(1, self.opts.measure_steps)
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = fn(*args)
+            jax.block_until_ready(out[0])
         return (time.perf_counter() - t0) / reps
 
     # -- request API -----------------------------------------------------
@@ -258,12 +342,14 @@ class Engine:
         the number of programs compiled."""
         kv = self.kv
         before = self.prefill_rejits
-        out = self._decode_fn(self.params, kv.pools,
-                              kv.device_page_table(), kv.device_lens(),
-                              jnp.zeros((kv.max_slots, 1), jnp.int32),
-                              jnp.zeros((kv.max_slots,), bool),
-                              *self._sample_args([None] * kv.max_slots))
-        jax.block_until_ready(out[0])
+        with self._mesh_scope():
+            out = self._decode_fn(
+                self.params, kv.pools,
+                kv.device_page_table(), kv.device_lens(),
+                self._put(np.zeros((kv.max_slots, 1), np.int32)),
+                self._put(np.zeros((kv.max_slots,), bool)),
+                *self._sample_args([None] * kv.max_slots))
+            jax.block_until_ready(out[0])
         buckets, c = set(), 1
         while c < self.scheduler.chunk:
             buckets.add(self.adaptive.bucket_of(c))
@@ -271,10 +357,13 @@ class Engine:
         buckets.add(self.adaptive.bucket_of(self.scheduler.chunk))
         for b in sorted(buckets):
             fn = self._prefill_fn(b, self.adaptive.cfg_for(b))
-            out = fn(self.params, kv.pools, kv.device_page_table(0),
-                     kv.device_lens(0), jnp.zeros((1, b), jnp.int32),
-                     jnp.asarray(0, jnp.int32), *self._sample_args([None]))
-            jax.block_until_ready(out[0])
+            with self._mesh_scope():
+                out = fn(self.params, kv.pools, kv.device_page_table(0),
+                         kv.device_lens(0),
+                         self._put(np.zeros((1, b), np.int32)),
+                         self._put(np.asarray(0, np.int32)),
+                         *self._sample_args([None]))
+                jax.block_until_ready(out[0])
         return 1 + self.prefill_rejits - before
 
     # -- preemption ------------------------------------------------------
@@ -365,10 +454,12 @@ class Engine:
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :c] = req.prefill_tokens[req.prefill_pos:
                                          req.prefill_pos + c]
-        tok, kv.pools = fn(self.params, kv.pools,
-                           kv.device_page_table(slot), kv.device_lens(slot),
-                           jnp.asarray(toks), jnp.asarray(c, jnp.int32),
-                           *self._sample_args([req]))
+        with self._mesh_scope():
+            tok, kv.pools = fn(self.params, kv.pools,
+                               kv.device_page_table(slot),
+                               kv.device_lens(slot), self._put(toks),
+                               self._put(np.asarray(c, np.int32)),
+                               *self._sample_args([req]))
         req.prefill_pos += c
         kv.lens[slot] += c
         self.scheduler.prefill_advanced(req)
@@ -407,10 +498,11 @@ class Engine:
             tokens[s, 0] = req.output[-1]
             active[s] = True
             by_slot[s] = req
-        toks, kv.pools = self._decode_fn(
-            self.params, kv.pools, kv.device_page_table(), kv.device_lens(),
-            jnp.asarray(tokens), jnp.asarray(active),
-            *self._sample_args(by_slot))
+        with self._mesh_scope():
+            toks, kv.pools = self._decode_fn(
+                self.params, kv.pools, kv.device_page_table(),
+                kv.device_lens(), self._put(tokens), self._put(active),
+                *self._sample_args(by_slot))
         toks = np.asarray(toks)
         now = time.perf_counter()
         for s in slots:
@@ -444,6 +536,9 @@ class Engine:
         return {
             "requests_done": len(self.done),
             "tokens_generated": sum(len(r.output) for r in self.done),
+            "devices": 1 if self.dist is None else self.dist.mesh.size,
+            "ep_size": 1 if self.dist is None else self.dist.ep_size,
+            "dp_size": 1 if self.dist is None else self.dist.dp_size,
             "engine_steps": self.step_count,
             "prefill_compiles": self.prefill_rejits,
             "p50_latency_s": pct(lat, 50),

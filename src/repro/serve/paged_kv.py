@@ -23,11 +23,22 @@ Invariants:
   copies its pages to host and returns them to the free list, and
   ``restore_slot`` later re-allocates (different physical pages are fine
   — the page table re-maps them) and copies the contents back.
+
+Mesh-sharded serving (``dist`` given): the pools, page table and lens
+are **replicated** across every device of the mesh — decode runs the
+replicated psum-combine MoE layout where every device attends all
+slots, so each device needs the whole pool. The allocator stays a
+single host-side free list (one logical pool, N physical replicas);
+``cache_bytes``/``used_bytes`` report *per-replica* bytes, with
+``replicas`` as the multiplier. Host-offload round-trips are unchanged:
+pages are extracted from (and re-inserted replicated into) the pools
+exactly as on one device.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -40,15 +51,22 @@ __all__ = ["PagedKVCache"]
 class PagedKVCache:
     def __init__(self, cfg: ArchConfig, *, num_pages: int, page_size: int,
                  max_slots: int, max_pages_per_seq: int,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, dist=None):
         assert num_pages >= 2, "need at least the sink page + one real page"
         self.cfg = cfg
         self.page_size = int(page_size)
         self.num_pages = int(num_pages)
         self.max_slots = int(max_slots)
         self.max_pages_per_seq = int(max_pages_per_seq)
+        self.dist = dist
+        self._replicated = None
+        if dist is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._replicated = NamedSharding(dist.mesh, PartitionSpec())
         self.pools: Any = kv_cache.init_paged_pools(cfg, num_pages,
                                                     page_size, dtype)
+        if self._replicated is not None:
+            self.pools = jax.device_put(self.pools, self._replicated)
         # page 0 reserved as the masked-write sink
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         self.page_table = np.zeros((max_slots, max_pages_per_seq), np.int32)
@@ -132,6 +150,8 @@ class PagedKVCache:
         need = self.pages_for(int(self.lens[slot]))
         assert pages and need >= 1, f"offload of empty slot {slot}"
         assert rid not in self._offloaded, f"rid {rid} already offloaded"
+        assert need <= len(pages), \
+            f"slot {slot} holds {len(pages)} pages < lens needs {need}"
         self._free.extend(reversed(pages[need:]))   # trim unused tail
         pages = self._slot_pages[slot] = pages[:need]
         host = kv_cache.extract_pages(self.pools, pages)
@@ -158,7 +178,8 @@ class PagedKVCache:
         assert self.pages_for(tokens) == need, \
             f"restore of {tokens} tokens into {need} pages"
         pages = [self._free.pop() for _ in range(need)]
-        self.pools = kv_cache.insert_pages(self.pools, pages, host)
+        self.pools = kv_cache.insert_pages(self.pools, pages, host,
+                                           sharding=self._replicated)
         self._slot_pages[slot] = pages
         self.page_table[slot, :] = 0
         self.page_table[slot, :need] = pages
@@ -181,15 +202,28 @@ class PagedKVCache:
     # -- device views ----------------------------------------------------
     # NOTE: always .copy() — jnp.asarray of a host numpy array can be
     # zero-copy on CPU, and the engine mutates page_table/lens in place
-    # while the dispatched step is still running asynchronously.
+    # while the dispatched step is still running asynchronously. Under a
+    # mesh the copies are device_put replicated, so every step input
+    # carries one consistent committed sharding (no jit cache churn).
+    def to_device(self, x):
+        """Host array -> device array (replicated under a mesh)."""
+        if self._replicated is not None:
+            return jax.device_put(x, self._replicated)
+        return jnp.asarray(x)
+
     def device_page_table(self, slot: Optional[int] = None):
         pt = (self.page_table if slot is None
               else self.page_table[slot:slot + 1])
-        return jnp.asarray(pt.copy())
+        return self.to_device(pt.copy())
 
     def device_lens(self, slot: Optional[int] = None):
         ln = self.lens if slot is None else self.lens[slot:slot + 1]
-        return jnp.asarray(ln.copy())
+        return self.to_device(ln.copy())
+
+    @property
+    def replicas(self) -> int:
+        """Physical copies of the pool (mesh devices; 1 unsharded)."""
+        return 1 if self.dist is None else self.dist.mesh.size
 
     # -- accounting ------------------------------------------------------
     @property

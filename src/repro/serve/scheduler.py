@@ -26,6 +26,14 @@ Policy:
   latency by one chunk instead of one whole prompt — the serving analogue
   of MPipeMoE's pipelining (keep both "streams" busy instead of letting a
   long prefill stall every running sequence).
+
+Mesh-sharded serving: the scheduler is deliberately device-count
+agnostic. It plans over the *logical* page pool and slot set — the
+engine replicates pages and page tables across the mesh, so one
+admission / preemption decision is valid on every device and no
+per-device bookkeeping exists to drift out of sync (the would-be
+distributed-consensus problem is designed away; see
+``docs/distributed.md``).
 """
 from __future__ import annotations
 

@@ -276,6 +276,30 @@ def test_allocator_property_preemption_storm(setup):
     run()
 
 
+def test_offload_trims_pages_grown_ahead_of_lens(setup):
+    """PR 3 gotcha regression: a slot can hold MORE pages than
+    ``pages_for(lens)`` — decode growth (or a prefill ``_ensure``) ran
+    ahead of a chunk that was then preempted away. Offload must trim the
+    unwritten tail back to the free list (not swap garbage), and the
+    restore must land on exactly ``pages_for(lens)`` pages."""
+    cfg, _, _, _ = setup
+    kv = PagedKVCache(cfg, num_pages=8, page_size=2, max_slots=2,
+                      max_pages_per_seq=4, dtype=np.float32)
+    kv.alloc_slot(0, 3)                  # 2 pages for 3 tokens
+    kv.grow_slot(0)
+    kv.grow_slot(0)                      # grown ahead: 4 pages held
+    kv.lens[0] = 3                       # ...but only 3 tokens cached
+    assert kv.slot_page_count(0) == 4 > kv.pages_for(int(kv.lens[0]))
+    nbytes = kv.offload_slot(0, rid=1)
+    assert kv.offloaded_pages(1) == 2    # tail trimmed, not swapped
+    assert nbytes == 2 * kv.page_bytes
+    assert kv.free_pages == kv.num_pages - 1   # every page came back
+    kv.restore_slot(1, 0, 3)             # lens-aligned restore succeeds
+    assert kv.slot_page_count(0) == 2
+    kv.free_slot(0)
+    _assert_drained(kv)
+
+
 def test_offload_restore_preserves_page_contents(setup):
     """Swap-out/swap-in round-trips exact page contents even when the
     restore lands on different physical pages."""

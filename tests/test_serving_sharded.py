@@ -1,0 +1,146 @@
+"""Mesh-sharded serving (8 fake CPU devices via subprocess, like
+test_distributed.py): the engine on a dp x ep mesh — EP-sharded chunked
+prefill through pipelined_moe's ``sharded`` layout, replicated
+psum-combine decode, replicated paged KV pools — must emit exactly the
+tokens of the single-device dense golden loop, including through
+recompute and offload preemption storms. Plus in-process unit tests for
+the mesh construction helpers (no multi-device requirement)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_COMMON = r"""
+import dataclasses, json
+import jax
+import numpy as np
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve import Engine, EngineOptions, dense_greedy_reference
+
+cfg = get_config('moe-gpt3-s').reduced()
+cfg = dataclasses.replace(
+    cfg, compute_dtype='float32',
+    moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+params = lm.init(cfg, jax.random.PRNGKey(0))
+rng = np.random.Generator(np.random.Philox(key=7))
+lens, max_new = (13, 29, 7, 21, 5), (6, 4, 8, 5, 7)
+prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+           for n in lens]
+refs = [dense_greedy_reference(params, cfg, p, m)
+        for p, m in zip(prompts, max_new)]
+
+def run_engine(**over):
+    kw = dict(page_size=4, max_slots=3, max_seq_len=64, chunk=16,
+              min_bucket=8, devices=8)
+    kw.update(over)
+    eng = Engine(cfg, params, options=EngineOptions(**kw))
+    for p, m in zip(prompts, max_new):
+        eng.submit(p, max_new_tokens=m, arrival_s=0.0)
+    eng.run_until_idle()
+    outs = [r.output for r in sorted(eng.done, key=lambda r: r.rid)]
+    return eng, outs
+"""
+
+_EXACT_SCRIPT = _COMMON + r"""
+eng, outs = run_engine()
+s = eng.stats()
+print(json.dumps({
+    'n_devices': len(jax.devices()),
+    'devices': s['devices'], 'ep': s['ep_size'], 'dp': s['dp_size'],
+    'token_exact': outs == refs,
+    'buckets': len(eng.adaptive.resolutions),
+    'kv_drained': eng.kv.free_pages == eng.kv.num_pages - 1,
+}))
+"""
+
+_STORM_SCRIPT = _COMMON + r"""
+out = {}
+for mode in ('recompute', 'offload'):
+    eng, outs = run_engine(num_pages=12, preempt=mode)
+    s = eng.stats()
+    out[mode] = {
+        'token_exact': outs == refs,
+        'preempts': eng.preempts[mode],
+        'other_mode_preempts': eng.preempts[
+            'offload' if mode == 'recompute' else 'recompute'],
+        'swap_out': s['swap_out_bytes'], 'swap_in': s['swap_in_bytes'],
+        'kv_drained': eng.kv.free_pages == eng.kv.num_pages - 1,
+        'offloaded_left': eng.kv.offloaded_count,
+    }
+print(json.dumps(out))
+"""
+
+
+def _run(script: str) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_sharded_engine_token_exact_vs_dense_golden():
+    """EP-parallel prefill + replicated decode on a 2x4 (dp x ep) mesh
+    emits exactly the single-device dense greedy tokens."""
+    res = _run(_EXACT_SCRIPT)
+    assert res["n_devices"] == 8 and res["devices"] == 8
+    # moe-gpt3-s-reduced has 4 experts -> ep=4, dp=2
+    assert res["ep"] == 4 and res["dp"] == 2
+    assert res["token_exact"]
+    assert res["buckets"] >= 2                  # mixed-length prompts
+    assert res["kv_drained"]
+
+
+@pytest.mark.slow
+def test_sharded_preemption_storm_token_exact():
+    """Recompute and offload preemption storms while sharded: the host
+    offload pool round-trips through the replicated device pools and
+    tokens stay exact."""
+    res = _run(_STORM_SCRIPT)
+    for mode in ("recompute", "offload"):
+        r = res[mode]
+        assert r["token_exact"], mode
+        assert r["preempts"] > 0 and r["other_mode_preempts"] == 0
+        assert r["kv_drained"] and r["offloaded_left"] == 0
+    assert res["offload"]["swap_out"] > 0
+    assert res["offload"]["swap_in"] == res["offload"]["swap_out"]
+    assert res["recompute"]["swap_out"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction helpers (single-device, in-process)
+# ---------------------------------------------------------------------------
+
+def test_ep_split_prefers_largest_expert_divisor():
+    from repro.distributed.context import ep_split
+    assert ep_split(8, 4) == (2, 4)       # moe-gpt3-s-reduced on 8 dev
+    assert ep_split(8, 64) == (1, 8)      # full-size paper MoE
+    assert ep_split(8, 6) == (4, 2)       # partial divisor
+    assert ep_split(8, 3) == (8, 1)       # nothing divides -> pure dp
+    assert ep_split(8, 0) == (8, 1)       # dense model
+    assert ep_split(1, 64) == (1, 1)
+
+
+def test_make_serving_context_single_device_is_none():
+    from repro.distributed.context import make_serving_context
+    assert make_serving_context(0) is None
+    assert make_serving_context(1, num_experts=64) is None
+
+
+def test_make_serving_context_rejects_missing_devices():
+    # the main test process sees exactly 1 device (conftest)
+    from repro.distributed.context import make_serving_context
+    with pytest.raises(RuntimeError, match="host_platform_device_count"):
+        make_serving_context(8, num_experts=4)
+
+
+def test_engine_options_devices_defaults_off():
+    from repro.serve import EngineOptions
+    assert EngineOptions().devices == 0

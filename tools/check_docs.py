@@ -11,6 +11,15 @@ Command extraction: fenced code blocks are scanned for lines invoking
 ``--help`` (pytest with ``--version``) and must exit 0. Flags shown in
 the docs are also cross-checked against the target's ``--help`` text,
 so renaming a CLI flag without updating the docs fails CI.
+
+Two pinned surfaces on top of the generic extraction:
+
+* ``REQUIRED_DOCS`` — the documentation tier itself; deleting (or
+  forgetting to add) one of these files fails the gate;
+* ``REQUIRED_FLAGS`` — load-bearing CLI flags (currently the
+  ``--devices`` mesh-sharded serving surface) that must BOTH exist in
+  the target's ``--help`` AND be shown in at least one documented
+  command, so the flag cannot silently drop out of either side.
 """
 from __future__ import annotations
 
@@ -24,9 +33,17 @@ FENCE = re.compile(r"```(?:bash|sh|console)?\n(.*?)```", re.DOTALL)
 CMD = re.compile(r"python\s+(-m\s+[\w.]+|\S+\.py)((?:\s+\S+)*)")
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
+REQUIRED_DOCS = ("README.md", "docs/architecture.md", "docs/serving.md",
+                 "docs/distributed.md", "benchmarks/trajectory/README.md")
+REQUIRED_FLAGS = {
+    "benchmarks/serving.py": ("--devices", "--smoke", "--overload"),
+    "-m repro.launch.serve": ("--devices", "--engine"),
+}
+
 
 def md_files(root: str):
-    out = [os.path.join(root, "README.md")]
+    out = [os.path.join(root, "README.md"),
+           os.path.join(root, "benchmarks", "trajectory", "README.md")]
     docs = os.path.join(root, "docs")
     if os.path.isdir(docs):
         out += sorted(os.path.join(docs, f) for f in os.listdir(docs)
@@ -59,6 +76,7 @@ def check_commands(root: str, files) -> list:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(root, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    help_texts = {}
     for target, info in sorted(by_target.items()):
         argv = [sys.executable] + target.split()
         argv += ["--version"] if target == "-m pytest" else ["--help"]
@@ -69,6 +87,7 @@ def check_commands(root: str, files) -> list:
                           f"exited {r.returncode}:\n{r.stderr[-800:]}")
             continue
         print(f"ok: python {target} --help")
+        help_texts[target] = r.stdout
         if target == "-m pytest":
             continue
         for flag in sorted(info["flags"]):
@@ -76,7 +95,37 @@ def check_commands(root: str, files) -> list:
             if bare not in ("--help",) and bare not in r.stdout:
                 errors.append(f"{info['where']}: `python {target}` help "
                               f"does not mention documented flag {bare}")
+    errors += check_required_flags(by_target, help_texts)
     return errors
+
+
+def check_required_flags(by_target: dict, help_texts: dict) -> list:
+    """Pinned CLI surfaces: each required flag must appear in the
+    target's --help AND in at least one documented command."""
+    errors = []
+    for target, flags in sorted(REQUIRED_FLAGS.items()):
+        if target not in by_target:
+            errors.append(f"required CLI `python {target}` is not shown "
+                          f"in any documented command")
+            continue
+        if target not in help_texts:
+            continue      # --help itself failed; already reported above
+        documented = {f.split("=")[0] for f in by_target[target]["flags"]}
+        for flag in flags:
+            if flag not in help_texts.get(target, ""):
+                errors.append(f"`python {target}` --help does not offer "
+                              f"required flag {flag}")
+            elif flag not in documented:
+                errors.append(f"required flag {flag} of `python {target}` "
+                              f"is not shown in any documented command")
+            else:
+                print(f"ok: required flag {target} {flag}")
+    return errors
+
+
+def check_required_docs(root: str) -> list:
+    return [f"required doc is missing: {rel}" for rel in REQUIRED_DOCS
+            if not os.path.exists(os.path.join(root, rel))]
 
 
 def check_links(files) -> list:
@@ -105,7 +154,8 @@ def main():
         return 1
     print(f"checking {len(files)} files: "
           f"{[os.path.relpath(f, args.root) for f in files]}")
-    errors = check_commands(args.root, files) + check_links(files)
+    errors = (check_required_docs(args.root)
+              + check_commands(args.root, files) + check_links(files))
     if errors:
         print("\n--- doc check failures ---", file=sys.stderr)
         for e in errors:
