@@ -35,6 +35,17 @@ are attached:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python benchmarks/serving.py --devices 8 --smoke
+
+``--devices N --kv-sharding dp`` runs the DP-sharded-KV scenario
+instead (default out: ``BENCH_serving_dp.json``): replicated vs
+DP-sharded pools on the same mesh and trace, reporting (a) per-device
+peak KV bytes under the same load with ample pools (sharded is ~1/dp of
+replicated) and (b) concurrent requests admitted before the first
+preemption at equal **per-device** page budget (sharded admits ~dp×).
+All four runs are golden-verified:
+
+    PYTHONPATH=src python benchmarks/serving.py --devices 8 \
+        --kv-sharding dp --smoke --slots 8
 """
 from __future__ import annotations
 
@@ -73,6 +84,11 @@ def _engine_stats(engine, wall_s: float) -> dict:
         "swap_in_bytes": s["swap_in_bytes"],
         "cache_bytes": s["cache_bytes"],
         "peak_kv_used_bytes": s["peak_kv_used_bytes"],
+        "per_device_cache_bytes": s["per_device_cache_bytes"],
+        "per_device_peak_kv_used_bytes":
+            s["per_device_peak_kv_used_bytes"],
+        "kv_shards": s["kv_shards"],
+        "peak_running_preempt_free": s["peak_running_preempt_free"],
         "resolutions": s["resolutions"],
     }
 
@@ -278,6 +294,124 @@ def run_sharded(*, arch: str, devices: int, requests: int, slots: int,
     }
 
 
+# ---------------------------------------------------------------------------
+# DP-sharded KV scenario (--devices N --kv-sharding dp)
+# ---------------------------------------------------------------------------
+
+def run_dp(*, arch: str, devices: int, requests: int, slots: int,
+           chunk: int, page_size: int, prompt_max: int, gen_max: int,
+           seed: int, hw_name: str, pool_budgets: float = 1.25) -> dict:
+    """Replicated vs DP-sharded paged KV pools on the same mesh, same
+    trace, every run golden-verified. Two paired comparisons measure the
+    two halves of the headline claim:
+
+    * **ample pools** (worst-case sizing, nothing preempts): the same
+      workload's peak KV residency per device — DP-sharded is
+      ``~1/dp`` of replicated, because each device holds only its
+      shard's pages instead of every page;
+    * **constrained pools at equal per-device budget** (the blocking
+      ``preempt="never"`` baseline, so admission capacity is the thing
+      measured): replicated can use only one device's worth of pages
+      globally, DP-sharded aggregates ``dp`` of them — it admits
+      ``~dp×`` the concurrent requests before anything would preempt.
+
+    The trace is **uniform-budget** (every request is prompt_max +
+    gen_max) so the capacity comparison is structural, not
+    trace-lottery: each engine admits exactly
+    ``floor(usable_pages / budget_pages)`` requests per shard.
+    """
+    import time
+
+    cfg = _golden_cfg(arch)
+    hw = resolve_hw(hw_name)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    budget = prompt_max + gen_max
+    pages_per_budget = -(-budget // page_size)
+    # per-DEVICE page budget for the constrained comparison (~1.25
+    # request budgets, like --overload)
+    per_dev_pages = int(pool_budgets * pages_per_budget) + 1
+    common = dict(page_size=page_size, max_slots=slots, max_seq_len=budget,
+                  chunk=chunk, hw=hw, devices=devices)
+    trace = poisson_trace(requests, rate=1.0, vocab_size=cfg.vocab_size,
+                          prompt_len_range=(prompt_max, prompt_max),
+                          gen_len_range=(gen_max, gen_max),
+                          seed=seed)
+    refs = _dense_refs(cfg, params, trace)
+
+    def one(kv_sharding: str, num_pages: int, preempt: str):
+        opts = EngineOptions(kv_sharding=kv_sharding, num_pages=num_pages,
+                             preempt=preempt, **common)
+        engine = Engine(cfg, params, options=opts)
+        engine.warmup()
+        t0 = time.perf_counter()
+        replay(engine, trace, time_scale=0.0)       # drain a burst
+        wall = time.perf_counter() - t0
+        outs = [r.output
+                for r in sorted(engine.done, key=lambda r: r.rid)]
+        return dict(_engine_stats(engine, wall), token_exact=outs == refs,
+                    num_pages=engine.kv.num_pages), engine
+
+    # ample pools: measure per-device peak residency of the same load
+    amp_repl, eng = one("replicated", 0, "auto")
+    dp_size = eng.stats()["dp_size"]
+    amp_dp, _ = one("dp", 0, "auto")
+    # constrained pools at equal per-device budget: measure admission
+    # capacity with the blocking baseline (no preemption noise)
+    con_repl, _ = one("replicated", per_dev_pages, "never")
+    con_dp, _ = one("dp", dp_size * per_dev_pages, "never")
+    return {
+        "scenario": "serving_dp",
+        "arch": cfg.name,
+        "hw": hw.name,
+        "devices": devices,
+        "dp_size": dp_size,
+        "ep_size": eng.stats()["ep_size"],
+        "requests": requests,
+        "slots": slots,
+        "chunk": chunk,
+        "page_size": page_size,
+        "per_device_pool_pages": per_dev_pages,
+        "token_exact": all(r["token_exact"] for r in
+                           (amp_repl, amp_dp, con_repl, con_dp)),
+        "ample": {
+            "replicated": amp_repl,
+            "dp": amp_dp,
+            # the headline: per-device peak KV bytes under the same load
+            "per_device_peak_ratio": (
+                amp_dp["per_device_peak_kv_used_bytes"]
+                / max(amp_repl["per_device_peak_kv_used_bytes"], 1)),
+        },
+        "constrained": {
+            "replicated": con_repl,
+            "dp": con_dp,
+            # concurrent requests admitted before the first would-be
+            # preemption, at equal per-device page budget
+            "admitted_replicated": con_repl["peak_running_preempt_free"],
+            "admitted_dp": con_dp["peak_running_preempt_free"],
+            "admitted_ratio": (con_dp["peak_running_preempt_free"]
+                               / max(con_repl["peak_running_preempt_free"],
+                                     1)),
+        },
+    }
+
+
+def _print_dp(res: dict) -> None:
+    a, c = res["ample"], res["constrained"]
+    print(f"\nserving_dp: {res['arch']} on {res['hw']}, "
+          f"{res['devices']} devices = dp {res['dp_size']} x "
+          f"ep {res['ep_size']}, {res['requests']} requests")
+    print(f"  ample pools   — per-device peak KV: "
+          f"replicated {a['replicated']['per_device_peak_kv_used_bytes']/2**20:.2f}MiB"
+          f" vs dp {a['dp']['per_device_peak_kv_used_bytes']/2**20:.2f}MiB"
+          f" ({a['per_device_peak_ratio']:.2f}x, ~1/dp expected)")
+    print(f"  equal budget  — concurrent requests before first "
+          f"preemption: replicated {c['admitted_replicated']} vs dp "
+          f"{c['admitted_dp']} ({c['admitted_ratio']:.1f}x, ~dp "
+          f"expected) at {res['per_device_pool_pages']} pages/device")
+    print(f"  token-exact vs dense golden (all 4 runs): "
+          f"{res['token_exact']}")
+
+
 def _print_sharded(res: dict) -> None:
     print(f"\nsharded: {res['arch']} on {res['hw']}, "
           f"{res['devices']} devices = dp {res['dp_size']} x "
@@ -364,7 +498,10 @@ def main():
     ap.add_argument("--hw", default="auto")
     ap.add_argument("--time-scale", type=float, default=1.0,
                     help="arrival time multiplier (0 = all at once)")
-    ap.add_argument("--preempt", default="auto",
+    # default None so "explicitly asked for a policy" is detectable —
+    # the --kv-sharding dp scenario drives its own policies and must
+    # reject the flag rather than silently drop it
+    ap.add_argument("--preempt", default=None,
                     choices=["auto", "recompute", "offload", "never"])
     ap.add_argument("--overload", action="store_true",
                     help="overload scenario: blocking vs preemptive at "
@@ -374,6 +511,14 @@ def main():
                          "N-device dp x ep mesh over the same trace "
                          "(0 = off); CPU re-execs with virtual host "
                          "devices when fewer are attached")
+    ap.add_argument("--kv-sharding", default="replicated",
+                    choices=["replicated", "dp"],
+                    help="with --devices N: 'dp' switches to the "
+                         "DP-sharded-KV scenario (replicated vs "
+                         "dp-sharded pools on the same mesh: per-device "
+                         "peak KV bytes and admission capacity at equal "
+                         "per-device budget; out defaults to "
+                         "BENCH_serving_dp.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI configuration")
     ap.add_argument("--out", default=None,
@@ -384,6 +529,13 @@ def main():
 
     if args.overload and args.devices:
         ap.error("--overload and --devices are separate scenarios")
+    if args.kv_sharding == "dp" and not args.devices:
+        ap.error("--kv-sharding dp needs --devices N (the DP-sharded "
+                 "scenario runs on a mesh)")
+    if args.kv_sharding == "dp" and args.preempt is not None:
+        ap.error("--kv-sharding dp drives its own preempt policies "
+                 "(auto for the ample-pool runs, never for the "
+                 "capacity comparison); --preempt does not apply")
     if args.devices and args.devices < 2:
         ap.error("--devices needs >= 2 devices to compare against the "
                  "single-device engine (0 = off)")
@@ -408,16 +560,22 @@ def main():
                 kw[name] = v
     if args.overload:
         out = args.out or "BENCH_serving_overload.json"
-        res = run_overload(preempt=args.preempt, **kw)
+        res = run_overload(preempt=args.preempt or "auto", **kw)
         _print_overload(res)
+    elif args.devices and args.kv_sharding == "dp":
+        out = args.out or "BENCH_serving_dp.json"
+        res = run_dp(devices=args.devices, **kw)
+        _print_dp(res)
     elif args.devices:
         out = args.out or "BENCH_serving_sharded.json"
-        res = run_sharded(devices=args.devices, preempt=args.preempt,
+        res = run_sharded(devices=args.devices,
+                          preempt=args.preempt or "auto",
                           **kw)
         _print_sharded(res)
     else:
         out = args.out or "BENCH_serving.json"
-        res = run(time_scale=args.time_scale, preempt=args.preempt, **kw)
+        res = run(time_scale=args.time_scale,
+                  preempt=args.preempt or "auto", **kw)
         _print_standard(res)
     with open(out, "w") as f:
         json.dump(res, f, indent=2, sort_keys=True)

@@ -93,10 +93,20 @@ class PreemptionCost:
       more, at ``mfu`` fraction of device peak;
     * offload: copy ``bytes_held`` of pages to host now and back at
       resume — pay ``2 * bytes / host_bw``, degraded by the memcpy
-      interference factor ``eta`` (paper Fig. 3).
+      interference factor ``eta`` (paper Fig. 3) and divided across
+      ``link_shards`` concurrent swap streams.
 
     Both costs are *added latency for this request*; the engine picks the
     argmin per victim, gated by host-offload capability.
+
+    Per-shard capacity (DP-sharded KV pools): with the pool split into
+    ``dp`` independent per-device shards, pool-dry — and therefore
+    preemption — fires per shard, so up to ``dp`` victims can be
+    swapping over the one host link at once. ``link_shards`` models that
+    contention: the effective per-victim link bandwidth is
+    ``host_bw / link_shards``, which shifts the crossover toward
+    recompute as the machine scales out. With replicated pools (one
+    logical shard) it is 1 and the PR 3 model is recovered exactly.
     """
     tokens_cached: int
     bytes_held: int
@@ -105,6 +115,7 @@ class PreemptionCost:
     host_bw: float               # host link B/s
     mfu: float = 0.5             # achieved fraction of peak at re-prefill
     eta: float = 0.95            # memcpy interference (Interference.eta)
+    link_shards: int = 1         # KV shards contending for the host link
 
     @property
     def recompute_s(self) -> float:
@@ -113,7 +124,8 @@ class PreemptionCost:
 
     @property
     def offload_s(self) -> float:
-        return 2.0 * self.bytes_held / max(self.host_bw * self.eta, 1.0)
+        bw = self.host_bw * self.eta / max(self.link_shards, 1)
+        return 2.0 * self.bytes_held / max(bw, 1.0)
 
     @property
     def choice(self) -> str:

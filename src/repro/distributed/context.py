@@ -51,6 +51,30 @@ class DistContext:
             out *= self.mesh.shape[a]
         return out
 
+    def named_sharding(self, *dims: Optional[str]):
+        """:class:`NamedSharding` over the mesh for logical per-axis
+        roles — one entry per array dimension, each ``'dp' | 'ep' |
+        'tp' | None``. This is the placement-side sibling of
+        :meth:`constrain` (which hints activations *inside* a jitted
+        program): use it for ``device_put`` of step *inputs* so every
+        host array enters jit with one committed layout. The serving
+        engine's DP-sharded KV pools place through it
+        (``serve.paged_kv``: pools ``(None, 'dp')`` over the page axis,
+        page tables ``('dp', None)`` over the slot axis)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        entries = []
+        for d in dims:
+            if d == "dp":
+                ax = self.dp_axes
+                entries.append(ax if len(ax) > 1 else ax[0])
+            elif d == "ep":
+                entries.append(self.ep_axis)
+            elif d == "tp":
+                entries.append(self.tp_axis)
+            else:
+                entries.append(None)
+        return NamedSharding(self.mesh, P(*entries))
+
     def constrain(self, x, dims: Tuple[Optional[str], ...]):
         """Activation sharding constraint. dims entries: 'dp' | 'tp' |
         None. Drops an entry when the dim isn't divisible (e.g. batch=1

@@ -100,7 +100,8 @@ def engine_loop(args, cfg, hw):
                          max_seq_len=args.prompt_len + args.gen,
                          chunk=args.chunk, hw=hw, preempt=args.preempt,
                          num_pages=args.num_pages, measure=args.measure,
-                         devices=args.devices)
+                         devices=args.devices,
+                         kv_sharding=args.kv_sharding)
     sampling = None
     if args.temperature > 0:
         sampling = SamplingParams(temperature=args.temperature,
@@ -113,8 +114,12 @@ def engine_loop(args, cfg, hw):
                              time_scale=args.time_scale, sampling=sampling)
     s = engine.stats()
     if s["devices"] > 1:
+        kvs = (f"DP-sharded KV x{s['kv_shards']}"
+               if s["kv_shards"] > 1 else "replicated KV")
         print(f"mesh: {s['devices']} devices = dp {s['dp_size']} x "
-              f"ep {s['ep_size']} (EP-sharded prefill, replicated decode)")
+              f"ep {s['ep_size']} (EP-sharded prefill, {kvs}; "
+              f"{s['per_device_cache_bytes']/2**20:.2f}MiB KV pool "
+              f"per device)")
     print(f"engine: {s['requests_done']} requests, "
           f"{s['tokens_generated']} tokens in {dt:.2f}s "
           f"({s['requests_done']/dt:.2f} req/s, "
@@ -178,6 +183,14 @@ def main():
                     help="engine: serve over an N-device dp x ep mesh "
                          "(0 = single device); CPU re-execs with virtual "
                          "host devices when fewer are attached")
+    ap.add_argument("--kv-sharding", default="replicated",
+                    choices=["replicated", "dp"],
+                    help="engine: paged-KV pool layout over the mesh — "
+                         "'replicated' (every device holds the whole "
+                         "pool) or 'dp' (pages sharded over the data "
+                         "axis: per-device KV drops dp-fold, per-shard "
+                         "free lists, sticky least-loaded placement); "
+                         "'dp' needs --devices > 1")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="engine: sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -195,6 +208,9 @@ def main():
                      "single-device)")
         from repro.compat import ensure_host_device_count
         ensure_host_device_count(args.devices)
+    elif args.kv_sharding == "dp":
+        ap.error("--kv-sharding dp shards the KV pools over the mesh "
+                 "data axis; it requires --devices > 1")
     hw = resolve_hw(args.hw)
     print(f"hw spec: {hw.name}")
     cfg = get_config(args.arch).reduced()

@@ -164,7 +164,9 @@ def extract_pages(pools, page_ids):
     pools: per-period tree of ``[n_periods, P, ps, ...]`` leaves;
     ``page_ids``: sequence of physical page indices. Returns a matching
     tree of numpy arrays ``[n_periods, len(page_ids), ps, ...]`` — the
-    swap-out half of preempt-by-offload (``repro.serve``). The gather
+    swap-out half of preempt-by-offload (``repro.serve``). Works against
+    replicated *and* page-sharded pools alike — the gather is a global-
+    index read, so a DP shard's pages extract identically. The gather
     produces a fresh immutable buffer, so a zero-copy ``np.asarray`` view
     on CPU is safe (unlike the live page-table case, nothing mutates it).
     """
@@ -173,15 +175,20 @@ def extract_pages(pools, page_ids):
         lambda leaf: np.asarray(leaf[:, idx]), pools)
 
 
-def insert_pages(pools, page_ids, host, *, sharding=None):
+def insert_pages(pools, page_ids, host, *, sharding=None,
+                 out_sharding=None):
     """Write host page copies back into the stacked pools (swap-in).
 
     Inverse of :func:`extract_pages`: ``host`` leaves are
     ``[n_periods, len(page_ids), ps, ...]``; returns new pools with those
     physical pages overwritten. ``sharding`` (mesh-sharded serving)
     places the host copies before the scatter so the updated pools keep
-    the pool's replicated layout instead of pulling everything through
-    one device.
+    the pool's layout instead of pulling everything through one device.
+    ``out_sharding`` re-pins the *result* — needed when the pool layout
+    differs from the host copies' (DP-sharded pools: pages split over the
+    ``data`` axis while an offloaded request's pages all belong to one
+    shard, so the host copy enters replicated and the updated pool must
+    come back out page-sharded).
     """
     idx = jnp.asarray(np.asarray(page_ids, np.int32))
 
@@ -189,7 +196,10 @@ def insert_pages(pools, page_ids, host, *, sharding=None):
         h = jnp.asarray(h, leaf.dtype)
         if sharding is not None:
             h = jax.device_put(h, sharding)
-        return leaf.at[:, idx].set(h)
+        out = leaf.at[:, idx].set(h)
+        if out_sharding is not None:
+            out = jax.device_put(out, out_sharding)
+        return out
 
     return jax.tree_util.tree_map(one, pools, host)
 
@@ -200,14 +210,19 @@ def tree_bytes(tree) -> int:
                for x in jax.tree_util.tree_leaves(tree))
 
 
-def scatter_pages(pool, page_table, positions, values, valid=None):
+def scatter_pages(pool, page_table, positions, values, valid=None,
+                  sink=0):
     """Write ``values[b, s]`` at absolute position ``positions[b, s]`` of
     sequence ``b``'s paged cache.
 
     pool ``[P, ps, ...]``; page_table ``[B, NP]``; positions ``[B, S]``
     int32; values ``[B, S, ...]``. Writes masked out by ``valid`` (or
-    falling past the table) are redirected to reserved page 0, so the
-    scatter stays branch-free under jit.
+    falling past the table) are redirected to the reserved ``sink`` page
+    — scalar page 0 by default, or a per-sequence ``[B]`` array when
+    each sequence has its own sink (the DP-sharded pools reserve local
+    page 0 of *every* shard so masked writes stay shard-local instead of
+    crossing to global page 0) — so the scatter stays branch-free under
+    jit.
     """
     ps = pool.shape[1]
     np_ = page_table.shape[1]
@@ -216,7 +231,8 @@ def scatter_pages(pool, page_table, positions, values, valid=None):
     ok = positions < np_ * ps
     if valid is not None:
         ok = ok & valid
-    page = jnp.where(ok, page, 0)
+    sink = jnp.asarray(sink, page.dtype)
+    page = jnp.where(ok, page, sink if sink.ndim == 0 else sink[:, None])
     off = positions % ps
     flat = values.reshape((-1,) + values.shape[2:]).astype(pool.dtype)
     return pool.at[page.reshape(-1), off.reshape(-1)].set(flat)

@@ -342,7 +342,10 @@ def _apply_paged(params, x, *, cfg: ArchConfig, positions, is_global: bool,
     ``cache``: ``k_pool``/``v_pool`` ``[P, ps, Kv, D]``, ``page_table``
     ``[B, NP]``, ``lens`` ``[B]`` (tokens already cached per sequence)
     and optionally ``write_valid`` ``[B, S]`` (mask for padding /
-    inactive-slot writes — redirected to reserved page 0).
+    inactive-slot writes) plus ``write_sink`` ``[B]`` (the reserved page
+    those masked writes are redirected to — page 0 by default; the
+    DP-sharded pools hand each slot its own shard's sink so masked
+    traffic never crosses shards).
 
     Decode (S == 1) runs every slot of the continuous batch with its own
     cache length; chunked prefill (S > 1) requires B == 1 and attends the
@@ -371,10 +374,12 @@ def _apply_paged(params, x, *, cfg: ArchConfig, positions, is_global: bool,
         q = constrain(dist, q, ("dp", None, None, None))
 
     valid = cache.get("write_valid")
+    sink = cache.get("write_sink")
+    sink = 0 if sink is None else sink
     k_pool = KV.scatter_pages(cache["k_pool"], cache["page_table"],
-                              positions, k, valid)
+                              positions, k, valid, sink=sink)
     v_pool = KV.scatter_pages(cache["v_pool"], cache["page_table"],
-                              positions, v, valid)
+                              positions, v, valid, sink=sink)
     new_cache = {"k_pool": k_pool, "v_pool": v_pool}
 
     kf = KV.gather_pages(k_pool, cache["page_table"])   # [B, NP*ps, Kv, D]

@@ -111,7 +111,8 @@ def forward(params, batch, cfg: ArchConfig, *, mode: str = "train",
 
     roles = cfg.layer_roles()
     shared_kv = ({"page_table": cache["page_table"], "lens": cache["lens"],
-                  "write_valid": cache.get("write_valid")}
+                  "write_valid": cache.get("write_valid"),
+                  "write_sink": cache.get("write_sink")}
                  if paged else None)
 
     def period_body(carry, xs):
@@ -253,36 +254,45 @@ def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int,
 
 
 def decode_step_paged(params, pools, page_table, lens, tokens,
-                      cfg: ArchConfig, active=None, dist=None):
+                      cfg: ArchConfig, active=None, dist=None,
+                      write_sink=None):
     """One decode step over the whole continuous batch.
 
     pools: paged cache tree; page_table ``[slots, NP]``; lens ``[slots]``
     (tokens cached per slot); tokens ``[slots, 1]``; ``active`` masks
     finished / mid-prefill slots so their KV writes land in the reserved
-    sink page. Returns (last-token logits ``[slots, vocab]``, new pools).
+    sink page — page 0, or per-slot ``write_sink`` ``[slots]`` when each
+    DP shard reserves its own sink. Returns (last-token logits
+    ``[slots, vocab]``, new pools).
     """
     cache = {"layers": pools, "page_table": page_table, "lens": lens}
     if active is not None:
         cache["write_valid"] = active[:, None]
+    if write_sink is not None:
+        cache["write_sink"] = write_sink
     logits, _, new_cache = forward(params, {"tokens": tokens}, cfg,
                                    mode="decode", cache=cache, dist=dist)
     return logits[:, -1], new_cache["layers"]
 
 
 def prefill_chunk_paged(params, pools, page_table, pos0, tokens, valid_len,
-                        cfg: ArchConfig, dist=None):
+                        cfg: ArchConfig, dist=None, write_sink=None):
     """One chunked-prefill step for a single sequence.
 
     tokens ``[1, C]`` (bucket-padded); page_table ``[1, NP]``; pos0
     ``[1]`` = tokens already prefilled; valid_len scalar = real (unpadded)
-    tokens in this chunk. Pad positions' KV writes are masked and their
-    logits discarded. Returns (logits at the last real token ``[1, vocab]``,
-    new pools).
+    tokens in this chunk; ``write_sink`` ``[1]`` = the sink page masked
+    writes redirect to (the request's DP shard's own sink under
+    ``kv_sharding="dp"``; page 0 otherwise). Pad positions' KV writes are
+    masked and their logits discarded. Returns (logits at the last real
+    token ``[1, vocab]``, new pools).
     """
     c = tokens.shape[1]
     write_valid = jnp.arange(c)[None, :] < valid_len
     cache = {"layers": pools, "page_table": page_table, "lens": pos0,
              "write_valid": write_valid}
+    if write_sink is not None:
+        cache["write_sink"] = write_sink
     logits, _, new_cache = forward(params, {"tokens": tokens}, cfg,
                                    mode="prefill", cache=cache, dist=dist)
     last = jax.lax.dynamic_slice_in_dim(

@@ -15,11 +15,12 @@ Module map
                   reservation + on-demand decode growth otherwise),
                   preemption / resume queues, chunked-prefill / decode
                   interleaving.
-``paged_kv.py``   :class:`PagedKVCache` — host page allocator (free list,
-                  page table, per-slot lengths, host offload pool) over
-                  the device pools from ``models/kv_cache
-                  .init_paged_pools``; page 0 is the reserved
-                  masked-write sink; ``cache_bytes`` / ``used_bytes`` /
+``paged_kv.py``   :class:`PagedKVCache` — host page allocator (per-shard
+                  free lists, page table, per-slot lengths, host offload
+                  pool) over the device pools from ``models/kv_cache
+                  .init_paged_pools``; each shard's local page 0 is its
+                  reserved masked-write sink (one shard unsharded);
+                  ``cache_bytes`` / ``used_bytes`` / ``per_device_*`` /
                   ``swap_*_bytes`` accounting.
 ``adaptive.py``   :class:`PrefillBucketAdaptive` — power-of-two token
                   buckets resolved once each through the persistent
@@ -37,9 +38,13 @@ Module map
 
 Mesh-sharded serving (``EngineOptions.devices``): the engine builds a
 dp x ep mesh (``distributed.context.make_serving_context``), shards
-expert weights over EP, replicates the paged pools, and drives chunked
-prefill through ``pipelined_moe``'s sharded (All-to-All) layout and
-decode through the replicated psum layout — see ``docs/distributed.md``.
+expert weights over EP, and drives chunked prefill through
+``pipelined_moe``'s sharded (All-to-All) layout and decode through the
+replicated psum layout. ``EngineOptions.kv_sharding`` picks the pool
+layout: ``"replicated"`` (every device holds the whole pool) or
+``"dp"`` (pages sharded over the data axis — per-shard free lists,
+sticky least-loaded placement, per-shard pool-dry preemption,
+data-parallel decode) — see ``docs/distributed.md``.
 
 Invariants (tested in ``tests/test_serving.py`` /
 ``tests/test_preemption.py`` / ``tests/test_sampling.py`` /

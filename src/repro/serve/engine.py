@@ -44,11 +44,22 @@ replicates everything else, and threads the resulting ``DistContext``
 into both jitted step bodies. Chunked prefill then runs
 ``pipelined_moe``'s **sharded** layout (tokens split over EP, real
 dispatch/combine All-to-Alls — which the wall-clock measure therefore
-times too) while decode runs the **replicated** psum-combine layout;
-the paged KV pools, page tables and lens are replicated across the
-mesh (see :class:`PagedKVCache`). Everything host-side — scheduler,
-allocator, preemption, offload — is unchanged: one logical engine, N
-devices under it. See ``docs/distributed.md``.
+times too) while decode runs the **replicated** psum-combine layout.
+
+The paged KV pools have two mesh layouts
+(``EngineOptions.kv_sharding``, see :class:`PagedKVCache`):
+``"replicated"`` keeps one logical pool with a replica on every device
+(the PR 4 baseline — devices add compute but zero KV capacity), while
+``"dp"`` shards the pools' page axis, the page table, the lens and the
+decode batch over the mesh ``data`` axis — each dp group owns
+``num_pages / dp`` pages with its own host-side free list, requests are
+placed on a shard at admission (least-loaded, sticky for life), decode
+runs data-parallel over the shards, and pool-dry preemption fires (and
+picks its victim) per shard. Per-device resident KV drops ``dp``×, so
+the same per-device page budget admits ``~dp``× the concurrent
+requests before the first preemption. Everything else host-side —
+scheduler queues, offload round-trips — is unchanged: one logical
+engine, N devices under it. See ``docs/distributed.md``.
 """
 from __future__ import annotations
 
@@ -70,7 +81,7 @@ from repro.core.types import TPU_V5E, HardwareSpec, Strategy
 from repro.distributed.context import make_serving_context
 from repro.models.api import get_model, supports_paged
 from repro.serve.adaptive import PrefillBucketAdaptive, force_adaptive
-from repro.serve.paged_kv import PagedKVCache
+from repro.serve.paged_kv import KV_SHARDINGS, PagedKVCache
 from repro.serve.request import Request, RequestState
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import Scheduler
@@ -93,6 +104,8 @@ class EngineOptions:
     hw: HardwareSpec = TPU_V5E
     devices: int = 0                   # 0/1 = single device; N>1 = build
                                        # a dp x ep mesh over N devices
+    kv_sharding: str = "replicated"    # "replicated" | "dp": KV pool
+                                       # layout over the mesh data axis
     ep_size: int = 1                   # resolver hints; overridden by the
     dp: int = 1                        # mesh when devices > 1
     dtype: Optional[str] = None        # None = cfg.compute_dtype
@@ -118,15 +131,22 @@ class Engine:
             raise NotImplementedError(f"{cfg.name}: {why}")
         self.opts = opts = options or EngineOptions()
         assert opts.preempt in PREEMPT_POLICIES, opts.preempt
+        assert opts.kv_sharding in KV_SHARDINGS, opts.kv_sharding
         if opts.adaptive:
             cfg = force_adaptive(cfg)
         self.cfg = cfg
         self.model = get_model(cfg)
-        # device mesh (devices > 1): expert weights sharded over EP,
-        # everything else (incl. the KV pools) replicated
+        # device mesh (devices > 1): expert weights sharded over EP;
+        # the KV pool layout follows opts.kv_sharding, the rest
+        # replicates
         self.dist = make_serving_context(
             opts.devices,
             num_experts=cfg.moe.num_experts if cfg.moe is not None else 0)
+        if opts.kv_sharding == "dp" and self.dist is None:
+            raise ValueError(
+                "kv_sharding='dp' shards the KV pools over the mesh "
+                "data axis — a single-device engine has no mesh to "
+                "shard over (set devices > 1, or use 'replicated')")
         self._replicated = None
         if self.dist is not None:
             from jax.sharding import NamedSharding, PartitionSpec
@@ -138,14 +158,21 @@ class Engine:
             params = self.model.init(cfg, key or jax.random.PRNGKey(0))
         self.params = self._place_params(params)
 
-        num_pages = opts.num_pages or (
-            opts.max_slots * opts.max_pages_per_seq + 1)
         dtype = jnp.dtype(opts.dtype or cfg.compute_dtype)
-        self.kv = PagedKVCache(cfg, num_pages=num_pages,
+        # num_pages=0 = auto: PagedKVCache sizes the worst case itself
+        # (it owns the shard rounding + per-shard sink rules)
+        self.kv = PagedKVCache(cfg, num_pages=opts.num_pages,
                                page_size=opts.page_size,
                                max_slots=opts.max_slots,
                                max_pages_per_seq=opts.max_pages_per_seq,
-                               dtype=dtype, dist=self.dist)
+                               dtype=dtype, dist=self.dist,
+                               kv_sharding=opts.kv_sharding)
+        if opts.kv_sharding == "dp" and self.kv.n_shards == 1:
+            log.warning(
+                "kv_sharding='dp' but the mesh's data axis has extent 1 "
+                "(ep_split used every device for experts): the pools "
+                "degenerate to the replicated layout — none of the "
+                "dp-fold KV capacity/residency wins apply")
         self.scheduler = Scheduler(self.kv, chunk=opts.chunk,
                                    full_reserve=(opts.preempt == "never"))
         measure_fn = opts.measure_fn
@@ -167,10 +194,23 @@ class Engine:
 
         self._decode_fn = jax.jit(self._decode_step)
         self._prefill_fns: Dict[Tuple, Callable] = {}
+        # per-slot sink page ids: constant for the engine's lifetime, so
+        # one committed device copy serves every decode step
+        self._decode_sinks = self.kv.device_sinks()
         self._next_rid = 0
         self.step_count = 0
         self.prefill_rejits = 0
+        # actual trace counts of the jitted step bodies (a retrace means
+        # the jit cache churned — e.g. an input arrived with a different
+        # committed sharding); pinned by the compile-count regression
+        # test in tests/test_serving_conformance.py
+        self.decode_traces = 0
+        self.prefill_traces = 0
         self.preempts: Dict[str, int] = {"recompute": 0, "offload": 0}
+        # high-water mark of concurrently running requests while the
+        # engine had not yet preempted anyone — the "admitted before
+        # first preemption" capacity the DP-sharded benchmark reports
+        self.peak_running_preempt_free = 0
         self.done: List[Request] = []
         self.metrics: Dict[str, Any] = {}
 
@@ -205,6 +245,12 @@ class Engine:
         for where step state lives."""
         return self.kv.to_device(x)
 
+    def _put_slots(self, x):
+        """Host ``[max_slots, ...]`` decode-batch array -> device, sharded
+        over the slot axis when the KV pools are DP-sharded (each dp
+        group computes only its own slots), replicated otherwise."""
+        return self.kv.to_device_slots(x)
+
     def _mesh_scope(self):
         """Context activating the mesh around traces/executions (the
         jax-0.4.x resource env that bare-PartitionSpec constraints in
@@ -214,22 +260,27 @@ class Engine:
         return set_mesh(self.dist.mesh)
 
     def _pin_pools(self, pools):
-        """Keep step outputs on the replicated pool layout — without the
-        constraint GSPMD may scatter the updated pools over whatever
+        """Keep step outputs on the committed pool layout (replicated,
+        or page-sharded over "data" under ``kv_sharding="dp"``) — without
+        the constraint GSPMD may scatter the updated pools over whatever
         layout the (EP-sharded) chunk activations suggest, and the next
-        step would recompile against it."""
-        if self.dist is None:
+        step would recompile against it. Under the DP layout this is
+        also the prefill→decode handoff: the chunk's KV writes land
+        pinned on the owning shard's pages, so decode reads them with no
+        re-placement."""
+        spec = self.kv.pool_sharding
+        if spec is None:
             return pools
         return jax.tree_util.tree_map(
-            lambda x: jax.lax.with_sharding_constraint(
-                x, self._replicated), pools)
+            lambda x: jax.lax.with_sharding_constraint(x, spec), pools)
 
     # -- jitted step bodies ---------------------------------------------
     def _decode_step(self, params, pools, page_table, lens, tokens, active,
-                     temp, top_k, top_p, seed, pos):
+                     sinks, temp, top_k, top_p, seed, pos):
+        self.decode_traces += 1        # body runs only while tracing
         logits, new_pools = self.model.decode_step_paged(
             params, pools, page_table, lens, tokens, self.cfg,
-            active=active, dist=self.dist)
+            active=active, dist=self.dist, write_sink=sinks)
         return sample_tokens(logits, temp, top_k, top_p, seed, pos), \
             self._pin_pools(new_pools)
 
@@ -239,11 +290,12 @@ class Engine:
                if m is not None else (1, "none"))
         fn = self._prefill_fns.pop(key, None)          # LRU: re-insert
         if fn is None:
-            def body(params, pools, pt_row, pos0, toks, valid_len,
+            def body(params, pools, pt_row, pos0, toks, valid_len, sink,
                      temp, top_k, top_p, seed, pos, _cfg=rcfg):
+                self.prefill_traces += 1
                 logits, new_pools = self.model.prefill_chunk_paged(
                     params, pools, pt_row, pos0, toks, valid_len, _cfg,
-                    dist=self.dist)
+                    dist=self.dist, write_sink=sink)
                 return sample_tokens(logits, temp, top_k, top_p, seed,
                                      pos), self._pin_pools(new_pools)
             fn = jax.jit(body)
@@ -254,10 +306,15 @@ class Engine:
         return fn
 
     # -- sampling parameter arrays ---------------------------------------
-    def _sample_args(self, reqs: Sequence[Optional[Request]]):
+    def _sample_args(self, reqs: Sequence[Optional[Request]], *,
+                     slots: bool = False):
         """Per-slot sampling arrays for ``sample_tokens`` (None slots are
-        masked-off: greedy with dummy state, output discarded)."""
+        masked-off: greedy with dummy state, output discarded).
+        ``slots=True`` marks a decode batch (one entry per slot), which
+        shards over the slot axis with the DP-KV layout; prefill's
+        single-row arrays stay replicated."""
         n = len(reqs)
+        put = self._put_slots if slots else self._put
         temp = np.zeros((n,), np.float32)
         top_k = np.zeros((n,), np.int32)
         top_p = np.ones((n,), np.float32)
@@ -270,8 +327,7 @@ class Engine:
             temp[i], top_k[i], top_p[i], seed[i] = (
                 sp.temperature, sp.top_k, sp.top_p, sp.seed)
             pos[i] = len(r.output)
-        return tuple(self._put(a) for a in (temp, top_k, top_p, seed,
-                                            pos))
+        return tuple(put(a) for a in (temp, top_k, top_p, seed, pos))
 
     # -- serve-side wall-clock measurement -------------------------------
     def _wallclock_measure(self, b: int, n: int,
@@ -294,6 +350,7 @@ class Engine:
                 self._put(np.zeros((1,), np.int32)),
                 self._put(np.zeros((1, b), np.int32)),
                 self._put(np.asarray(b, np.int32)),
+                self._put(np.zeros((1,), np.int32)),     # sink: page 0
                 *self._sample_args([None]))
         with self._mesh_scope():
             out = fn(*args)
@@ -321,11 +378,12 @@ class Engine:
         self._next_rid += 1
         cap = self.kv.max_pages_per_seq * self.kv.page_size
         if req.total_budget > cap or \
-                self.kv.pages_for(req.total_budget) > self.kv.num_pages - 1:
+                self.kv.pages_for(req.total_budget) > \
+                self.kv.shard_capacity_pages:
             raise ValueError(
                 f"request {req.rid}: budget {req.total_budget} tokens "
                 f"exceeds engine capacity ({cap} per seq, "
-                f"{self.kv.num_pages - 1} pages total)")
+                f"{self.kv.shard_capacity_pages} pages per KV shard)")
         self.scheduler.submit(req)
         return req
 
@@ -346,9 +404,10 @@ class Engine:
             out = self._decode_fn(
                 self.params, kv.pools,
                 kv.device_page_table(), kv.device_lens(),
-                self._put(np.zeros((kv.max_slots, 1), np.int32)),
-                self._put(np.zeros((kv.max_slots,), bool)),
-                *self._sample_args([None] * kv.max_slots))
+                self._put_slots(np.zeros((kv.max_slots, 1), np.int32)),
+                self._put_slots(np.zeros((kv.max_slots,), bool)),
+                self._decode_sinks,
+                *self._sample_args([None] * kv.max_slots, slots=True))
             jax.block_until_ready(out[0])
         buckets, c = set(), 1
         while c < self.scheduler.chunk:
@@ -362,16 +421,22 @@ class Engine:
                          kv.device_lens(0),
                          self._put(np.zeros((1, b), np.int32)),
                          self._put(np.asarray(0, np.int32)),
+                         self._put(kv.sink_row(0)),
                          *self._sample_args([None]))
                 jax.block_until_ready(out[0])
         return 1 + self.prefill_rejits - before
 
     # -- preemption ------------------------------------------------------
-    def _pick_victim(self) -> Optional[Request]:
+    def _pick_victim(self, shard: Optional[int] = None
+                     ) -> Optional[Request]:
         """Lowest priority, then youngest, among running requests that
-        actually hold pages."""
+        actually hold pages — on ``shard`` when given (pool-dry is a
+        per-shard event under the DP-KV layout: only a victim on the dry
+        shard frees pages the grower can use)."""
         cands = [r for r in self.scheduler.running.values()
-                 if self.kv.slot_page_count(r.slot) > 0]
+                 if self.kv.slot_page_count(r.slot) > 0
+                 and (shard is None
+                      or self.kv.shard_of_slot(r.slot) == shard)]
         if not cands:
             return None
         return min(cands, key=lambda r: (r.priority, -r.rid))
@@ -394,7 +459,8 @@ class Engine:
             * self.kv.page_bytes,
             flops_per_token=self._flops_per_token, flops=hw.flops,
             host_bw=hw.host_bw, mfu=self.opts.preempt_mfu,
-            eta=hw.interference.eta_comp)
+            eta=hw.interference.eta_comp,
+            link_shards=self.kv.n_shards)
         return cost.choice
 
     def _do_preempt(self, victim: Request) -> None:
@@ -405,15 +471,18 @@ class Engine:
 
     def _ensure(self, slot: int, tokens: int) -> bool:
         """Grow ``slot`` until it can hold ``tokens``, preempting victims
-        while the pool is dry. Returns False if the slot's own request
-        was chosen as the victim (it must skip this step)."""
+        on the slot's shard while that shard is dry. Returns False if the
+        slot's own request was chosen as the victim (it must skip this
+        step)."""
+        shard = self.kv.shard_of_slot(slot)
         while self.kv.slot_capacity(slot) < tokens:
             if self.kv.grow_slot(slot):
                 continue
-            victim = self._pick_victim()
+            victim = self._pick_victim(shard)
             if victim is None:
                 raise RuntimeError(
-                    "page pool wedged: no free pages and no victim")
+                    f"page pool wedged: KV shard {shard} has no free "
+                    f"pages and no victim")
             vslot = victim.slot
             self._do_preempt(victim)
             if vslot == slot:
@@ -424,6 +493,10 @@ class Engine:
     def step(self) -> Dict[str, Any]:
         """Admit, then run one jitted step (prefill chunk or decode)."""
         self.scheduler.admit()
+        if not (self.preempts["recompute"] or self.preempts["offload"]):
+            self.peak_running_preempt_free = max(
+                self.peak_running_preempt_free,
+                len(self.scheduler.running))
         action, req = self.scheduler.next_action()
         info: Dict[str, Any] = {"kind": action}
         if action == "prefill":
@@ -459,6 +532,7 @@ class Engine:
                                kv.device_page_table(slot),
                                kv.device_lens(slot), self._put(toks),
                                self._put(np.asarray(c, np.int32)),
+                               self._put(kv.sink_row(slot)),
                                *self._sample_args([req]))
         req.prefill_pos += c
         kv.lens[slot] += c
@@ -501,8 +575,9 @@ class Engine:
         with self._mesh_scope():
             toks, kv.pools = self._decode_fn(
                 self.params, kv.pools, kv.device_page_table(),
-                kv.device_lens(), self._put(tokens), self._put(active),
-                *self._sample_args(by_slot))
+                kv.device_lens(), self._put_slots(tokens),
+                self._put_slots(active), self._decode_sinks,
+                *self._sample_args(by_slot, slots=True))
         toks = np.asarray(toks)
         now = time.perf_counter()
         for s in slots:
@@ -539,8 +614,12 @@ class Engine:
             "devices": 1 if self.dist is None else self.dist.mesh.size,
             "ep_size": 1 if self.dist is None else self.dist.ep_size,
             "dp_size": 1 if self.dist is None else self.dist.dp_size,
+            "kv_sharding": self.opts.kv_sharding,
+            "kv_shards": self.kv.n_shards,
             "engine_steps": self.step_count,
             "prefill_compiles": self.prefill_rejits,
+            "decode_traces": self.decode_traces,
+            "prefill_traces": self.prefill_traces,
             "p50_latency_s": pct(lat, 50),
             "p99_latency_s": pct(lat, 99),
             "p50_ttft_s": pct(ttft, 50),
@@ -554,6 +633,10 @@ class Engine:
             "swap_in_bytes": self.kv.swap_in_bytes,
             "cache_bytes": self.kv.cache_bytes,
             "peak_kv_used_bytes": self.kv.peak_used_bytes,
+            "per_device_cache_bytes": self.kv.per_device_cache_bytes,
+            "per_device_peak_kv_used_bytes":
+                self.kv.per_device_peak_used_bytes,
+            "peak_running_preempt_free": self.peak_running_preempt_free,
             "resolutions": {str(b): list(r) for b, r in
                             self.adaptive.resolutions.items()},
         }

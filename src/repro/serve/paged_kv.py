@@ -2,41 +2,64 @@
 
 Device side (``models/kv_cache.init_paged_pools``): per attention layer a
 global pool ``[num_pages, page_size, kv_heads, head_dim]`` shared by every
-in-flight sequence. Host side (this module): a free list of physical
+in-flight sequence. Host side (this module): free lists of physical
 pages, a ``[max_slots, max_pages_per_seq]`` page table and per-slot
 lengths, mirrored to device as plain int32 arrays each step — plus a
 host-side offload pool holding the page contents of preempted-by-offload
 requests until they resume.
 
-Invariants:
-* page 0 is reserved — never allocated — as the write sink for masked
-  (padding / inactive-slot) scatters;
+Invariants (stated per shard — one shard unsharded, ``dp`` shards under
+``kv_sharding="dp"``):
+* each shard's local page 0 is reserved — never allocated — as the
+  write sink for that shard's masked (padding / inactive-slot)
+  scatters; globally those are pages ``{s * pages_per_shard}``;
 * pages are allocated either **up front** for a slot's whole budget
   (``alloc_slot`` with the full prompt + max_new token count — the
   conservative admission-blocking baseline) or **on demand** one page at
-  a time (``grow_slot`` — the preemptive scheduler's path, where running
-  dry triggers a preemption instead of a deadlock);
-* freed slots have their page-table row zeroed and length reset, so a
-  stale slot's decode writes land in the sink page, never in pages that
-  were handed to another sequence;
+  a time (``grow_slot`` — the preemptive scheduler's path, where a
+  shard running dry triggers a preemption on that shard instead of a
+  deadlock);
+* a slot only ever binds pages of its own shard (slot ``i`` lives on
+  shard ``i // slots_per_shard``), so decode stays data-parallel: no
+  slot's reads or writes cross a shard boundary;
+* freed slots have their page-table row reset to their shard's sink, so
+  a stale slot's decode writes land in the sink page, never in pages
+  that were handed to another sequence;
 * an offloaded request holds **zero** device pages: ``offload_slot``
-  copies its pages to host and returns them to the free list, and
-  ``restore_slot`` later re-allocates (different physical pages are fine
-  — the page table re-maps them) and copies the contents back.
+  copies its pages to host and returns them to its shard's free list,
+  and ``restore_slot`` later re-allocates **on the same shard**
+  (placement is sticky for a request's lifetime; different physical
+  pages are fine — the page table re-maps them) and copies the contents
+  back.
 
-Mesh-sharded serving (``dist`` given): the pools, page table and lens
-are **replicated** across every device of the mesh — decode runs the
-replicated psum-combine MoE layout where every device attends all
-slots, so each device needs the whole pool. The allocator stays a
-single host-side free list (one logical pool, N physical replicas);
-``cache_bytes``/``used_bytes`` report *per-replica* bytes, with
-``replicas`` as the multiplier. Host-offload round-trips are unchanged:
-pages are extracted from (and re-inserted replicated into) the pools
-exactly as on one device.
+Mesh-sharded serving (``dist`` given), two layouts:
+
+* ``kv_sharding="replicated"`` (the PR 4 baseline): pools, page table
+  and lens are replicated across every device — each device needs the
+  whole pool, so adding devices buys compute but zero KV capacity.
+* ``kv_sharding="dp"``: the pool's **page axis is sharded over the mesh
+  ``data`` axis** (each of the ``dp`` device groups physically holds
+  ``num_pages / dp`` pages — per-device resident KV bytes drop ``dp``×)
+  and the page table / lens / decode batch shard over the slot axis, so
+  decode runs data-parallel: each dp group attends only its own slots
+  against only its own pages. Chunked prefill keeps the EP-sharded
+  ``pipelined_moe`` layout; its KV scatter lands in the owning shard's
+  pages directly (GSPMD routes the writes — the prefill→decode handoff
+  needs no copy) and the step output is pinned back to the page-sharded
+  layout (``Engine._pin_pools``). Each shard keeps its **own host-side
+  free list**; admission places a request on a shard (least-loaded,
+  sticky) and pool-dry is a per-shard event.
+
+``cache_bytes``/``used_bytes`` report *logical* pool bytes;
+``per_device_cache_bytes`` / ``per_device_peak_used_bytes`` report the
+per-device residency (divided by ``n_shards`` under ``dp``, with
+``replicas`` physical copies each). Host-offload round-trips are
+unchanged per shard: pages are extracted from (and re-inserted into) the
+pools with the pool layout preserved (``insert_pages(out_sharding=)``).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,72 +68,181 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import kv_cache
 
-__all__ = ["PagedKVCache"]
+__all__ = ["KV_SHARDINGS", "PagedKVCache"]
+
+KV_SHARDINGS = ("replicated", "dp")
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-int(x) // mult) * mult
 
 
 class PagedKVCache:
     def __init__(self, cfg: ArchConfig, *, num_pages: int, page_size: int,
                  max_slots: int, max_pages_per_seq: int,
-                 dtype=jnp.bfloat16, dist=None):
-        assert num_pages >= 2, "need at least the sink page + one real page"
+                 dtype=jnp.bfloat16, dist=None,
+                 kv_sharding: str = "replicated", shards: int = 0):
+        """``num_pages=0`` auto-sizes the pool to the worst case (every
+        slot's full ``max_pages_per_seq`` budget, plus one sink page per
+        shard) — the sizing lives here, next to the rounding rules it
+        depends on, so callers cannot drift out of sync with them."""
+        assert kv_sharding in KV_SHARDINGS, kv_sharding
         self.cfg = cfg
         self.page_size = int(page_size)
-        self.num_pages = int(num_pages)
-        self.max_slots = int(max_slots)
         self.max_pages_per_seq = int(max_pages_per_seq)
         self.dist = dist
+        self.kv_sharding = kv_sharding
+        # shard count: the mesh's dp extent under "dp" (overridable for
+        # host-side allocator tests that have no mesh), else 1
+        if shards:
+            n_shards = int(shards)
+        elif kv_sharding == "dp" and dist is not None:
+            n_shards = dist.dp_size
+        else:
+            n_shards = 1
+        self.n_shards = max(1, n_shards)
+        # each shard needs its sink + >= 1 real page; slots and pages
+        # round up to the shard count so the device arrays shard evenly
+        self.max_slots = _round_up(max_slots, self.n_shards)
+        if num_pages == 0:      # auto: every slot's worst-case budget
+            num_pages = self.max_slots * max_pages_per_seq + self.n_shards
+        self.num_pages = max(_round_up(num_pages, self.n_shards),
+                             2 * self.n_shards)
+        self.pages_per_shard = self.num_pages // self.n_shards
+        self.slots_per_shard = self.max_slots // self.n_shards
+
+        # -- device placement ------------------------------------------
         self._replicated = None
+        self._pool_spec = None       # pools: page axis over "data"
+        self._slot_spec = None       # [slots, ...] arrays over "data"
+        self._slot_specs = {}        # per-rank cache for to_device_slots
         if dist is not None:
-            from jax.sharding import NamedSharding, PartitionSpec
-            self._replicated = NamedSharding(dist.mesh, PartitionSpec())
-        self.pools: Any = kv_cache.init_paged_pools(cfg, num_pages,
+            self._replicated = dist.named_sharding()
+            if self.n_shards > 1:
+                self._pool_spec = dist.named_sharding(None, "dp")
+                self._slot_spec = dist.named_sharding("dp")
+                self._slot_specs = {1: self._slot_spec}
+        self.pools: Any = kv_cache.init_paged_pools(cfg, self.num_pages,
                                                     page_size, dtype)
-        if self._replicated is not None:
-            self.pools = jax.device_put(self.pools, self._replicated)
-        # page 0 reserved as the masked-write sink
-        self._free: List[int] = list(range(num_pages - 1, 0, -1))
-        self.page_table = np.zeros((max_slots, max_pages_per_seq), np.int32)
-        self.lens = np.zeros((max_slots,), np.int32)
-        self._slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
-        # rid -> (host page-content tree, page count): preempted-by-
-        # offload requests parked until resume
-        self._offloaded: Dict[int, Tuple[Any, int]] = {}
+        if self.pool_sharding is not None:
+            self.pools = jax.device_put(self.pools, self.pool_sharding)
+
+        # -- host allocator state --------------------------------------
+        # per-shard free lists; local page 0 of each shard reserved as
+        # that shard's masked-write sink
+        self._free_by_shard: List[List[int]] = [
+            list(range((s + 1) * self.pages_per_shard - 1,
+                       s * self.pages_per_shard, -1))
+            for s in range(self.n_shards)]
+        self.page_table = np.zeros((self.max_slots, max_pages_per_seq),
+                                   np.int32)
+        for slot in range(self.max_slots):
+            self.page_table[slot, :] = self.sink_page(
+                self.shard_of_slot(slot))
+        self.lens = np.zeros((self.max_slots,), np.int32)
+        self._slot_pages: List[List[int]] = [[] for _ in
+                                             range(self.max_slots)]
+        # rid -> (host page-content tree, page count, owning shard):
+        # preempted-by-offload requests parked until resume
+        self._offloaded: Dict[int, Tuple[Any, int, int]] = {}
         self.peak_used_pages = 0
+        self._peak_used_by_shard = [0] * self.n_shards
         self.swap_out_bytes = 0
         self.swap_in_bytes = 0
+
+    # -- shard topology --------------------------------------------------
+    def shard_of_slot(self, slot: int) -> int:
+        return slot // self.slots_per_shard
+
+    def shard_of_page(self, page: int) -> int:
+        return page // self.pages_per_shard
+
+    def sink_page(self, shard: int) -> int:
+        """The shard's reserved masked-write sink (its local page 0)."""
+        return shard * self.pages_per_shard
+
+    def slots_of(self, shard: int) -> range:
+        return range(shard * self.slots_per_shard,
+                     (shard + 1) * self.slots_per_shard)
+
+    @property
+    def shard_capacity_pages(self) -> int:
+        """Allocatable pages per shard (the sink is reserved)."""
+        return self.pages_per_shard - 1
 
     # -- budget ----------------------------------------------------------
     def pages_for(self, tokens: int) -> int:
         return -(-int(tokens) // self.page_size)
 
+    def free_pages_of(self, shard: int) -> int:
+        return len(self._free_by_shard[shard])
+
+    @property
+    def _free(self) -> List[int]:
+        """All free pages across shards (flat, read-only view)."""
+        return [p for fl in self._free_by_shard for p in fl]
+
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        return sum(len(fl) for fl in self._free_by_shard)
 
     @property
     def used_pages(self) -> int:
-        return (self.num_pages - 1) - len(self._free)
+        return (self.num_pages - self.n_shards) - self.free_pages
 
-    def can_admit(self, total_tokens: int) -> bool:
+    def used_pages_of(self, shard: int) -> int:
+        return self.shard_capacity_pages - self.free_pages_of(shard)
+
+    def can_admit(self, total_tokens: int,
+                  shard: Optional[int] = None) -> bool:
+        """Can ``total_tokens`` be reserved — on ``shard``, or on the
+        least-loaded shard when None?"""
         need = self.pages_for(total_tokens)
-        return (need <= len(self._free)
+        free = (max(map(len, self._free_by_shard)) if shard is None
+                else self.free_pages_of(shard))
+        return (need <= free
                 and need <= self.max_pages_per_seq
                 and total_tokens <= self.max_pages_per_seq * self.page_size)
 
+    def best_shard(self, total_tokens: int,
+                   candidates: Optional[Sequence[int]] = None
+                   ) -> Optional[int]:
+        """Least-loaded placement: among ``candidates`` (default: all
+        shards), the one with the most free pages that can still admit
+        ``total_tokens``; ties break to the lowest shard id. None when
+        no shard fits."""
+        cands = range(self.n_shards) if candidates is None else candidates
+        best = None
+        for s in cands:
+            if not self.can_admit(total_tokens, s):
+                continue
+            if best is None or self.free_pages_of(s) > \
+                    self.free_pages_of(best):
+                best = s
+        return best
+
     # -- slot lifecycle --------------------------------------------------
+    def _note_peak(self, shard: int) -> None:
+        self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
+        self._peak_used_by_shard[shard] = max(
+            self._peak_used_by_shard[shard], self.used_pages_of(shard))
+
     def alloc_slot(self, slot: int, tokens: int) -> None:
-        """Reserve ``pages_for(tokens)`` pages for the slot — the full
-        budget (blocking admission) or just an initial watermark (the
-        on-demand path, which then grows via :meth:`grow_slot`)."""
+        """Reserve ``pages_for(tokens)`` pages of the slot's shard — the
+        full budget (blocking admission) or just an initial watermark
+        (the on-demand path, which then grows via :meth:`grow_slot`)."""
         assert not self._slot_pages[slot], f"slot {slot} already allocated"
+        shard = self.shard_of_slot(slot)
         need = self.pages_for(tokens)
-        assert self.can_admit(tokens), "alloc_slot without can_admit"
-        pages = [self._free.pop() for _ in range(need)]
+        assert self.can_admit(tokens, shard), \
+            f"alloc_slot without can_admit (shard {shard})"
+        fl = self._free_by_shard[shard]
+        pages = [fl.pop() for _ in range(need)]
         self._slot_pages[slot] = pages
-        self.page_table[slot, :] = 0
+        self.page_table[slot, :] = self.sink_page(shard)
         self.page_table[slot, :need] = pages
         self.lens[slot] = 0
-        self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
+        self._note_peak(shard)
 
     def slot_page_count(self, slot: int) -> int:
         return len(self._slot_pages[slot])
@@ -120,43 +252,48 @@ class PagedKVCache:
         return len(self._slot_pages[slot]) * self.page_size
 
     def grow_slot(self, slot: int) -> bool:
-        """Bind one more free page to the slot. False when the pool is
-        dry (the caller preempts a victim and retries)."""
+        """Bind one more page of the slot's shard. False when that shard
+        is dry (the caller preempts a victim *on that shard* and
+        retries)."""
         held = self._slot_pages[slot]
         assert len(held) < self.max_pages_per_seq, \
             f"slot {slot} grew past its per-sequence page budget"
-        if not self._free:
+        shard = self.shard_of_slot(slot)
+        fl = self._free_by_shard[shard]
+        if not fl:
             return False
-        page = self._free.pop()
+        page = fl.pop()
         self.page_table[slot, len(held)] = page
         held.append(page)
-        self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
+        self._note_peak(shard)
         return True
 
     def free_slot(self, slot: int) -> None:
-        self._free.extend(reversed(self._slot_pages[slot]))
+        shard = self.shard_of_slot(slot)
+        self._free_by_shard[shard].extend(reversed(self._slot_pages[slot]))
         self._slot_pages[slot] = []
-        self.page_table[slot, :] = 0
+        self.page_table[slot, :] = self.sink_page(shard)
         self.lens[slot] = 0
 
     # -- preempt-by-offload ----------------------------------------------
     def offload_slot(self, slot: int, rid: int) -> int:
         """Swap the slot's pages out to the host pool (keyed by request
-        id) and free them. Only the pages covering ``lens[slot]`` are
-        copied — growth can run ahead of a chunk that was then preempted
-        away, and those tail pages hold nothing worth saving. Returns
-        bytes copied."""
+        id) and free them to the slot's shard. Only the pages covering
+        ``lens[slot]`` are copied — growth can run ahead of a chunk that
+        was then preempted away, and those tail pages hold nothing worth
+        saving. Returns bytes copied."""
+        shard = self.shard_of_slot(slot)
         pages = self._slot_pages[slot]
         need = self.pages_for(int(self.lens[slot]))
         assert pages and need >= 1, f"offload of empty slot {slot}"
         assert rid not in self._offloaded, f"rid {rid} already offloaded"
         assert need <= len(pages), \
             f"slot {slot} holds {len(pages)} pages < lens needs {need}"
-        self._free.extend(reversed(pages[need:]))   # trim unused tail
+        self._free_by_shard[shard].extend(reversed(pages[need:]))  # trim
         pages = self._slot_pages[slot] = pages[:need]
         host = kv_cache.extract_pages(self.pools, pages)
         nbytes = kv_cache.tree_bytes(host)
-        self._offloaded[rid] = (host, len(pages))
+        self._offloaded[rid] = (host, len(pages), shard)
         self.swap_out_bytes += nbytes
         self.free_slot(slot)
         return nbytes
@@ -164,29 +301,43 @@ class PagedKVCache:
     def offloaded_pages(self, rid: int) -> int:
         return self._offloaded[rid][1]
 
+    def offloaded_shard(self, rid: int) -> int:
+        """The shard an offloaded request must restore onto (sticky)."""
+        return self._offloaded[rid][2]
+
     def can_restore(self, rid: int) -> bool:
-        return self._offloaded[rid][1] <= len(self._free)
+        _, need, shard = self._offloaded[rid]
+        return need <= self.free_pages_of(shard)
 
     def restore_slot(self, rid: int, slot: int, tokens: int) -> int:
         """Swap a preempted request's pages back in: allocate fresh
-        physical pages (the table re-maps), copy the host contents into
-        the pools, and rebind the slot at length ``tokens``. Returns
-        bytes copied."""
-        host, need = self._offloaded.pop(rid)
+        physical pages on the owning shard (the table re-maps), copy the
+        host contents into the pools, and rebind the slot at length
+        ``tokens``. Returns bytes copied."""
+        host, need, shard = self._offloaded[rid]
+        # validate before popping: a refused restore must not lose the
+        # parked pages
         assert not self._slot_pages[slot], f"slot {slot} already allocated"
-        assert need <= len(self._free), "restore_slot without can_restore"
+        assert self.shard_of_slot(slot) == shard, \
+            f"restore of rid {rid} onto slot {slot} (shard " \
+            f"{self.shard_of_slot(slot)}) but its pages live on shard " \
+            f"{shard} — placement is sticky"
+        fl = self._free_by_shard[shard]
+        assert need <= len(fl), "restore_slot without can_restore"
         assert self.pages_for(tokens) == need, \
             f"restore of {tokens} tokens into {need} pages"
-        pages = [self._free.pop() for _ in range(need)]
-        self.pools = kv_cache.insert_pages(self.pools, pages, host,
-                                           sharding=self._replicated)
+        del self._offloaded[rid]
+        pages = [fl.pop() for _ in range(need)]
+        self.pools = kv_cache.insert_pages(
+            self.pools, pages, host, sharding=self._replicated,
+            out_sharding=self._pool_spec)
         self._slot_pages[slot] = pages
-        self.page_table[slot, :] = 0
+        self.page_table[slot, :] = self.sink_page(shard)
         self.page_table[slot, :need] = pages
         self.lens[slot] = tokens
         nbytes = kv_cache.tree_bytes(host)
         self.swap_in_bytes += nbytes
-        self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
+        self._note_peak(shard)
         return nbytes
 
     @property
@@ -197,39 +348,85 @@ class PagedKVCache:
     def host_bytes(self) -> int:
         """Bytes currently parked in the host offload pool."""
         return sum(kv_cache.tree_bytes(host)
-                   for host, _ in self._offloaded.values())
+                   for host, _, _ in self._offloaded.values())
 
     # -- device views ----------------------------------------------------
     # NOTE: always .copy() — jnp.asarray of a host numpy array can be
     # zero-copy on CPU, and the engine mutates page_table/lens in place
     # while the dispatched step is still running asynchronously. Under a
-    # mesh the copies are device_put replicated, so every step input
-    # carries one consistent committed sharding (no jit cache churn).
+    # mesh the copies are device_put with one consistent committed
+    # sharding per role (replicated, or slot-sharded over "data" for the
+    # DP layout), so the jit caches never churn.
+    @property
+    def pool_sharding(self):
+        """The pools' committed layout: page axis over "data" under
+        ``kv_sharding="dp"``, replicated otherwise (None unsharded).
+        Step outputs must be pinned back to this (``Engine._pin_pools``).
+        """
+        return self._pool_spec if self._pool_spec is not None \
+            else self._replicated
+
     def to_device(self, x):
         """Host array -> device array (replicated under a mesh)."""
         if self._replicated is not None:
             return jax.device_put(x, self._replicated)
         return jnp.asarray(x)
 
+    def to_device_slots(self, x):
+        """Host ``[max_slots, ...]`` array -> device, sharded over the
+        slot axis under the DP layout (each dp group holds only its own
+        slots' rows), replicated otherwise."""
+        if self._slot_spec is not None:
+            nd = np.ndim(x)
+            spec = self._slot_specs.get(nd)      # hot path: decode calls
+            if spec is None:                     # this ~9x per step
+                spec = self.dist.named_sharding(
+                    "dp", *((None,) * (nd - 1)))
+                self._slot_specs[nd] = spec
+            return jax.device_put(x, spec)
+        return self.to_device(x)
+
     def device_page_table(self, slot: Optional[int] = None):
-        pt = (self.page_table if slot is None
-              else self.page_table[slot:slot + 1])
-        return self.to_device(pt.copy())
+        if slot is None:
+            return self.to_device_slots(self.page_table.copy())
+        return self.to_device(self.page_table[slot:slot + 1].copy())
 
     def device_lens(self, slot: Optional[int] = None):
-        ln = self.lens if slot is None else self.lens[slot:slot + 1]
-        return self.to_device(ln.copy())
+        if slot is None:
+            return self.to_device_slots(self.lens.copy())
+        return self.to_device(self.lens[slot:slot + 1].copy())
+
+    def device_sinks(self):
+        """Per-slot sink page ids ``[max_slots]`` for the decode step's
+        masked-write redirect (constant for the engine's lifetime)."""
+        sinks = np.asarray([self.sink_page(self.shard_of_slot(s))
+                            for s in range(self.max_slots)], np.int32)
+        return self.to_device_slots(sinks)
+
+    def sink_row(self, slot: int) -> np.ndarray:
+        """``[1]`` sink page id for one slot's prefill chunk."""
+        return np.asarray([self.sink_page(self.shard_of_slot(slot))],
+                          np.int32)
 
     @property
     def replicas(self) -> int:
-        """Physical copies of the pool (mesh devices; 1 unsharded)."""
-        return 1 if self.dist is None else self.dist.mesh.size
+        """Physical copies of each page (1 unsharded; every mesh device
+        under "replicated"; the ep devices of one dp group under "dp")."""
+        if self.dist is None:
+            return 1
+        return self.dist.mesh.size // self.n_shards
 
     # -- accounting ------------------------------------------------------
     @property
     def cache_bytes(self) -> int:
-        """Total bytes of the allocated device pools (constant)."""
+        """Total logical bytes of the allocated pools (constant)."""
         return kv_cache.cache_bytes(self.pools)
+
+    @property
+    def per_device_cache_bytes(self) -> int:
+        """Pool bytes resident on one device (the DP layout divides the
+        page axis over the shards; replication does not)."""
+        return self.cache_bytes // self.n_shards
 
     @property
     def page_bytes(self) -> int:
@@ -244,3 +441,12 @@ class PagedKVCache:
     @property
     def peak_used_bytes(self) -> int:
         return self.peak_used_pages * self.page_bytes
+
+    @property
+    def per_device_peak_used_bytes(self) -> int:
+        """Peak KV bytes resident on one device: the busiest shard's
+        peak under "dp" (each device holds only its shard's pages); the
+        global peak when every device replicates the whole pool."""
+        if self.n_shards == 1:
+            return self.peak_used_bytes
+        return max(self._peak_used_by_shard) * self.page_bytes

@@ -66,6 +66,12 @@ class Request:
     resume_to: str = ""                    # "prefill" | "decode"
     cached_tokens: int = 0                 # KV tokens parked in host pool
     preempt_count: int = 0
+    # DP-sharded KV placement: assigned once at first admission
+    # (least-loaded shard) and sticky for the request's lifetime —
+    # resumes (recompute AND offload) land back on the same shard, so a
+    # request's pages never migrate and per-shard accounting stays
+    # consistent across preemption round-trips. -1 = not yet placed.
+    kv_shard: int = -1
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)

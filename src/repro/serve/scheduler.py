@@ -14,23 +14,32 @@ Policy:
     wedging. Reserving the whole prompt up front keeps prefill from
     stealing pages mid-flight — only decode growth preempts — which
     damps preemption ping-pong under overload.
+* **Placement** (DP-sharded KV pools): a fresh request is placed on the
+  **least-loaded** shard (most free pages, ties to the lowest id) that
+  has a free slot and can reserve its pages; the placement is **sticky**
+  for the request's lifetime — every resume, recompute or offload, lands
+  back on the same shard. With one shard (replicated pools) placement
+  degenerates to the PR 2–4 behaviour.
 * **Preemption** (:meth:`preempt`): the victim leaves its slot as
   PREEMPTED, either dropping its pages for later re-prefill (recompute)
   or parking them in the host pool (offload), and joins the resume
-  queue. Resumes are strictly prioritized over fresh admissions, oldest
-  first (lowest rid), with head-of-line blocking in both queues — the
-  oldest work always makes progress, which is what guarantees the
-  preemption storm converges.
+  queue. Pool-dry is a **per-shard** event: the victim is chosen among
+  the dry shard's own requests (freeing pages elsewhere would not help).
+  Resumes are strictly prioritized over fresh admissions, oldest first
+  (lowest rid), with head-of-line blocking in both queues — the oldest
+  work always makes progress, which is what guarantees the preemption
+  storm converges. A resume blocked on its sticky shard blocks fresh
+  admissions too (no overtake that could starve it forever).
 * **Interleaving**: prefill is chunked (``chunk`` tokens per step) and
   alternates with decode whenever both have work, bounding decode-token
   latency by one chunk instead of one whole prompt — the serving analogue
   of MPipeMoE's pipelining (keep both "streams" busy instead of letting a
   long prefill stall every running sequence).
 
-Mesh-sharded serving: the scheduler is deliberately device-count
-agnostic. It plans over the *logical* page pool and slot set — the
-engine replicates pages and page tables across the mesh, so one
-admission / preemption decision is valid on every device and no
+Mesh-sharded serving: the scheduler stays device-count agnostic — it
+plans over *logical* shards and slots the :class:`PagedKVCache` defines
+(one shard when the pools replicate). All allocator state is host-side,
+so one admission / preemption decision is valid on every device and no
 per-device bookkeeping exists to drift out of sync (the would-be
 distributed-consensus problem is designed away; see
 ``docs/distributed.md``).
@@ -69,8 +78,9 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.resuming or self.running)
 
-    def free_slots(self) -> List[int]:
-        return [s for s in range(self.kv.max_slots) if s not in self.running]
+    def free_slots_of(self, shard: int) -> List[int]:
+        return [s for s in self.kv.slots_of(shard)
+                if s not in self.running]
 
     # -- admission -------------------------------------------------------
     def _admit_resume(self, req: Request, slot: int) -> None:
@@ -86,33 +96,54 @@ class Scheduler:
         req.cached_tokens = 0
         self.resume_count += 1
 
+    def _place_fresh(self, req: Request
+                     ) -> Optional[Tuple[int, int, int]]:
+        """(shard, slot, pages-to-reserve-in-tokens) for a fresh
+        admission: the least-loaded shard that has a free slot and fits
+        the reservation; None when no shard can take it right now. The
+        returned ``need`` is the one source of truth for what
+        ``admit()`` then actually reserves."""
+        need = req.total_budget if self.full_reserve else req.prompt_len
+        by_shard = {s: self.free_slots_of(s)
+                    for s in range(self.kv.n_shards)}
+        shard = self.kv.best_shard(
+            need, candidates=[s for s, sl in by_shard.items() if sl])
+        if shard is None:
+            return None
+        return shard, by_shard[shard][0], need
+
     def admit(self) -> List[Request]:
         """Move resumable then QUEUED requests into free slots while the
         page budget holds. FCFS with head-of-line blocking in both queues
         (no unfair overtake that could starve the head forever); resumes
         strictly precede fresh admissions so preempted work cannot be
-        starved by new arrivals stealing its pages."""
+        starved by new arrivals stealing its pages. Fresh requests are
+        placed on the least-loaded shard; resumes go back to their sticky
+        shard."""
         admitted = []
-        free = deque(self.free_slots())
-        while free:
+        while True:
             if self.resuming:
                 req = min(self.resuming, key=lambda r: r.rid)
+                shard = req.kv_shard
+                slots = self.free_slots_of(shard)
+                if not slots:
+                    break
                 if req.preempt_mode == "offload":
                     if not self.kv.can_restore(req.rid):
                         break
-                elif not self.kv.can_admit(req.prefill_len):
+                elif not self.kv.can_admit(req.prefill_len, shard):
                     break
-                slot = free.popleft()
+                slot = slots[0]
                 self._admit_resume(req, slot)
             elif self.waiting:
                 req = self.waiting[0]
-                need = (req.total_budget if self.full_reserve
-                        else req.prompt_len)
-                if not self.kv.can_admit(need):
+                placement = self._place_fresh(req)
+                if placement is None:
                     break
-                slot = free.popleft()
+                shard, slot, need = placement
                 self.kv.alloc_slot(slot, need)
                 self.waiting.popleft()
+                req.kv_shard = shard
                 req.state = RequestState.PREFILL
             else:
                 break
@@ -127,7 +158,8 @@ class Scheduler:
     def preempt(self, req: Request, mode: str) -> str:
         """Evict a running request: free or offload its pages, move it to
         the resume queue. Returns the mode actually applied (offload of
-        an empty cache degrades to recompute)."""
+        an empty cache degrades to recompute). The request keeps its
+        ``kv_shard`` — resumes land back on the same shard."""
         slot = req.slot
         assert self.running.get(slot) is req, f"request {req.rid} not running"
         req.resume_to = ("prefill" if req.state == RequestState.PREFILL

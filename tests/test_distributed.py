@@ -1,11 +1,9 @@
-"""Multi-device correctness via subprocess (8 fake CPU devices — the main
-test process must keep seeing exactly 1 device)."""
-import json
-import os
-import subprocess
-import sys
-
+"""Multi-device correctness via subprocess (8 fake CPU devices — the
+main test process must keep seeing exactly 1 device; see
+``tests/mesh_harness.py`` for the shared runner + JSON protocol)."""
 import pytest
+
+from mesh_harness import run_mesh_script
 
 _SCRIPT = r"""
 import jax, jax.numpy as jnp, dataclasses, json
@@ -72,20 +70,9 @@ print(json.dumps({'decode_diff': float(jnp.abs(ref - out).max())}))
 """
 
 
-def _run(script: str) -> dict:
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8",
-               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
-                                       "src"))
-    out = subprocess.run([sys.executable, "-c", script], env=env,
-                         capture_output=True, text=True, timeout=600)
-    assert out.returncode == 0, out.stderr[-2000:]
-    return json.loads(out.stdout.strip().splitlines()[-1])
-
-
 @pytest.mark.slow
 def test_ep_shard_map_matches_single_device():
-    res = _run(_SCRIPT)
+    res = run_mesh_script(_SCRIPT)
     assert res["n_devices"] == 8
     assert res["loss_diff"] < 1e-3
     assert res["max_grad_diff"] < 5e-3
@@ -93,7 +80,7 @@ def test_ep_shard_map_matches_single_device():
 
 @pytest.mark.slow
 def test_moe_decode_replicated_path_matches():
-    res = _run(_DECODE_SCRIPT)
+    res = run_mesh_script(_DECODE_SCRIPT)
     assert res["decode_diff"] < 1e-3
 
 

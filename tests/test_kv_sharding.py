@@ -1,0 +1,229 @@
+"""Per-shard paged-KV allocator: the host-side half of the DP-sharded
+KV layout, testable without a mesh (``PagedKVCache(shards=k)`` shards
+the free lists / page table / accounting while the pools stay on one
+device — device placement is exercised on 8 virtual devices in
+``tests/test_serving_conformance.py``).
+
+Invariants restated per shard (the tentpole contract):
+* each shard's local page 0 (globally ``s * pages_per_shard``) is
+  reserved as that shard's masked-write sink — never allocated;
+* a slot binds pages of its own shard only; no page is ever bound twice
+  or freed twice (the hypothesis schedule test);
+* global free-page count is conserved: free + bound ==
+  ``num_pages - n_shards`` at every step (an offloaded request holds
+  zero device pages);
+* pool-dry is per shard: one shard running dry does not consume — or
+  unblock on — another shard's pages;
+* placement is sticky: an offloaded request can only restore onto its
+  owning shard.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serve import PagedKVCache
+
+
+def _cfg():
+    return dataclasses.replace(get_config("llama3-8b").reduced(),
+                               compute_dtype="float32")
+
+
+def _kv(**over):
+    kw = dict(num_pages=16, page_size=2, max_slots=4,
+              max_pages_per_seq=4, dtype=np.float32, shards=2)
+    kw.update(over)
+    return PagedKVCache(_cfg(), **kw)
+
+
+def _check_shards(kv: PagedKVCache) -> None:
+    """Full allocator audit: per-shard integrity + global conservation."""
+    bound_total = 0
+    for sh in range(kv.n_shards):
+        lo, hi = sh * kv.pages_per_shard, (sh + 1) * kv.pages_per_shard
+        free = set(kv._free_by_shard[sh])
+        bound = [p for s in kv.slots_of(sh) for p in kv._slot_pages[s]]
+        bound_total += len(bound)
+        sink = kv.sink_page(sh)
+        assert sink == lo                       # local page 0
+        assert sink not in free and sink not in bound
+        assert len(bound) == len(set(bound))    # never bound twice
+        assert free.isdisjoint(bound)           # never free AND bound
+        assert all(lo <= p < hi for p in free | set(bound))
+        # per-shard conservation: nothing leaked, nothing conjured
+        assert len(free) + len(bound) == kv.pages_per_shard - 1
+    assert kv.free_pages + bound_total == kv.num_pages - kv.n_shards
+    for slot in range(kv.max_slots):
+        n = len(kv._slot_pages[slot])
+        sink = kv.sink_page(kv.shard_of_slot(slot))
+        assert list(kv.page_table[slot, :n]) == kv._slot_pages[slot]
+        assert (kv.page_table[slot, n:] == sink).all()
+
+
+# ---------------------------------------------------------------------------
+# Deterministic shard semantics
+# ---------------------------------------------------------------------------
+
+def test_shard_topology_and_rounding():
+    kv = _kv()
+    assert kv.n_shards == 2 and kv.pages_per_shard == 8
+    assert kv.slots_per_shard == 2
+    assert [kv.sink_page(s) for s in range(2)] == [0, 8]
+    assert [kv.shard_of_slot(s) for s in range(4)] == [0, 0, 1, 1]
+    assert list(kv.slots_of(1)) == [2, 3]
+    assert kv.shard_capacity_pages == 7
+    _check_shards(kv)
+    # odd sizes round up to the shard count (device arrays must split)
+    kv2 = _kv(num_pages=15, max_slots=3)
+    assert kv2.num_pages == 16 and kv2.max_slots == 4
+    # floor: every shard needs its sink + one real page
+    kv3 = _kv(num_pages=2, shards=4)
+    assert kv3.num_pages == 8 and kv3.pages_per_shard == 2
+
+
+def test_alloc_stays_shard_local_and_reserves_no_sink():
+    kv = _kv()
+    kv.alloc_slot(0, 8)           # 4 pages on shard 0
+    kv.alloc_slot(2, 8)           # 4 pages on shard 1
+    assert all(0 < p < 8 for p in kv._slot_pages[0])
+    assert all(8 < p < 16 for p in kv._slot_pages[2])
+    _check_shards(kv)
+    kv.free_slot(0)
+    kv.free_slot(2)
+    _check_shards(kv)
+    assert kv.free_pages == kv.num_pages - kv.n_shards
+
+
+def test_pool_dry_is_per_shard():
+    """Shard 0 running dry neither consumes nor unblocks on shard 1's
+    pages — growth on a shard-0 slot fails while shard 1 is empty."""
+    kv = _kv()
+    kv.alloc_slot(0, 6)                        # 3 of shard 0's 7 pages
+    kv.alloc_slot(1, 8)                        # 4 more: shard 0 dry
+    assert kv.free_pages_of(0) == 0 and kv.free_pages_of(1) == 7
+    assert not kv.grow_slot(0)                 # dry despite 7 free pages
+    assert not kv.can_admit(2, shard=0)        # ...on the other shard
+    assert kv.can_admit(2, shard=1)
+    assert kv.can_admit(2)                     # shard=None: any shard
+    _check_shards(kv)
+
+
+def test_best_shard_is_least_loaded_with_low_tie_break():
+    kv = _kv()
+    assert kv.best_shard(2) == 0               # tie -> lowest id
+    kv.alloc_slot(0, 4)                        # load shard 0
+    assert kv.best_shard(2) == 1               # least-loaded wins
+    assert kv.best_shard(2, candidates=[0]) == 0
+    assert kv.best_shard(100) is None          # nobody fits
+    kv.alloc_slot(2, 8)
+    kv.alloc_slot(3, 4)                        # shard 1 now fuller
+    assert kv.best_shard(2) == 0
+
+
+def test_restore_is_sticky_to_owning_shard():
+    kv = _kv()
+    kv.alloc_slot(0, 4)                        # shard 0
+    kv.lens[0] = 4
+    kv.offload_slot(0, rid=7)
+    assert kv.offloaded_shard(7) == 0
+    _check_shards(kv)
+    with pytest.raises(AssertionError, match="sticky"):
+        kv.restore_slot(7, slot=2, tokens=4)   # slot 2 is shard 1's
+    kv.restore_slot(7, slot=1, tokens=4)       # same shard: fine
+    assert all(0 < p < 8 for p in kv._slot_pages[1])
+    _check_shards(kv)
+
+
+def test_offload_trim_returns_tail_to_owning_shard():
+    """The PR 3 grown-ahead gotcha, per shard: the trimmed tail goes
+    back to the *owning* shard's free list."""
+    kv = _kv()
+    kv.alloc_slot(2, 2)                        # shard 1, 1 page
+    kv.grow_slot(2)
+    kv.grow_slot(2)                            # 3 pages held
+    kv.lens[2] = 2                             # ...1 page of real KV
+    kv.offload_slot(2, rid=1)
+    assert kv.offloaded_pages(1) == 1
+    assert kv.free_pages_of(1) == 7            # tail came home
+    assert kv.free_pages_of(0) == 7
+    _check_shards(kv)
+
+
+def test_single_shard_degenerates_to_pr2_layout():
+    """shards=1 must reproduce the unsharded allocator exactly (the
+    replicated engines run through this path untouched)."""
+    kv = _kv(shards=1, num_pages=9, max_slots=3)
+    assert kv.n_shards == 1 and kv.pages_per_shard == 9
+    assert kv.sink_page(0) == 0
+    assert sorted(kv._free) == list(range(1, 9))
+    assert (kv.page_table == 0).all()
+    kv.alloc_slot(1, 6)
+    _check_shards(kv)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis schedule property
+# ---------------------------------------------------------------------------
+
+def test_per_shard_free_lists_random_schedules():
+    """Random admission / growth / preempt(recompute) / offload /
+    restore / complete schedules keep every shard's allocator exact: no
+    leak, no double-free, sinks reserved, conservation holds — audited
+    after every single op."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    NP, PS, SLOTS, MPS, SHARDS = 16, 2, 4, 4, 2
+
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(ops=st.lists(st.tuples(st.integers(0, 5),
+                                  st.integers(0, SLOTS - 1),
+                                  st.integers(1, MPS * PS)),
+                        min_size=1, max_size=80))
+    def run(ops):
+        kv = _kv(num_pages=NP, page_size=PS, max_slots=SLOTS,
+                 max_pages_per_seq=MPS, shards=SHARDS)
+        held, offl, rid = {}, {}, 0
+        for op, slot, tokens in ops:
+            if op == 0:                        # admission: least-loaded
+                free_slots = [s for s in range(SLOTS) if s not in held]
+                shard = kv.best_shard(tokens, candidates=sorted(
+                    {kv.shard_of_slot(s) for s in free_slots}))
+                if shard is not None:
+                    s = next(s for s in free_slots
+                             if kv.shard_of_slot(s) == shard)
+                    kv.alloc_slot(s, tokens)
+                    held[s] = tokens
+            elif op == 1 and slot in held:     # decode growth
+                if len(kv._slot_pages[slot]) < MPS:
+                    kv.grow_slot(slot)         # False when shard dry
+            elif op == 2 and slot in held:     # preempt by recompute
+                kv.free_slot(slot)
+                del held[slot]
+            elif op == 3 and slot in held and kv.slot_page_count(slot):
+                cached = kv.slot_capacity(slot)    # page-aligned
+                kv.lens[slot] = cached
+                kv.offload_slot(slot, rid)     # preempt by offload
+                offl[rid] = cached
+                del held[slot]
+                rid += 1
+            elif op == 4 and offl:             # resume (sticky shard)
+                r, cached = next(iter(offl.items()))
+                shard = kv.offloaded_shard(r)
+                free_slots = [s for s in kv.slots_of(shard)
+                              if s not in held]
+                if free_slots and kv.can_restore(r):
+                    kv.restore_slot(r, free_slots[0], cached)
+                    held[free_slots[0]] = cached
+                    del offl[r]
+            elif op == 5 and slot in held:     # complete
+                kv.free_slot(slot)
+                del held[slot]
+            assert kv.offloaded_count == len(offl)
+            _check_shards(kv)
+
+    run()

@@ -4,13 +4,15 @@ prefill through pipelined_moe's ``sharded`` layout, replicated
 psum-combine decode, replicated paged KV pools — must emit exactly the
 tokens of the single-device dense golden loop, including through
 recompute and offload preemption storms. Plus in-process unit tests for
-the mesh construction helpers (no multi-device requirement)."""
-import json
-import os
-import subprocess
-import sys
+the mesh construction helpers (no multi-device requirement).
 
+Subprocess pattern + JSON result protocol: ``tests/mesh_harness.py``.
+The (preempt x devices x kv_sharding) conformance matrix and the
+jit-compile-count regression live in
+``tests/test_serving_conformance.py``."""
 import pytest
+
+from mesh_harness import run_mesh_script
 
 _COMMON = r"""
 import dataclasses, json
@@ -74,22 +76,11 @@ print(json.dumps(out))
 """
 
 
-def _run(script: str) -> dict:
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8",
-               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
-                                       "src"))
-    out = subprocess.run([sys.executable, "-c", script], env=env,
-                         capture_output=True, text=True, timeout=600)
-    assert out.returncode == 0, out.stderr[-2000:]
-    return json.loads(out.stdout.strip().splitlines()[-1])
-
-
 @pytest.mark.slow
 def test_sharded_engine_token_exact_vs_dense_golden():
     """EP-parallel prefill + replicated decode on a 2x4 (dp x ep) mesh
     emits exactly the single-device dense greedy tokens."""
-    res = _run(_EXACT_SCRIPT)
+    res = run_mesh_script(_EXACT_SCRIPT)
     assert res["n_devices"] == 8 and res["devices"] == 8
     # moe-gpt3-s-reduced has 4 experts -> ep=4, dp=2
     assert res["ep"] == 4 and res["dp"] == 2
@@ -103,7 +94,7 @@ def test_sharded_preemption_storm_token_exact():
     """Recompute and offload preemption storms while sharded: the host
     offload pool round-trips through the replicated device pools and
     tokens stay exact."""
-    res = _run(_STORM_SCRIPT)
+    res = run_mesh_script(_STORM_SCRIPT)
     for mode in ("recompute", "offload"):
         r = res[mode]
         assert r["token_exact"], mode
@@ -144,3 +135,16 @@ def test_make_serving_context_rejects_missing_devices():
 def test_engine_options_devices_defaults_off():
     from repro.serve import EngineOptions
     assert EngineOptions().devices == 0
+    assert EngineOptions().kv_sharding == "replicated"
+
+
+def test_kv_sharding_dp_requires_a_mesh():
+    """kv_sharding='dp' without a data axis to shard over is
+    structurally undefined — the engine must refuse, not silently
+    degrade."""
+    from repro.configs import get_config
+    from repro.serve import Engine, EngineOptions
+    cfg = get_config("moe-gpt3-s").reduced()
+    with pytest.raises(ValueError, match="kv_sharding='dp'"):
+        Engine(cfg, options=EngineOptions(devices=0, kv_sharding="dp",
+                                          max_slots=2, max_seq_len=32))

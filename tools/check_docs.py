@@ -16,10 +16,11 @@ Two pinned surfaces on top of the generic extraction:
 
 * ``REQUIRED_DOCS`` — the documentation tier itself; deleting (or
   forgetting to add) one of these files fails the gate;
-* ``REQUIRED_FLAGS`` — load-bearing CLI flags (currently the
-  ``--devices`` mesh-sharded serving surface) that must BOTH exist in
-  the target's ``--help`` AND be shown in at least one documented
-  command, so the flag cannot silently drop out of either side.
+* ``REQUIRED_FLAGS`` — load-bearing CLI flags (the ``--devices``
+  mesh-sharded serving surface and the ``--kv-sharding`` DP-sharded-KV
+  surface) that must BOTH exist in the target's ``--help`` AND be shown
+  in at least one documented command, so the flag cannot silently drop
+  out of either side.
 """
 from __future__ import annotations
 
@@ -36,8 +37,9 @@ LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 REQUIRED_DOCS = ("README.md", "docs/architecture.md", "docs/serving.md",
                  "docs/distributed.md", "benchmarks/trajectory/README.md")
 REQUIRED_FLAGS = {
-    "benchmarks/serving.py": ("--devices", "--smoke", "--overload"),
-    "-m repro.launch.serve": ("--devices", "--engine"),
+    "benchmarks/serving.py": ("--devices", "--smoke", "--overload",
+                              "--kv-sharding"),
+    "-m repro.launch.serve": ("--devices", "--engine", "--kv-sharding"),
 }
 
 
