@@ -46,6 +46,15 @@ All four runs are golden-verified:
 
     PYTHONPATH=src python benchmarks/serving.py --devices 8 \
         --kv-sharding dp --smoke --slots 8
+
+``--compare-arch`` runs the architecture comparison (default out:
+``BENCH_serving_arch.json``): a constant-state recurrent model
+(xlstm-1.3b, reduced) and a plain-attention model (h2o-danube-1.8b,
+reduced) serve the same burst, both golden-verified, reporting decode
+tok/s and the per-slot device bytes at full budget — the recurrent slot
+is O(1) in the budget where the paged slot is O(budget):
+
+    PYTHONPATH=src python benchmarks/serving.py --compare-arch --smoke
 """
 from __future__ import annotations
 
@@ -431,6 +440,122 @@ def _print_sharded(res: dict) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Architecture comparison (--compare-arch): recurrent vs plain-attn
+# ---------------------------------------------------------------------------
+
+ARCH_COMPARE = ("xlstm-1.3b", "h2o-danube-1.8b")
+
+
+def _slot_bytes(engine, budget: int) -> int:
+    """Device-cache bytes one request holds at its full token budget —
+    the admission-relevant per-slot cost. Paged caches grow with the
+    budget; constant-state caches hold one fixed slot row."""
+    kv = engine.kv
+    if engine.cache_kind == "paged":
+        return kv.pages_for(budget) * kv.page_bytes
+    if engine.cache_kind == "constant":
+        return kv.cache_bytes // kv.max_slots
+    return (kv.paged.pages_for(budget) * kv.paged.page_bytes
+            + kv.state.cache_bytes // kv.state.max_slots)
+
+
+def run_arch_compare(*, requests: int, slots: int, chunk: int,
+                     page_size: int, prompt_max: int, gen_max: int,
+                     seed: int, hw_name: str,
+                     archs=ARCH_COMPARE) -> dict:
+    """Constant-state recurrent serving vs paged plain-attention serving
+    over the same request shape, both golden-verified. The headline
+    numbers are decode tok/s and the per-slot device bytes at full
+    budget: a recurrent slot is O(1) in the budget while a paged slot is
+    O(budget), which is the whole admission-capacity story."""
+    import time
+
+    hw = resolve_hw(hw_name)
+    budget = prompt_max + gen_max
+    out = {}
+    for arch in archs:
+        cfg = _golden_cfg(arch)
+        params = lm.init(cfg, jax.random.PRNGKey(0))
+        opts = EngineOptions(page_size=page_size, max_slots=slots,
+                             max_seq_len=budget, chunk=chunk, hw=hw)
+        engine = Engine(cfg, params, options=opts)
+        engine.warmup()
+        trace = poisson_trace(requests, rate=1.0,
+                              vocab_size=cfg.vocab_size,
+                              prompt_len_range=(8, prompt_max),
+                              gen_len_range=(max(2, gen_max // 2),
+                                             gen_max),
+                              seed=seed)
+        refs = _dense_refs(cfg, params, trace)
+        for e in trace:
+            engine.submit(e.prompt, max_new_tokens=e.max_new_tokens,
+                          arrival_s=0.0)
+        decode_s = prefill_s = 0.0
+        decode_toks = 0
+        t0 = time.perf_counter()
+        while engine.has_work:                 # drain a burst, timing
+            s0 = time.perf_counter()           # each step kind apart
+            info = engine.step()
+            dt = time.perf_counter() - s0
+            if info["kind"] == "decode":
+                decode_s += dt
+                decode_toks += info["tokens"]
+            elif info["kind"] == "prefill":
+                prefill_s += dt
+        wall = time.perf_counter() - t0
+        outs = [r.output
+                for r in sorted(engine.done, key=lambda r: r.rid)]
+        slot_bytes = _slot_bytes(engine, budget)
+        out[arch] = {
+            "cache_kind": engine.cache_kind,
+            "token_exact": outs == refs,
+            "tokens_per_s": sum(len(r.output) for r in engine.done)
+            / wall,
+            "decode_tok_s": decode_toks / max(decode_s, 1e-12),
+            "decode_s": decode_s,
+            "prefill_s": prefill_s,
+            "cache_bytes": engine.kv.cache_bytes,
+            "slot_bytes_at_budget": slot_bytes,
+            "bytes_per_cached_token": slot_bytes / budget,
+            "prefill_compiles": engine.prefill_rejits,
+            "decode_traces": engine.decode_traces,
+        }
+    recurrent, attn = archs
+    return {
+        "scenario": "serving_arch",
+        "hw": hw.name,
+        "requests": requests,
+        "slots": slots,
+        "chunk": chunk,
+        "page_size": page_size,
+        "budget_tokens": budget,
+        "recurrent_arch": recurrent,
+        "attn_arch": attn,
+        "archs": out,
+        "token_exact": all(a["token_exact"] for a in out.values()),
+        # how many x smaller one recurrent slot is than one paged slot
+        # at the same token budget
+        "slot_bytes_ratio": (out[attn]["slot_bytes_at_budget"]
+                             / max(out[recurrent]["slot_bytes_at_budget"],
+                                   1)),
+    }
+
+
+def _print_arch(res: dict) -> None:
+    print(f"\nserving_arch: {res['recurrent_arch']} (recurrent) vs "
+          f"{res['attn_arch']} (plain attn) on {res['hw']}, "
+          f"{res['requests']} requests, budget {res['budget_tokens']} "
+          f"tokens")
+    for arch, r in res["archs"].items():
+        print(f"  {arch:18s} [{r['cache_kind']:9s}]: "
+              f"decode {r['decode_tok_s']:8.1f} tok/s | "
+              f"slot@budget {r['slot_bytes_at_budget']/2**10:.1f}KiB "
+              f"({r['bytes_per_cached_token']:.1f} B/token) | "
+              f"token-exact {r['token_exact']}")
+    print(f"  paged/recurrent slot bytes: {res['slot_bytes_ratio']:.1f}x")
+
+
+# ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
 
@@ -519,6 +644,12 @@ def main():
                          "peak KV bytes and admission capacity at equal "
                          "per-device budget; out defaults to "
                          "BENCH_serving_dp.json)")
+    ap.add_argument("--compare-arch", action="store_true",
+                    help="architecture scenario: constant-state "
+                         "recurrent (xlstm) vs paged plain-attn "
+                         "(h2o-danube) serving the same burst, both "
+                         "golden-verified (out defaults to "
+                         "BENCH_serving_arch.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI configuration")
     ap.add_argument("--out", default=None,
@@ -527,8 +658,13 @@ def main():
                          "BENCH_serving_sharded.json by scenario)")
     args = ap.parse_args()
 
-    if args.overload and args.devices:
-        ap.error("--overload and --devices are separate scenarios")
+    if sum(map(bool, (args.overload, args.devices,
+                      args.compare_arch))) > 1:
+        ap.error("--overload, --devices and --compare-arch are "
+                 "separate scenarios")
+    if args.compare_arch and args.arch != "moe-gpt3-s":
+        ap.error("--compare-arch runs its fixed arch pair "
+                 f"({' vs '.join(ARCH_COMPARE)}); --arch does not apply")
     if args.kv_sharding == "dp" and not args.devices:
         ap.error("--kv-sharding dp needs --devices N (the DP-sharded "
                  "scenario runs on a mesh)")
@@ -548,17 +684,22 @@ def main():
     for name in full:
         v = getattr(args, name)
         kw[name] = profile[name] if v is None else v
-    if args.overload or args.devices:
-        # both scenarios drive their own arrivals over the constrained-
+    if args.overload or args.devices or args.compare_arch:
+        # these scenarios drive their own arrivals over the constrained-
         # pool sizing profile
         if args.rate is not None or args.time_scale != 1.0:
-            ap.error("--overload/--devices drive their own arrivals; "
-                     "--rate/--time-scale do not apply")
+            ap.error("--overload/--devices/--compare-arch drive their "
+                     "own arrivals; --rate/--time-scale do not apply")
         kw.pop("rate")
         for name, v in over["smoke" if args.smoke else "full"].items():
             if getattr(args, name) is None:
                 kw[name] = v
-    if args.overload:
+    if args.compare_arch:
+        out = args.out or "BENCH_serving_arch.json"
+        kw.pop("arch")
+        res = run_arch_compare(**kw)
+        _print_arch(res)
+    elif args.overload:
         out = args.out or "BENCH_serving_overload.json"
         res = run_overload(preempt=args.preempt or "auto", **kw)
         _print_overload(res)

@@ -9,7 +9,8 @@ policies (``strategies`` S1–S4 as remat/offload policies), and the
 pipelined MoE layer body itself (``pipeline_moe``).
 """
 from repro.core.granularity import GranularitySearcher
-from repro.core.memory_model import MoEMemory, PreemptionCost
+from repro.core.memory_model import (MoEMemory, PreemptionCost,
+                                     crossover_tokens)
 from repro.core.perf_model import (MoEWorkload, all_costs, cost,
                                    select_strategy, stream_times)
 from repro.core.pipeline_moe import capacity_for, pipelined_moe
@@ -26,7 +27,7 @@ __all__ = [
     "CPU_HOST", "GPU_A100", "GranularitySearcher", "HW_SPECS", "MoEMemory",
     "MoEWorkload", "PreemptionCost", "Q_TABLE", "TPU_V5E", "HardwareSpec",
     "Interference", "Resolver", "Strategy", "all_costs", "capacity_for",
-    "cost",
+    "cost", "crossover_tokens",
     "host_offload_supported", "make_searcher", "moe_workload",
     "pipelined_moe", "remat_policy", "resolve", "resolve_hw",
     "resolve_strategy", "select_strategy", "simulate", "stream_times",

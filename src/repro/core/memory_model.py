@@ -6,13 +6,25 @@ multiply by ``bytes_per`` for bytes. B is the token batch, M model dim,
 H hidden dim, E experts, n pipeline partitions.
 
 :class:`PreemptionCost` extends the same capacity-vs-bandwidth trade to
-the serving engine's KV cache: when the paged pool runs dry, a victim
-request is preempted either by *recompute* (drop its pages, pay the
-re-prefill FLOPs again) or by *offload* (round-trip its pages over the
-host link — the serving analogue of strategies S1–S3's activation
+the serving engine's state cache: when capacity runs dry, a victim
+request is preempted either by *recompute* (drop its cached state, pay
+the re-prefill FLOPs again) or by *offload* (round-trip its bytes over
+the host link — the serving analogue of strategies S1–S3's activation
 offload). The selector mirrors the paper's Eq. 7–10 structure: compare
 seconds of redundant compute against seconds of host-link copies, masked
 by hardware capability (no host offload ⇒ recompute only).
+
+The same model covers both cache geometries behind the ``StateCache``
+protocol (``repro.serve.state_cache``). For a **paged** KV cache
+``bytes_held`` grows linearly with ``tokens_cached`` (pages x page
+bytes), so both sides of the trade scale with sequence length and the
+offload/recompute choice is roughly length-independent. For a
+**constant-state** cache (recurrent mixers: mamba / xLSTM) ``bytes_held``
+is one fixed slot row regardless of how many tokens were absorbed into
+it — recompute cost still grows with ``tokens_cached`` while offload
+cost is flat, so past :func:`crossover_tokens` offload always wins.
+That asymmetry is the quantitative reason recurrent models preempt so
+cheaply: an O(1) snapshot buys back an O(len) re-prefill.
 """
 from __future__ import annotations
 
@@ -131,3 +143,22 @@ class PreemptionCost:
     def choice(self) -> str:
         return "offload" if self.offload_s < self.recompute_s \
             else "recompute"
+
+
+def crossover_tokens(bytes_held: float, flops_per_token: float,
+                     flops: float, host_bw: float, *, mfu: float = 0.5,
+                     eta: float = 0.95, link_shards: int = 1) -> float:
+    """Cached-token count above which offloading ``bytes_held`` beats
+    recomputing the prefill (``offload_s < recompute_s`` in
+    :class:`PreemptionCost`, solved for ``tokens_cached``).
+
+    For a constant-state cache ``bytes_held`` is the fixed per-slot state
+    size, so this is a single number per model: every victim longer than
+    it should offload. For a paged cache ``bytes_held`` itself grows with
+    the sequence, so the comparison must be re-evaluated per victim —
+    which is exactly what the engine does.
+    """
+    bw = host_bw * eta / max(link_shards, 1)
+    seconds_per_token = flops_per_token / max(flops * mfu, 1.0)
+    return (2.0 * bytes_held / max(bw, 1.0)) / max(seconds_per_token,
+                                                   1e-30)

@@ -3,12 +3,19 @@
 Two paths share one CLI:
 
 * ``--engine``: the continuous-batching engine (``repro.serve``) replays
-  a Poisson arrival trace of mixed-length requests with paged KV,
-  per-bucket adaptive (n, strategy) prefill, preemptive scheduling under
-  page pressure (``--preempt``, ``--num-pages``) and temperature /
+  a Poisson arrival trace of mixed-length requests with the state cache
+  the architecture needs (paged KV for attention — full K/V or the MLA
+  latent —, slot-indexed constant state for recurrent mamba/xLSTM
+  mixers, a composite of both for jamba; decided by
+  ``models/api.serving_support`` and printed at startup), per-bucket
+  adaptive (n, strategy) prefill, preemptive scheduling under capacity
+  pressure (``--preempt``, ``--num-pages``) and temperature /
   top-k / top-p sampling (``--temperature`` …) —
 
       PYTHONPATH=src python -m repro.launch.serve --engine --requests 16
+
+  Unservable configs (encoder-decoder, vision/audio frontends, m-rope)
+  exit with the stable reason string from ``serving_support``.
 
   ``--devices N`` serves over an N-device dp x ep mesh (EP-sharded
   prefill, replicated psum decode — see docs/distributed.md); on CPU
@@ -94,8 +101,13 @@ def legacy_loop(args, cfg, hw):
 
 
 def engine_loop(args, cfg, hw):
+    from repro.models.api import serving_support
     from repro.serve import EngineOptions, SamplingParams, run_poisson
 
+    kind, why = serving_support(cfg)
+    if kind is None:
+        raise SystemExit(f"{cfg.name} is not servable: {why}")
+    print(f"state cache: {kind}")
     opts = EngineOptions(page_size=args.page_size, max_slots=args.batch,
                          max_seq_len=args.prompt_len + args.gen,
                          chunk=args.chunk, hw=hw, preempt=args.preempt,

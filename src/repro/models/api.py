@@ -1,7 +1,8 @@
-"""Model API dispatch: decoder-only LM vs encoder-decoder."""
+"""Model API dispatch: decoder-only LM vs encoder-decoder, plus the
+single place that decides whether (and how) a config can be served."""
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.models import encdec, lm
@@ -11,26 +12,39 @@ def get_model(cfg: ArchConfig):
     return encdec if cfg.kind == "encdec" else lm
 
 
-def supports_paged(cfg: ArchConfig) -> Tuple[bool, str]:
-    """Can ``cfg`` run the paged-KV serving path (``repro.serve``)?
+def serving_support(cfg: ArchConfig) -> Tuple[Optional[str], str]:
+    """Capability query for the serving engine (``repro.serve``):
+    which :class:`~repro.serve.state_cache.StateCache` kind does ``cfg``
+    need — or why can it not be served at all?
 
-    The paged decode/prefill steps (``lm.decode_step_paged`` /
-    ``lm.prefill_chunk_paged``) cover decoder-only, token-input models
-    whose every mixer is plain attention — MLA latent caches and SSM /
-    xLSTM recurrent state are not paged (they are O(1) per sequence and
-    gain nothing from paging). Returns (ok, reason-if-not).
+    Returns ``(cache_kind, reason)``:
+
+    * ``("paged", "")`` — every mixer is attention: paged KV pools
+      (full K/V per token, or the compressed MLA latent);
+    * ``("constant", "")`` — no attention mixers at all (pure SSM /
+      xLSTM): slot-indexed O(1) recurrent state, nothing to page;
+    * ``("composite", "")`` — mixed mixers (jamba): a paged sub-cache
+      for the attention layers plus a constant-state sub-cache for the
+      rest;
+    * ``(None, reason)`` — not servable. The refusals live here and
+      only here (one stable reason string per cause): encoder-decoder
+      models, non-token frontends (vision/audio), m-rope positions, and
+      unknown mixers/positional schemes.
     """
     if cfg.kind != "decoder":
-        return False, "paged serving requires a decoder-only model"
+        return None, "serving requires a decoder-only model"
     if cfg.frontend != "none":
-        return False, f"frontend {cfg.frontend!r} not supported by engine"
-    if cfg.attn.mla is not None:
-        return False, "MLA latent cache is not paged"
+        return None, f"frontend {cfg.frontend!r} not supported by engine"
     if cfg.attn.mrope:
-        return False, "m-rope positions not supported by engine"
-    bad = {r["mixer"] for r in cfg.layer_roles()} - {"attn"}
-    if bad:
-        return False, f"non-attention mixers not paged: {sorted(bad)}"
+        return None, "m-rope positions not supported by engine"
     if cfg.positional not in ("rope", "learned", "none"):
-        return False, f"positional {cfg.positional!r} not supported"
-    return True, ""
+        return None, f"positional {cfg.positional!r} not supported"
+    mixers = {r["mixer"] for r in cfg.layer_roles()}
+    unknown = mixers - {"attn", "mamba", "mlstm", "slstm"}
+    if unknown:
+        return None, f"unknown mixers: {sorted(unknown)}"
+    if mixers == {"attn"}:
+        return "paged", ""
+    if "attn" not in mixers:
+        return "constant", ""
+    return "composite", ""

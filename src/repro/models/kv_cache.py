@@ -120,28 +120,32 @@ def cache_bytes(cache) -> int:
 def paged_layer_pool(cfg: ArchConfig, role: Dict, num_pages: int,
                      page_size: int, dtype=jnp.bfloat16,
                      abstract: bool = False):
-    """Page pool for one attention layer: K and V, each
-    ``[num_pages, page_size, kv_heads, head_dim]``."""
+    """Page pool for one attention layer.
+
+    Plain/GQA attention: K and V, each ``[num_pages, page_size,
+    kv_heads, head_dim]``. MLA: the compressed latent is what gets
+    paged — ``c_kv`` ``[num_pages, page_size, kv_lora_rank]`` plus the
+    shared rotary key ``k_rope`` ``[num_pages, page_size,
+    rope_head_dim]`` — the whole point of MLA's cache compression, and
+    per-token far smaller than full K/V.
+    """
     a = cfg.attn
-    if role["mixer"] != "attn" or a.mla is not None:
+    if role["mixer"] != "attn":
         raise NotImplementedError(
-            f"paged KV supports plain attention layers only "
-            f"(got mixer={role['mixer']!r}, mla={a.mla is not None})")
+            f"paged KV supports attention layers only "
+            f"(got mixer={role['mixer']!r})")
+    if a.mla is not None:
+        m = a.mla
+        return {"ckv_pool": _mk((num_pages, page_size, m.kv_lora_rank),
+                                dtype, abstract),
+                "kr_pool": _mk((num_pages, page_size, m.rope_head_dim),
+                               dtype, abstract)}
     kd = (num_pages, page_size, a.num_kv_heads, cfg.head_dim)
     return {"k_pool": _mk(kd, dtype, abstract),
             "v_pool": _mk(kd, dtype, abstract)}
 
 
-def init_paged_pools(cfg: ArchConfig, num_pages: int, page_size: int,
-                     dtype=jnp.bfloat16, abstract: bool = False):
-    """Stacked paged pools: leading dim = num_periods (scanned), matching
-    the parameter tree so ``lax.scan`` zips them per period."""
-    roles = cfg.layer_roles()
-    per_period = {f"l{i}": paged_layer_pool(cfg, role, num_pages, page_size,
-                                            dtype, abstract=True)
-                  for i, role in enumerate(roles)}
-    n = cfg.num_periods
-
+def _stacked(per_period, n, abstract):
     def _stackify(sds):
         shape = (n,) + sds.shape
         if abstract:
@@ -149,6 +153,37 @@ def init_paged_pools(cfg: ArchConfig, num_pages: int, page_size: int,
         return jnp.zeros(shape, sds.dtype)
 
     return jax.tree_util.tree_map(_stackify, per_period)
+
+
+def init_paged_pools(cfg: ArchConfig, num_pages: int, page_size: int,
+                     dtype=jnp.bfloat16, abstract: bool = False):
+    """Stacked paged pools: leading dim = num_periods (scanned), matching
+    the parameter tree so ``lax.scan`` zips them per period. Covers
+    exactly the attention layers — recurrent mixers keep O(1) state in
+    the slot-indexed tree of :func:`init_state_slots` instead (disjoint
+    ``l{i}`` key sets; a composite cache merges the two)."""
+    roles = cfg.layer_roles()
+    per_period = {f"l{i}": paged_layer_pool(cfg, role, num_pages, page_size,
+                                            dtype, abstract=True)
+                  for i, role in enumerate(roles)
+                  if role["mixer"] == "attn"}
+    return _stacked(per_period, cfg.num_periods, abstract)
+
+
+def init_state_slots(cfg: ArchConfig, max_slots: int, dtype=jnp.bfloat16,
+                     abstract: bool = False):
+    """Slot-indexed recurrent state for the serving engine: for every
+    non-attention layer, that mixer's per-sequence decode state
+    (:func:`layer_cache`) batched over ``max_slots`` and stacked to
+    ``[n_periods, max_slots, ...]``. The jitted decode step reads and
+    writes all slots batchwise; chunked prefill slices one slot's row.
+    Complement of :func:`init_paged_pools` over the layer roles."""
+    roles = cfg.layer_roles()
+    per_period = {f"l{i}": layer_cache(cfg, role, max_slots, 1, dtype,
+                                       abstract=True)
+                  for i, role in enumerate(roles)
+                  if role["mixer"] != "attn"}
+    return _stacked(per_period, cfg.num_periods, abstract)
 
 
 def gather_pages(pool, page_table):

@@ -260,6 +260,9 @@ def apply(params, x, *, cfg: ArchConfig, positions, is_global: bool = True,
           dist=None):
     """Self-attention layer. Returns (out, new_cache)."""
     a = cfg.attn
+    if cache is not None and "ckv_pool" in cache:
+        return _apply_mla_paged(params, x, cfg=cfg, positions=positions,
+                                mode=mode, cache=cache, dist=dist)
     if cache is not None and "k_pool" in cache:
         return _apply_paged(params, x, cfg=cfg, positions=positions,
                             is_global=is_global, mode=mode, cache=cache,
@@ -398,6 +401,73 @@ def _apply_paged(params, x, *, cfg: ArchConfig, positions, is_global: bool,
                               q_offset=cache["lens"][0])
 
     out = jnp.einsum("bshe,hed->bsd", out, params["w_o"].astype(x.dtype))
+    return out, new_cache
+
+
+def _apply_mla_paged(params, x, *, cfg: ArchConfig, positions, mode: str,
+                     cache: dict, dist=None):
+    """MLA over paged *latent* pools (``repro.serve``): pages hold the
+    compressed ``c_kv`` ``[P, ps, kv_lora_rank]`` and shared rotary key
+    ``k_rope`` ``[P, ps, rope_head_dim]`` instead of full K/V — the
+    scatter/gather primitives are trailing-dim generic, so the page
+    allocator is untouched; only the per-token payload shrinks.
+
+    The attention itself is the absorbed formulation (q projected into
+    the latent space) for decode *and* chunked prefill: the gathered
+    latents are never expanded to per-head K/V against the whole cache.
+    Causality is one mask — key position ``t`` is visible to the query
+    at absolute position ``positions[b, s]`` iff ``t <= positions``
+    (decode passes ``lens`` so the just-written token is included).
+    Padding/inactive-slot writes redirect to the sink page exactly like
+    the plain paged path; their query rows read finite garbage that the
+    engine discards.
+    """
+    from repro.distributed.context import constrain
+    from repro.models import kv_cache as KV
+
+    a, m = cfg.attn, cfg.attn.mla
+    dt = x.dtype
+    s = x.shape[1]
+    q_nope, q_rope = _mla_q(params, x, cfg)
+    q_rope = rope_lib.apply_rope(q_rope, positions, a.rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(dt))
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["w_kr"].astype(dt))
+    k_rope = rope_lib.apply_rope(k_rope[:, :, None, :], positions,
+                                 a.rope_theta)[:, :, 0, :]
+    if s == 1:
+        if dist is not None:
+            q_nope = constrain(dist, q_nope, ("dp", None, None, None))
+            q_rope = constrain(dist, q_rope, ("dp", None, None, None))
+    else:
+        assert x.shape[0] == 1, "paged chunked prefill runs one sequence"
+
+    valid = cache.get("write_valid")
+    sink = cache.get("write_sink")
+    sink = 0 if sink is None else sink
+    ckv_pool = KV.scatter_pages(cache["ckv_pool"], cache["page_table"],
+                                positions, c_kv, valid, sink=sink)
+    kr_pool = KV.scatter_pages(cache["kr_pool"], cache["page_table"],
+                               positions, k_rope, valid, sink=sink)
+    new_cache = {"ckv_pool": ckv_pool, "kr_pool": kr_pool}
+
+    ckv_all = KV.gather_pages(ckv_pool, cache["page_table"])  # [B, T, r]
+    kr_all = KV.gather_pages(kr_pool, cache["page_table"])    # [B, T, e]
+    q_abs = jnp.einsum("bshe,rhe->bshr", q_nope,
+                       params["w_uk"].astype(dt))
+    s_ = (jnp.einsum("bshr,btr->bhst", q_abs, ckv_all.astype(dt),
+                     preferred_element_type=jnp.float32)
+          + jnp.einsum("bshe,bte->bhst", q_rope, kr_all.astype(dt),
+                       preferred_element_type=jnp.float32))
+    s_ = s_ * ((m.nope_head_dim + m.rope_head_dim) ** -0.5)
+    t = ckv_all.shape[1]
+    mask = jnp.arange(t)[None, None, :] <= positions[:, :, None]  # [B,S,T]
+    s_ = jnp.where(mask[:, None, :, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", p, ckv_all.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhe->bshe", ctx.astype(dt),
+                     params["w_uv"].astype(dt))
+    out = jnp.einsum("bshe,hed->bsd", out, params["w_o"].astype(dt))
     return out, new_cache
 
 

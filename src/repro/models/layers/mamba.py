@@ -87,8 +87,16 @@ def _ssm_scan_chunked(x, dt, b_mat, c_mat, a, h0, chunk: int):
     return y, h_final
 
 
-def _conv1d_causal(x, w, b, *, state: Optional[jax.Array] = None):
-    """Depthwise causal conv. x:[B,S,DI]; w:[K,DI]; state:[B,K-1,DI]."""
+def _conv1d_causal(x, w, b, *, state: Optional[jax.Array] = None,
+                   valid_len=None):
+    """Depthwise causal conv. x:[B,S,DI]; w:[K,DI]; state:[B,K-1,DI].
+
+    ``valid_len`` (int32 scalar, serving prefill): the chunk is padded
+    past ``valid_len`` real tokens, so the carried state is the window
+    ending at the last *real* token — ``xp[:, vl:vl+K-1]`` (``xp`` =
+    prior state ++ chunk, so a short chunk correctly overlaps into the
+    prior state) — not the static tail, which would capture padding.
+    """
     k = w.shape[0]
     if state is None:
         pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
@@ -96,7 +104,13 @@ def _conv1d_causal(x, w, b, *, state: Optional[jax.Array] = None):
         pad = state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)
     out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
-    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    if k == 1:
+        new_state = pad
+    elif valid_len is None:
+        new_state = xp[:, -(k - 1):]
+    else:
+        new_state = jax.lax.dynamic_slice_in_dim(xp, valid_len, k - 1,
+                                                 axis=1)
     return out + b[None, None], new_state
 
 
@@ -110,10 +124,19 @@ def apply(params, x, *, cfg: ArchConfig, mode: str = "train",
     xz = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(dt_))
     xin, z = jnp.split(xz, 2, axis=-1)
 
-    conv_state = cache["conv"] if mode == "decode" else None
+    # serving chunked prefill: the chunk is bucket-padded at the end
+    # (``write_valid`` marks real tokens) and the recurrent state must
+    # carry across chunks — read it from the cache in every cached mode
+    # (a fresh cache holds zeros, so whole-prompt dense prefill is
+    # unchanged) and freeze it through the padding.
+    valid = cache.get("write_valid") if mode == "prefill" \
+        and cache is not None else None
+    vl = None if valid is None else \
+        jnp.sum(valid[0].astype(jnp.int32))        # serving prefill: B==1
+    conv_state = cache["conv"] if cache is not None else None
     xc, new_conv = _conv1d_causal(xin, params["conv_w"].astype(dt_),
                                   params["conv_b"].astype(dt_),
-                                  state=conv_state)
+                                  state=conv_state, valid_len=vl)
     xc = jax.nn.silu(xc)
 
     proj = jnp.einsum("bse,ef->bsf", xc, params["w_x"].astype(dt_))
@@ -123,10 +146,15 @@ def apply(params, x, *, cfg: ArchConfig, mode: str = "train",
     dt_full = jnp.einsum("bsr,re->bse", dt_r, params["w_dt"].astype(dt_))
     dt_full = jax.nn.softplus(dt_full.astype(jnp.float32)
                               + params["b_dt"].astype(jnp.float32))
+    if valid is not None:
+        # dt=0 at padding => a_bar = exp(0) = 1, bx = 0: the SSM state
+        # passes through padded positions untouched (their y is garbage
+        # but discarded — padding always trails the real tokens)
+        dt_full = jnp.where(valid[..., None], dt_full, 0.0)
     a = -jnp.exp(params["a_log"].astype(jnp.float32))      # [DI,N] negative
 
     bsz = x.shape[0]
-    h0 = (cache["ssm"].astype(jnp.float32) if mode == "decode" else
+    h0 = (cache["ssm"].astype(jnp.float32) if cache is not None else
           jnp.zeros((bsz, d_inner, m.d_state), jnp.float32))
 
     if mode == "decode":                      # single step, closed form

@@ -120,10 +120,18 @@ def mlstm_apply(params, x, *, cfg: ArchConfig, mode: str = "train",
 
     xz = jnp.einsum("bsd,de->bse", x, params["w_up"].astype(dt))
     xm, z = jnp.split(xz, 2, axis=-1)
-    conv_state = cache["conv"] if mode == "decode" else None
+    # serving chunked prefill: carry conv + cell state across chunks
+    # (fresh caches hold zeros, so whole-prompt dense prefill is
+    # unchanged) and freeze the recurrence through the chunk's trailing
+    # bucket padding (``write_valid``)
+    valid = cache.get("write_valid") if mode == "prefill" \
+        and cache is not None else None
+    vl = None if valid is None else \
+        jnp.sum(valid[0].astype(jnp.int32))        # serving prefill: B==1
+    conv_state = cache["conv"] if cache is not None else None
     xc, new_conv = _conv1d_causal(xm, params["conv_w"].astype(dt),
                                   params["conv_b"].astype(dt),
-                                  state=conv_state)
+                                  state=conv_state, valid_len=vl)
     xc = jax.nn.silu(xc)
     b, s, _ = x.shape
     xch = xc.reshape(b, s, nh, dh)
@@ -134,6 +142,13 @@ def mlstm_apply(params, x, *, cfg: ArchConfig, mode: str = "train",
              .astype(jnp.float32) + params["b_if"].astype(jnp.float32))
     lgi, lgf_raw = gates[..., :nh], gates[..., nh:]
     lgf = jax.nn.log_sigmoid(lgf_raw)
+    if valid is not None:
+        # padded steps contribute nothing (input gate -> -inf) and decay
+        # nothing (forget gate -> log 1 = 0): the chunk-final (C, n, m)
+        # equals the state at the last real token exactly — the running
+        # stabilizer m stops moving once lf_cum freezes
+        lgi = jnp.where(valid[..., None], lgi, NEG_INF)
+        lgf = jnp.where(valid[..., None], lgf, 0.0)
 
     if mode == "decode":
         c0 = cache["c"].astype(jnp.float32)
@@ -150,9 +165,14 @@ def mlstm_apply(params, x, *, cfg: ArchConfig, mode: str = "train",
         l = min(chunk, s)
         assert s % l == 0
         nc = s // l
-        c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
-        n0 = jnp.zeros((b, nh, dh), jnp.float32)
-        m0 = jnp.zeros((b, nh), jnp.float32)
+        if cache is not None:        # chunked prefill resumes mid-prompt
+            c0 = cache["c"].astype(jnp.float32)
+            n0 = cache["n"].astype(jnp.float32)
+            m0 = cache["m"].astype(jnp.float32)
+        else:
+            c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+            n0 = jnp.zeros((b, nh, dh), jnp.float32)
+            m0 = jnp.zeros((b, nh), jnp.float32)
         body = jax.checkpoint(
             lambda carry, args: _mlstm_chunk(carry, args, dh),
             prevent_cse=False)
@@ -210,7 +230,16 @@ def slstm_apply(params, x, *, cfg: ArchConfig, mode: str = "train",
     wx = wx.reshape(b, s, 4, nh, dh)
     r = params["r_gates"].astype(jnp.float32)      # [nh, dh, 4*dh]
 
-    def step(carry, wxt):
+    # serving chunked prefill: the chunk's trailing bucket padding must
+    # not advance the recurrence — the scan carries the old state
+    # through padded steps (their h output is garbage and discarded)
+    valid = cache.get("write_valid") if mode == "prefill" \
+        and cache is not None else None
+    valid_seq = (jnp.ones((s, b), bool) if valid is None
+                 else valid.transpose(1, 0))
+
+    def step(carry, inputs):
+        wxt, vt = inputs
         c, n, m, h = carry                          # [B,nh,dh] each
         rec = jnp.einsum("bhe,hef->bhf", h, r).reshape(b, nh, 4, dh)
         zt = wxt[:, 0] + rec[:, :, 0]
@@ -224,9 +253,12 @@ def slstm_apply(params, x, *, cfg: ArchConfig, mode: str = "train",
         c_new = f_ * c + i_ * jnp.tanh(zt)
         n_new = f_ * n + i_
         h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
-        return (c_new, n_new, m_new, h_new), h_new
+        keep = vt[:, None, None]
+        new = tuple(jnp.where(keep, nw, old) for nw, old in
+                    zip((c_new, n_new, m_new, h_new), carry))
+        return new, h_new
 
-    if mode == "decode":
+    if cache is not None:            # decode, or chunked prefill resume
         carry0 = tuple(cache[k_].astype(jnp.float32)
                        for k_ in ("c", "n", "m", "h"))
     else:
@@ -234,7 +266,7 @@ def slstm_apply(params, x, *, cfg: ArchConfig, mode: str = "train",
         carry0 = (z0, z0, z0, z0)
 
     carry1, hs = jax.lax.scan(step, carry0,
-                              wx.transpose(1, 0, 2, 3, 4))
+                              (wx.transpose(1, 0, 2, 3, 4), valid_seq))
     hseq = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(dt)
 
     new_cache = None

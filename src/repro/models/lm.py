@@ -114,13 +114,24 @@ def forward(params, batch, cfg: ArchConfig, *, mode: str = "train",
                   "write_valid": cache.get("write_valid"),
                   "write_sink": cache.get("write_sink")}
                  if paged else None)
+    # serving caches for recurrent mixers are slot-indexed [slots, ...]
+    # state (no paging); chunked prefill (B == 1) works on one slot's
+    # row, selected by ``cache["slot"]`` ``[1]``
+    slot = cache.get("slot") if paged else None
 
     def period_body(carry, xs):
         x, aux = carry
         pparams, pcache = xs
         new_pcache = {} if pcache is not None else None
         for i, role in enumerate(roles):
-            lcache = pcache[f"l{i}"] if pcache is not None else None
+            lcache = pcache.get(f"l{i}") if pcache is not None else None
+            recurrent = (shared_kv is not None and lcache is not None
+                         and role["mixer"] != "attn")
+            full = lcache
+            if recurrent and slot is not None:   # chunked prefill: B == 1
+                lcache = jax.tree_util.tree_map(
+                    lambda f: jax.lax.dynamic_slice_in_dim(f, slot[0], 1,
+                                                           axis=0), full)
             if shared_kv is not None and lcache is not None:
                 lcache = dict(lcache, **{k: v for k, v in shared_kv.items()
                                          if v is not None})
@@ -130,6 +141,25 @@ def forward(params, batch, cfg: ArchConfig, *, mode: str = "train",
                 positions3=positions3)
             aux = jax.tree_util.tree_map(jnp.add, aux, a)
             if new_pcache is not None:
+                if recurrent and nc is not None:
+                    if slot is not None:
+                        # write the one slot's updated row back in place
+                        nc = jax.tree_util.tree_map(
+                            lambda f, n: jax.lax.dynamic_update_slice_in_dim(
+                                f, n.astype(f.dtype), slot[0], axis=0),
+                            full, nc)
+                    else:
+                        # batched decode over all slots: freeze the state
+                        # of inactive (finished / mid-prefill) slots —
+                        # the garbage computed for them is finite but
+                        # must never stick
+                        act = shared_kv.get("write_valid")
+                        if act is not None:
+                            keep = act[:, 0]
+                            nc = {k_: jnp.where(
+                                keep.reshape((-1,) + (1,) * (v.ndim - 1)),
+                                v.astype(full[k_].dtype), full[k_])
+                                for k_, v in nc.items()}
                 new_pcache[f"l{i}"] = nc if nc is not None else lcache
         return (x, aux), new_pcache
 
@@ -276,16 +306,21 @@ def decode_step_paged(params, pools, page_table, lens, tokens,
 
 
 def prefill_chunk_paged(params, pools, page_table, pos0, tokens, valid_len,
-                        cfg: ArchConfig, dist=None, write_sink=None):
+                        cfg: ArchConfig, dist=None, write_sink=None,
+                        slot=None):
     """One chunked-prefill step for a single sequence.
 
     tokens ``[1, C]`` (bucket-padded); page_table ``[1, NP]``; pos0
     ``[1]`` = tokens already prefilled; valid_len scalar = real (unpadded)
     tokens in this chunk; ``write_sink`` ``[1]`` = the sink page masked
     writes redirect to (the request's DP shard's own sink under
-    ``kv_sharding="dp"``; page 0 otherwise). Pad positions' KV writes are
-    masked and their logits discarded. Returns (logits at the last real
-    token ``[1, vocab]``, new pools).
+    ``kv_sharding="dp"``; page 0 otherwise); ``slot`` ``[1]`` = the
+    request's slot index — required when the model has recurrent mixers,
+    whose slot-indexed state rows this chunk reads and writes in place
+    (attention-only models have no per-slot state in the pools and may
+    omit it). Pad positions' KV writes are masked and their logits
+    discarded. Returns (logits at the last real token ``[1, vocab]``,
+    new pools).
     """
     c = tokens.shape[1]
     write_valid = jnp.arange(c)[None, :] < valid_len
@@ -293,6 +328,8 @@ def prefill_chunk_paged(params, pools, page_table, pos0, tokens, valid_len,
              "write_valid": write_valid}
     if write_sink is not None:
         cache["write_sink"] = write_sink
+    if slot is not None:
+        cache["slot"] = slot
     logits, _, new_cache = forward(params, {"tokens": tokens}, cfg,
                                    mode="prefill", cache=cache, dist=dist)
     last = jax.lax.dynamic_slice_in_dim(

@@ -87,6 +87,19 @@ def apply(params, x, *, cfg: ArchConfig, dist=None, mode: str = "train",
                None)
     p_specs = _param_specs(cfg, ep_axis, zero3_axes)
 
+    # Pin the shard_map boundary: without this, GSPMD propagates the
+    # seq-sharded in_spec *backward* into the surrounding layers, and a
+    # sequence axis sharded over the EP axis miscompiles the recurrent
+    # mixers on jax 0.4.x (the causal conv / chunked SSM scan partition
+    # without the needed halo exchange — wrong *values*, not just a bad
+    # layout; see tests/test_serving_conformance.py's jamba arch leg).
+    # The explicit replicated constraint keeps the residual stream's
+    # layout at the boundary and reshards only inside it.
+    if seq_shardable:
+        from jax.sharding import NamedSharding
+        repl = NamedSharding(mesh, P(None, None, None))
+        x = jax.lax.with_sharding_constraint(x, repl)
+
     # decode uses the replicated-token path: aux is invarying over the EP
     # axis there, so only reduce over the axes the value varies on
     reduce_axes = dp + ((ep_axis,) if seq_shardable else ())
@@ -105,4 +118,6 @@ def apply(params, x, *, cfg: ArchConfig, dist=None, mode: str = "train",
     out, aux = shard_map(
         body, mesh=mesh, in_specs=(p_specs, x_spec),
         out_specs=(x_spec, P()))(params, x)
+    if seq_shardable:
+        out = jax.lax.with_sharding_constraint(out, repl)
     return out, aux

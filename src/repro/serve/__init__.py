@@ -14,12 +14,27 @@ Module map
                   reservation with ``full_reserve``, prompt-only
                   reservation + on-demand decode growth otherwise),
                   preemption / resume queues, chunked-prefill / decode
-                  interleaving.
-``paged_kv.py``   :class:`PagedKVCache` — host page allocator (per-shard
-                  free lists, page table, per-slot lengths, host offload
-                  pool) over the device pools from ``models/kv_cache
-                  .init_paged_pools``; each shard's local page 0 is its
-                  reserved masked-write sink (one shard unsharded);
+                  interleaving. Talks only to the ``StateCache``
+                  protocol.
+``state_cache.py`` :class:`StateCache` — the per-request device-state
+                  protocol the engine/scheduler program against: slot
+                  lifecycle, admission, shard placement, snapshot /
+                  restore for preemption, device buffers for the jitted
+                  steps, byte accounting. Implementations:
+                  :class:`ConstantStateCache` (slot-indexed O(1)
+                  recurrent state — mamba conv window + SSM state,
+                  xLSTM cell state), :class:`CompositeStateCache`
+                  (paged + constant sub-caches for mixed-mixer models
+                  like jamba) and :class:`PagedKVCache` below. The
+                  kind is chosen by ``models/api.serving_support`` via
+                  :func:`make_state_cache`.
+``paged_kv.py``   :class:`PagedKVCache` — the paged ``StateCache``:
+                  host page allocator (per-shard free lists, page
+                  table, per-slot lengths, host offload pool) over the
+                  device pools from ``models/kv_cache
+                  .init_paged_pools`` (full K/V per token, or the
+                  compressed MLA latent); each shard's local page 0 is
+                  its reserved masked-write sink (one shard unsharded);
                   ``cache_bytes`` / ``used_bytes`` / ``per_device_*`` /
                   ``swap_*_bytes`` accounting.
 ``adaptive.py``   :class:`PrefillBucketAdaptive` — power-of-two token
@@ -61,12 +76,16 @@ from repro.serve.paged_kv import PagedKVCache
 from repro.serve.request import Request, RequestState
 from repro.serve.sampling import SamplingParams, sample_tokens, stop_hit
 from repro.serve.scheduler import Scheduler
+from repro.serve.state_cache import (CompositeStateCache,
+                                     ConstantStateCache, StateCache,
+                                     make_state_cache)
 from repro.serve.trace import (TraceEntry, dense_greedy_reference,
                                poisson_trace, replay, run_poisson)
 
 __all__ = [
-    "Engine", "EngineOptions", "PagedKVCache", "PrefillBucketAdaptive",
-    "Request", "RequestState", "SamplingParams", "Scheduler", "TraceEntry",
-    "dense_greedy_reference", "force_adaptive", "poisson_trace", "replay",
-    "run_poisson", "sample_tokens", "stop_hit",
+    "CompositeStateCache", "ConstantStateCache", "Engine", "EngineOptions",
+    "PagedKVCache", "PrefillBucketAdaptive", "Request", "RequestState",
+    "SamplingParams", "Scheduler", "StateCache", "TraceEntry",
+    "dense_greedy_reference", "force_adaptive", "make_state_cache",
+    "poisson_trace", "replay", "run_poisson", "sample_tokens", "stop_hit",
 ]

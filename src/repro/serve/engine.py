@@ -1,7 +1,11 @@
 """Continuous-batching serving engine with preemptive scheduling.
 
-One :class:`Engine` owns: the model params, a :class:`PagedKVCache`
-(device page pools + host allocator + host offload pool), a
+One :class:`Engine` owns: the model params, a ``StateCache`` (the
+per-request device-state cache behind the protocol in
+``repro.serve.state_cache`` — paged KV pools for attention, slot-indexed
+O(1) state for recurrent mixers, or a composite of both for mixed
+models like jamba; the kind is decided by ``models/api.serving_support``
+and everything below talks only to the protocol surface), a
 :class:`Scheduler` (admission + prefill/decode interleave + preemption
 bookkeeping) and a :class:`PrefillBucketAdaptive` (per-bucket MPipeMoE
 (n, strategy) resolution). Each ``step()`` runs one jitted program —
@@ -46,8 +50,8 @@ into both jitted step bodies. Chunked prefill then runs
 dispatch/combine All-to-Alls — which the wall-clock measure therefore
 times too) while decode runs the **replicated** psum-combine layout.
 
-The paged KV pools have two mesh layouts
-(``EngineOptions.kv_sharding``, see :class:`PagedKVCache`):
+The cache pools have two mesh layouts
+(``EngineOptions.kv_sharding``, see ``repro.serve.state_cache``):
 ``"replicated"`` keeps one logical pool with a replica on every device
 (the PR 4 baseline — devices add compute but zero KV capacity), while
 ``"dp"`` shards the pools' page axis, the page table, the lens and the
@@ -79,9 +83,9 @@ from repro.core.memory_model import PreemptionCost
 from repro.core.strategies import host_offload_supported
 from repro.core.types import TPU_V5E, HardwareSpec, Strategy
 from repro.distributed.context import make_serving_context
-from repro.models.api import get_model, supports_paged
+from repro.models.api import get_model, serving_support
 from repro.serve.adaptive import PrefillBucketAdaptive, force_adaptive
-from repro.serve.paged_kv import KV_SHARDINGS, PagedKVCache
+from repro.serve.state_cache import KV_SHARDINGS, make_state_cache
 from repro.serve.request import Request, RequestState
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import Scheduler
@@ -117,6 +121,10 @@ class EngineOptions:
     preempt: str = "auto"              # auto | recompute | offload | never
     allow_offload: Optional[bool] = None   # None = host_offload_supported
     preempt_mfu: float = 0.5           # assumed MFU of re-prefill (cost)
+    storm_every: int = 0               # N>0: force-preempt a victim every
+                                       # N steps (preemption-storm tests —
+                                       # constant-state caches never run
+                                       # dry on their own)
 
     @property
     def max_pages_per_seq(self) -> int:
@@ -126,9 +134,10 @@ class EngineOptions:
 class Engine:
     def __init__(self, cfg: ArchConfig, params=None, *,
                  options: Optional[EngineOptions] = None, key=None):
-        ok, why = supports_paged(cfg)
-        if not ok:
+        kind, why = serving_support(cfg)
+        if kind is None:
             raise NotImplementedError(f"{cfg.name}: {why}")
+        self.cache_kind = kind
         self.opts = opts = options or EngineOptions()
         assert opts.preempt in PREEMPT_POLICIES, opts.preempt
         assert opts.kv_sharding in KV_SHARDINGS, opts.kv_sharding
@@ -159,14 +168,16 @@ class Engine:
         self.params = self._place_params(params)
 
         dtype = jnp.dtype(opts.dtype or cfg.compute_dtype)
-        # num_pages=0 = auto: PagedKVCache sizes the worst case itself
-        # (it owns the shard rounding + per-shard sink rules)
-        self.kv = PagedKVCache(cfg, num_pages=opts.num_pages,
-                               page_size=opts.page_size,
-                               max_slots=opts.max_slots,
-                               max_pages_per_seq=opts.max_pages_per_seq,
-                               dtype=dtype, dist=self.dist,
-                               kv_sharding=opts.kv_sharding)
+        # the cache kind (paged / constant / composite) was decided by
+        # serving_support above; num_pages=0 = auto (the paged cache
+        # sizes the worst case itself — it owns the shard rounding +
+        # per-shard sink rules)
+        self.kv = make_state_cache(
+            cfg, kind, num_pages=opts.num_pages,
+            page_size=opts.page_size, max_slots=opts.max_slots,
+            max_pages_per_seq=opts.max_pages_per_seq,
+            max_seq_len=opts.max_seq_len, dtype=dtype, dist=self.dist,
+            kv_sharding=opts.kv_sharding)
         if opts.kv_sharding == "dp" and self.kv.n_shards == 1:
             log.warning(
                 "kv_sharding='dp' but the mesh's data axis has extent 1 "
@@ -199,6 +210,7 @@ class Engine:
         self._decode_sinks = self.kv.device_sinks()
         self._next_rid = 0
         self.step_count = 0
+        self._storm_tick = 0
         self.prefill_rejits = 0
         # actual trace counts of the jitted step bodies (a retrace means
         # the jit cache churned — e.g. an input arrived with a different
@@ -267,12 +279,8 @@ class Engine:
         step would recompile against it. Under the DP layout this is
         also the prefill→decode handoff: the chunk's KV writes land
         pinned on the owning shard's pages, so decode reads them with no
-        re-placement."""
-        spec = self.kv.pool_sharding
-        if spec is None:
-            return pools
-        return jax.tree_util.tree_map(
-            lambda x: jax.lax.with_sharding_constraint(x, spec), pools)
+        re-placement. Delegates to the cache, which owns the layout."""
+        return self.kv.pin_pools(pools)
 
     # -- jitted step bodies ---------------------------------------------
     def _decode_step(self, params, pools, page_table, lens, tokens, active,
@@ -290,12 +298,12 @@ class Engine:
                if m is not None else (1, "none"))
         fn = self._prefill_fns.pop(key, None)          # LRU: re-insert
         if fn is None:
-            def body(params, pools, pt_row, pos0, toks, valid_len, sink,
-                     temp, top_k, top_p, seed, pos, _cfg=rcfg):
+            def body(params, pools, pt_row, pos0, toks, valid_len, slot,
+                     sink, temp, top_k, top_p, seed, pos, _cfg=rcfg):
                 self.prefill_traces += 1
                 logits, new_pools = self.model.prefill_chunk_paged(
                     params, pools, pt_row, pos0, toks, valid_len, _cfg,
-                    dist=self.dist, write_sink=sink)
+                    dist=self.dist, write_sink=sink, slot=slot)
                 return sample_tokens(logits, temp, top_k, top_p, seed,
                                      pos), self._pin_pools(new_pools)
             fn = jax.jit(body)
@@ -346,10 +354,11 @@ class Engine:
         fn = self._prefill_fn(b, rcfg)
         kv = self.kv
         args = (self.params, kv.pools,
-                self._put(np.zeros((1, kv.max_pages_per_seq), np.int32)),
+                self._put(np.zeros((1, kv.page_table_width), np.int32)),
                 self._put(np.zeros((1,), np.int32)),
                 self._put(np.zeros((1, b), np.int32)),
                 self._put(np.asarray(b, np.int32)),
+                self._put(np.zeros((1,), np.int32)),     # slot 0 (probe)
                 self._put(np.zeros((1,), np.int32)),     # sink: page 0
                 *self._sample_args([None]))
         with self._mesh_scope():
@@ -376,14 +385,11 @@ class Engine:
                       arrival_s=(time.perf_counter() if arrival_s is None
                                  else arrival_s))
         self._next_rid += 1
-        cap = self.kv.max_pages_per_seq * self.kv.page_size
-        if req.total_budget > cap or \
-                self.kv.pages_for(req.total_budget) > \
-                self.kv.shard_capacity_pages:
+        if not self.kv.admissible(req.total_budget):
             raise ValueError(
                 f"request {req.rid}: budget {req.total_budget} tokens "
-                f"exceeds engine capacity ({cap} per seq, "
-                f"{self.kv.shard_capacity_pages} pages per KV shard)")
+                f"exceeds engine capacity "
+                f"({self.kv.max_slot_tokens} tokens per slot)")
         self.scheduler.submit(req)
         return req
 
@@ -421,6 +427,7 @@ class Engine:
                          kv.device_lens(0),
                          self._put(np.zeros((1, b), np.int32)),
                          self._put(np.asarray(0, np.int32)),
+                         self._put(np.zeros((1,), np.int32)),
                          self._put(kv.sink_row(0)),
                          *self._sample_args([None]))
                 jax.block_until_ready(out[0])
@@ -430,11 +437,11 @@ class Engine:
     def _pick_victim(self, shard: Optional[int] = None
                      ) -> Optional[Request]:
         """Lowest priority, then youngest, among running requests that
-        actually hold pages — on ``shard`` when given (pool-dry is a
-        per-shard event under the DP-KV layout: only a victim on the dry
-        shard frees pages the grower can use)."""
+        actually hold cache bytes — on ``shard`` when given (pool-dry is
+        a per-shard event under the DP-KV layout: only a victim on the
+        dry shard frees capacity the grower can use)."""
         cands = [r for r in self.scheduler.running.values()
-                 if self.kv.slot_page_count(r.slot) > 0
+                 if self.kv.held_bytes(r.slot) > 0
                  and (shard is None
                       or self.kv.shard_of_slot(r.slot) == shard)]
         if not cands:
@@ -455,8 +462,7 @@ class Engine:
         hw = self.opts.hw
         cost = PreemptionCost(
             tokens_cached=int(self.kv.lens[req.slot]),
-            bytes_held=self.kv.slot_page_count(req.slot)
-            * self.kv.page_bytes,
+            bytes_held=self.kv.held_bytes(req.slot),
             flops_per_token=self._flops_per_token, flops=hw.flops,
             host_bw=hw.host_bw, mfu=self.opts.preempt_mfu,
             eta=hw.interference.eta_comp,
@@ -492,6 +498,17 @@ class Engine:
     # -- engine iteration ------------------------------------------------
     def step(self) -> Dict[str, Any]:
         """Admit, then run one jitted step (prefill chunk or decode)."""
+        # storm injection (tests/benchmarks): constant-state caches hold
+        # O(1) bytes per slot and never run dry, so preemption storms
+        # must be forced rather than provoked by a small pool
+        if (self.opts.storm_every and self.opts.preempt != "never"
+                and self.scheduler.running):
+            self._storm_tick += 1
+            if self._storm_tick >= self.opts.storm_every:
+                self._storm_tick = 0
+                victim = self._pick_victim()
+                if victim is not None:
+                    self._do_preempt(victim)
         self.scheduler.admit()
         if not (self.preempts["recompute"] or self.preempts["offload"]):
             self.peak_running_preempt_free = max(
@@ -509,7 +526,7 @@ class Engine:
         self.step_count += 1
         info.update(cache_bytes=self.kv.cache_bytes,
                     kv_used_bytes=self.kv.used_bytes,
-                    free_pages=self.kv.free_pages,
+                    free_pages=self.kv.free_units,
                     running=len(self.scheduler.running),
                     waiting=len(self.scheduler.waiting),
                     preempted=len(self.scheduler.resuming))
@@ -532,6 +549,7 @@ class Engine:
                                kv.device_page_table(slot),
                                kv.device_lens(slot), self._put(toks),
                                self._put(np.asarray(c, np.int32)),
+                               self._put(np.asarray([slot], np.int32)),
                                self._put(kv.sink_row(slot)),
                                *self._sample_args([req]))
         req.prefill_pos += c

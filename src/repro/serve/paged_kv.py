@@ -1,12 +1,17 @@
-"""Paged KV cache: host-side page allocator over the device page pools.
+"""Paged KV cache: host-side page allocator over the device page pools —
+the paged implementation of the :class:`~repro.serve.state_cache.StateCache`
+protocol (and, with an MLA config, the **paged latent cache**: the same
+allocator over per-token compressed-latent pools ``c_kv``/``k_rope``
+instead of full K/V — see ``models/kv_cache.paged_layer_pool``).
 
 Device side (``models/kv_cache.init_paged_pools``): per attention layer a
-global pool ``[num_pages, page_size, kv_heads, head_dim]`` shared by every
-in-flight sequence. Host side (this module): free lists of physical
-pages, a ``[max_slots, max_pages_per_seq]`` page table and per-slot
-lengths, mirrored to device as plain int32 arrays each step — plus a
-host-side offload pool holding the page contents of preempted-by-offload
-requests until they resume.
+global pool ``[num_pages, page_size, kv_heads, head_dim]`` (or
+``[num_pages, page_size, kv_lora_rank]`` + ``[num_pages, page_size,
+rope_head_dim]`` for MLA) shared by every in-flight sequence. Host side
+(this module): free lists of physical pages, a ``[max_slots,
+max_pages_per_seq]`` page table and per-slot lengths, mirrored to device
+as plain int32 arrays each step — plus a host-side offload pool holding
+the page contents of preempted-by-offload requests until they resume.
 
 Invariants (stated per shard — one shard unsharded, ``dp`` shards under
 ``kv_sharding="dp"``):
@@ -46,9 +51,9 @@ Mesh-sharded serving (``dist`` given), two layouts:
   ``pipelined_moe`` layout; its KV scatter lands in the owning shard's
   pages directly (GSPMD routes the writes — the prefill→decode handoff
   needs no copy) and the step output is pinned back to the page-sharded
-  layout (``Engine._pin_pools``). Each shard keeps its **own host-side
-  free list**; admission places a request on a shard (least-loaded,
-  sticky) and pool-dry is a per-shard event.
+  layout (``StateCache.pin_pools``). Each shard keeps its **own
+  host-side free list**; admission places a request on a shard
+  (least-loaded, sticky) and pool-dry is a per-shard event.
 
 ``cache_bytes``/``used_bytes`` report *logical* pool bytes;
 ``per_device_cache_bytes`` / ``per_device_peak_used_bytes`` report the
@@ -67,17 +72,14 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import kv_cache
+from repro.serve.state_cache import KV_SHARDINGS, StateCache, _round_up
 
 __all__ = ["KV_SHARDINGS", "PagedKVCache"]
 
-KV_SHARDINGS = ("replicated", "dp")
 
+class PagedKVCache(StateCache):
+    kind = "paged"
 
-def _round_up(x: int, mult: int) -> int:
-    return -(-int(x) // mult) * mult
-
-
-class PagedKVCache:
     def __init__(self, cfg: ArchConfig, *, num_pages: int, page_size: int,
                  max_slots: int, max_pages_per_seq: int,
                  dtype=jnp.bfloat16, dist=None,
@@ -86,42 +88,17 @@ class PagedKVCache:
         slot's full ``max_pages_per_seq`` budget, plus one sink page per
         shard) — the sizing lives here, next to the rounding rules it
         depends on, so callers cannot drift out of sync with them."""
-        assert kv_sharding in KV_SHARDINGS, kv_sharding
-        self.cfg = cfg
+        super().__init__(cfg, max_slots=max_slots, dist=dist,
+                         kv_sharding=kv_sharding, shards=shards)
         self.page_size = int(page_size)
         self.max_pages_per_seq = int(max_pages_per_seq)
-        self.dist = dist
-        self.kv_sharding = kv_sharding
-        # shard count: the mesh's dp extent under "dp" (overridable for
-        # host-side allocator tests that have no mesh), else 1
-        if shards:
-            n_shards = int(shards)
-        elif kv_sharding == "dp" and dist is not None:
-            n_shards = dist.dp_size
-        else:
-            n_shards = 1
-        self.n_shards = max(1, n_shards)
-        # each shard needs its sink + >= 1 real page; slots and pages
-        # round up to the shard count so the device arrays shard evenly
-        self.max_slots = _round_up(max_slots, self.n_shards)
+        # each shard needs its sink + >= 1 real page
         if num_pages == 0:      # auto: every slot's worst-case budget
             num_pages = self.max_slots * max_pages_per_seq + self.n_shards
         self.num_pages = max(_round_up(num_pages, self.n_shards),
                              2 * self.n_shards)
         self.pages_per_shard = self.num_pages // self.n_shards
-        self.slots_per_shard = self.max_slots // self.n_shards
 
-        # -- device placement ------------------------------------------
-        self._replicated = None
-        self._pool_spec = None       # pools: page axis over "data"
-        self._slot_spec = None       # [slots, ...] arrays over "data"
-        self._slot_specs = {}        # per-rank cache for to_device_slots
-        if dist is not None:
-            self._replicated = dist.named_sharding()
-            if self.n_shards > 1:
-                self._pool_spec = dist.named_sharding(None, "dp")
-                self._slot_spec = dist.named_sharding("dp")
-                self._slot_specs = {1: self._slot_spec}
         self.pools: Any = kv_cache.init_paged_pools(cfg, self.num_pages,
                                                     page_size, dtype)
         if self.pool_sharding is not None:
@@ -139,7 +116,6 @@ class PagedKVCache:
         for slot in range(self.max_slots):
             self.page_table[slot, :] = self.sink_page(
                 self.shard_of_slot(slot))
-        self.lens = np.zeros((self.max_slots,), np.int32)
         self._slot_pages: List[List[int]] = [[] for _ in
                                              range(self.max_slots)]
         # rid -> (host page-content tree, page count, owning shard):
@@ -147,23 +123,14 @@ class PagedKVCache:
         self._offloaded: Dict[int, Tuple[Any, int, int]] = {}
         self.peak_used_pages = 0
         self._peak_used_by_shard = [0] * self.n_shards
-        self.swap_out_bytes = 0
-        self.swap_in_bytes = 0
 
     # -- shard topology --------------------------------------------------
-    def shard_of_slot(self, slot: int) -> int:
-        return slot // self.slots_per_shard
-
     def shard_of_page(self, page: int) -> int:
         return page // self.pages_per_shard
 
     def sink_page(self, shard: int) -> int:
         """The shard's reserved masked-write sink (its local page 0)."""
         return shard * self.pages_per_shard
-
-    def slots_of(self, shard: int) -> range:
-        return range(shard * self.slots_per_shard,
-                     (shard + 1) * self.slots_per_shard)
 
     @property
     def shard_capacity_pages(self) -> int:
@@ -187,11 +154,22 @@ class PagedKVCache:
         return sum(len(fl) for fl in self._free_by_shard)
 
     @property
+    def free_units(self) -> int:
+        return self.free_pages
+
+    @property
     def used_pages(self) -> int:
         return (self.num_pages - self.n_shards) - self.free_pages
 
     def used_pages_of(self, shard: int) -> int:
         return self.shard_capacity_pages - self.free_pages_of(shard)
+
+    @property
+    def max_slot_tokens(self) -> int:
+        """Per-request token ceiling: the per-sequence page budget, or a
+        whole shard's allocatable pages, whichever binds first."""
+        return self.page_size * min(self.max_pages_per_seq,
+                                    self.shard_capacity_pages)
 
     def can_admit(self, total_tokens: int,
                   shard: Optional[int] = None) -> bool:
@@ -250,6 +228,9 @@ class PagedKVCache:
     def slot_capacity(self, slot: int) -> int:
         """Tokens the slot can hold with its currently-bound pages."""
         return len(self._slot_pages[slot]) * self.page_size
+
+    def held_bytes(self, slot: int) -> int:
+        return self.slot_page_count(slot) * self.page_bytes
 
     def grow_slot(self, slot: int) -> bool:
         """Bind one more page of the slot's shard. False when that shard
@@ -358,43 +339,13 @@ class PagedKVCache:
     # sharding per role (replicated, or slot-sharded over "data" for the
     # DP layout), so the jit caches never churn.
     @property
-    def pool_sharding(self):
-        """The pools' committed layout: page axis over "data" under
-        ``kv_sharding="dp"``, replicated otherwise (None unsharded).
-        Step outputs must be pinned back to this (``Engine._pin_pools``).
-        """
-        return self._pool_spec if self._pool_spec is not None \
-            else self._replicated
-
-    def to_device(self, x):
-        """Host array -> device array (replicated under a mesh)."""
-        if self._replicated is not None:
-            return jax.device_put(x, self._replicated)
-        return jnp.asarray(x)
-
-    def to_device_slots(self, x):
-        """Host ``[max_slots, ...]`` array -> device, sharded over the
-        slot axis under the DP layout (each dp group holds only its own
-        slots' rows), replicated otherwise."""
-        if self._slot_spec is not None:
-            nd = np.ndim(x)
-            spec = self._slot_specs.get(nd)      # hot path: decode calls
-            if spec is None:                     # this ~9x per step
-                spec = self.dist.named_sharding(
-                    "dp", *((None,) * (nd - 1)))
-                self._slot_specs[nd] = spec
-            return jax.device_put(x, spec)
-        return self.to_device(x)
+    def page_table_width(self) -> int:
+        return self.max_pages_per_seq
 
     def device_page_table(self, slot: Optional[int] = None):
         if slot is None:
             return self.to_device_slots(self.page_table.copy())
         return self.to_device(self.page_table[slot:slot + 1].copy())
-
-    def device_lens(self, slot: Optional[int] = None):
-        if slot is None:
-            return self.to_device_slots(self.lens.copy())
-        return self.to_device(self.lens[slot:slot + 1].copy())
 
     def device_sinks(self):
         """Per-slot sink page ids ``[max_slots]`` for the decode step's
@@ -407,14 +358,6 @@ class PagedKVCache:
         """``[1]`` sink page id for one slot's prefill chunk."""
         return np.asarray([self.sink_page(self.shard_of_slot(slot))],
                           np.int32)
-
-    @property
-    def replicas(self) -> int:
-        """Physical copies of each page (1 unsharded; every mesh device
-        under "replicated"; the ep devices of one dp group under "dp")."""
-        if self.dist is None:
-            return 1
-        return self.dist.mesh.size // self.n_shards
 
     # -- accounting ------------------------------------------------------
     @property

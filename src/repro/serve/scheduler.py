@@ -3,7 +3,7 @@
 Policy:
 * **Admission** is FCFS. Two reservation modes:
   - ``full_reserve=True`` (the conservative baseline): a queued request
-    is admitted only when the paged cache can reserve its whole budget
+    is admitted only when the cache can reserve its whole budget
     (prompt + max_new_tokens) up front — nothing mid-flight can ever
     starve, but the pool is massively over-reserved and bursty traffic
     queues behind it;
@@ -36,8 +36,14 @@ Policy:
   of MPipeMoE's pipelining (keep both "streams" busy instead of letting a
   long prefill stall every running sequence).
 
+The scheduler talks only to the ``StateCache`` protocol
+(``repro.serve.state_cache``) — slots, shards, reservations, offload —
+so the same admission/preemption machinery serves paged-KV attention
+models, constant-state recurrent models and composite (mixed-mixer)
+models without a branch anywhere below this docstring.
+
 Mesh-sharded serving: the scheduler stays device-count agnostic — it
-plans over *logical* shards and slots the :class:`PagedKVCache` defines
+plans over *logical* shards and slots the cache defines
 (one shard when the pools replicate). All allocator state is host-side,
 so one admission / preemption decision is valid on every device and no
 per-device bookkeeping exists to drift out of sync (the would-be
@@ -49,14 +55,14 @@ from __future__ import annotations
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
-from repro.serve.paged_kv import PagedKVCache
 from repro.serve.request import Request, RequestState
+from repro.serve.state_cache import StateCache
 
 __all__ = ["Scheduler"]
 
 
 class Scheduler:
-    def __init__(self, kv: PagedKVCache, *, chunk: int = 64,
+    def __init__(self, kv: StateCache, *, chunk: int = 64,
                  full_reserve: bool = False):
         assert chunk >= 1
         self.kv = kv

@@ -1,0 +1,724 @@
+"""The ``StateCache`` protocol: per-request device state behind one
+slot-indexed surface, so ``Engine``/``Scheduler`` never see a concrete
+cache implementation.
+
+Everything the engine needs from "the cache" is a small contract:
+
+* **slot lifecycle** — ``alloc_slot`` / ``grow_slot`` / ``free_slot``
+  plus per-slot token accounting (the shared host ``lens`` array);
+* **admission budgeting** — ``admissible`` (can this request *ever*
+  fit a slot), ``can_admit`` / ``best_shard`` (does it fit *now*, and
+  where), ``held_bytes`` (what a victim would release);
+* **preemption snapshot/restore** — ``offload_slot`` parks a slot's
+  device state in a host pool keyed by request id, ``restore_slot``
+  brings it back (placement is sticky: a request restores onto its
+  original dp shard);
+* **dp-shard placement** — slots partition over ``n_shards`` mesh data
+  groups (``shard_of_slot`` / ``slots_of``), with the committed device
+  layouts for pools and per-slot rows (``pool_sharding`` /
+  ``to_device_slots`` / ``pin_pools``);
+* **device buffers for the jit'd step** — ``pools`` (the arrays the
+  model reads/writes), ``device_page_table`` / ``device_lens`` /
+  ``device_sinks`` / ``sink_row`` (the int32 step inputs, defensively
+  copied — see the host-buffer aliasing gotcha in
+  ``docs/architecture.md``);
+* **byte accounting** — ``cache_bytes`` / ``used_bytes`` / peaks /
+  swap counters for ``Engine.stats()``.
+
+Implementations:
+
+* :class:`~repro.serve.paged_kv.PagedKVCache` — paged attention KV
+  (full K/V per token, or the compressed MLA latent ``c_kv`` — same
+  allocator, latent trailing dims);
+* :class:`ConstantStateCache` (here) — slot-indexed recurrent state
+  for mamba/xLSTM mixers: O(1) bytes per sequence regardless of
+  length, so there is nothing to page — admission is by free slot,
+  growth is free, and snapshot/restore moves one fixed-size slot row;
+* :class:`CompositeStateCache` (here) — mixed-mixer models (jamba =
+  attn + mamba layers): one paged sub-cache for the attention layers
+  and one constant-state sub-cache for the recurrent layers, fanned
+  out behind the same protocol.
+
+:func:`make_state_cache` builds the right implementation from the
+``cache_kind`` reported by ``models/api.serving_support``.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import kv_cache
+
+__all__ = ["KV_SHARDINGS", "CompositeStateCache", "ConstantStateCache",
+           "StateCache", "make_state_cache"]
+
+KV_SHARDINGS = ("replicated", "dp")
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-int(x) // mult) * mult
+
+
+class StateCache(abc.ABC):
+    """Abstract per-request device-state cache (see module docstring).
+
+    The base class owns what every implementation shares: shard
+    topology (slots partitioned over the mesh data axis), the committed
+    device placements, the host ``lens`` array the engine mutates in
+    place, and the swap-byte counters. Subclasses own the actual state
+    arrays and the lifecycle that binds them to slots.
+    """
+
+    kind: str = "abstract"
+
+    def __init__(self, cfg: ArchConfig, *, max_slots: int, dist=None,
+                 kv_sharding: str = "replicated", shards: int = 0):
+        assert kv_sharding in KV_SHARDINGS, kv_sharding
+        self.cfg = cfg
+        self.dist = dist
+        self.kv_sharding = kv_sharding
+        # shard count: the mesh's dp extent under "dp" (overridable for
+        # host-side allocator tests that have no mesh), else 1
+        if shards:
+            n_shards = int(shards)
+        elif kv_sharding == "dp" and dist is not None:
+            n_shards = dist.dp_size
+        else:
+            n_shards = 1
+        self.n_shards = max(1, n_shards)
+        # slots round up to the shard count so device arrays shard evenly
+        self.max_slots = _round_up(max_slots, self.n_shards)
+        self.slots_per_shard = self.max_slots // self.n_shards
+
+        # -- committed device placements --------------------------------
+        self._replicated = None
+        self._pool_spec = None       # pools: state axis 1 over "data"
+        self._slot_spec = None       # [slots, ...] arrays over "data"
+        self._slot_specs = {}        # per-rank cache for to_device_slots
+        if dist is not None:
+            self._replicated = dist.named_sharding()
+            if self.n_shards > 1:
+                self._pool_spec = dist.named_sharding(None, "dp")
+                self._slot_spec = dist.named_sharding("dp")
+                self._slot_specs = {1: self._slot_spec}
+
+        self.lens = np.zeros((self.max_slots,), np.int32)
+        self.swap_out_bytes = 0
+        self.swap_in_bytes = 0
+
+    # -- shard topology (concrete) ---------------------------------------
+    def shard_of_slot(self, slot: int) -> int:
+        """Owning dp shard of ``slot`` (0 under the replicated layout)."""
+        return slot // self.slots_per_shard
+
+    def slots_of(self, shard: int) -> range:
+        """The contiguous slot-id range owned by ``shard``."""
+        return range(shard * self.slots_per_shard,
+                     (shard + 1) * self.slots_per_shard)
+
+    # -- admission budget ------------------------------------------------
+    @property
+    @abc.abstractmethod
+    def max_slot_tokens(self) -> int:
+        """Hard per-request token ceiling: the most tokens any single
+        slot of this cache can ever hold (submit-time rejection)."""
+
+    def admissible(self, total_tokens: int) -> bool:
+        """Could a request of ``total_tokens`` ever be served?"""
+        return 0 < int(total_tokens) <= self.max_slot_tokens
+
+    @abc.abstractmethod
+    def can_admit(self, total_tokens: int,
+                  shard: Optional[int] = None) -> bool:
+        """Can ``total_tokens`` be reserved now — on ``shard``, or on
+        the best shard when None?"""
+
+    @abc.abstractmethod
+    def best_shard(self, total_tokens: int,
+                   candidates: Optional[Sequence[int]] = None
+                   ) -> Optional[int]:
+        """Least-loaded sticky placement among ``candidates`` (default:
+        all shards); None when no shard fits."""
+
+    # -- slot lifecycle ---------------------------------------------------
+    @abc.abstractmethod
+    def alloc_slot(self, slot: int, tokens: int) -> None:
+        """Bind ``slot`` with capacity for ``tokens``; resets lens to 0."""
+
+    @abc.abstractmethod
+    def grow_slot(self, slot: int) -> bool:
+        """Extend the slot's capacity by one unit. False when the
+        slot's shard is dry (caller preempts a victim and retries)."""
+
+    @abc.abstractmethod
+    def free_slot(self, slot: int) -> None:
+        """Release the slot's state; lens resets to 0."""
+
+    @abc.abstractmethod
+    def slot_capacity(self, slot: int) -> int:
+        """Tokens the slot can hold with its current reservation."""
+
+    @abc.abstractmethod
+    def held_bytes(self, slot: int) -> int:
+        """Device bytes a preemption of this slot would release (0 for
+        an unbound slot — such a slot is not a preemption victim)."""
+
+    # -- preemption snapshot / restore ------------------------------------
+    @abc.abstractmethod
+    def offload_slot(self, slot: int, rid: int) -> int:
+        """Snapshot the slot's state to the host pool (keyed by request
+        id), release the device side. Returns bytes copied."""
+
+    @abc.abstractmethod
+    def restore_slot(self, rid: int, slot: int, tokens: int) -> int:
+        """Restore a parked request onto ``slot`` of its original shard
+        at length ``tokens``. Returns bytes copied."""
+
+    @abc.abstractmethod
+    def can_restore(self, rid: int) -> bool:
+        """Does the parked request's shard have room to restore now?"""
+
+    @property
+    @abc.abstractmethod
+    def offloaded_count(self) -> int:
+        """Requests currently parked in the host pool."""
+
+    @property
+    @abc.abstractmethod
+    def host_bytes(self) -> int:
+        """Bytes currently parked in the host pool."""
+
+    # -- device buffers for the jit'd step --------------------------------
+    @property
+    def pool_sharding(self):
+        """The pools' committed layout (state axis over "data" under
+        ``kv_sharding="dp"``, replicated otherwise; None unsharded).
+        Step outputs must be pinned back to this (:meth:`pin_pools`)."""
+        return self._pool_spec if self._pool_spec is not None \
+            else self._replicated
+
+    def pin_pools(self, pools):
+        """Constrain step-output pools back to the committed pool
+        layout. Traceable — the engine calls this *inside* its jitted
+        step bodies, so the prefill→decode handoff needs no copy."""
+        spec = self.pool_sharding
+        if spec is None:
+            return pools
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.with_sharding_constraint(x, spec), pools)
+
+    def to_device(self, x):
+        """Host array -> device array (replicated under a mesh)."""
+        if self._replicated is not None:
+            return jax.device_put(x, self._replicated)
+        return jnp.asarray(x)
+
+    def to_device_slots(self, x):
+        """Host ``[max_slots, ...]`` array -> device, sharded over the
+        slot axis under the DP layout (each dp group holds only its own
+        slots' rows), replicated otherwise."""
+        if self._slot_spec is not None:
+            nd = np.ndim(x)
+            spec = self._slot_specs.get(nd)      # hot path: decode calls
+            if spec is None:                     # this every step
+                spec = self.dist.named_sharding(
+                    "dp", *((None,) * (nd - 1)))
+                self._slot_specs[nd] = spec
+            return jax.device_put(x, spec)
+        return self.to_device(x)
+
+    def device_lens(self, slot: Optional[int] = None):
+        """Device mirror of the host ``lens`` array (one row when
+        ``slot`` is given, slot-sharded full array otherwise)."""
+        # NOTE: always .copy() — jnp.asarray of a host numpy array can
+        # be zero-copy on CPU, and the engine mutates lens in place
+        # while the dispatched step is still running asynchronously.
+        if slot is None:
+            return self.to_device_slots(self.lens.copy())
+        return self.to_device(self.lens[slot:slot + 1].copy())
+
+    @property
+    @abc.abstractmethod
+    def page_table_width(self) -> int:
+        """Columns of the per-slot page-table step input (1 when the
+        implementation has no real page table — the row is then a
+        constant dummy that only keeps the jitted signature uniform)."""
+
+    @abc.abstractmethod
+    def device_page_table(self, slot: Optional[int] = None):
+        """``[max_slots, W]`` (decode) or ``[1, W]`` (one slot's
+        prefill) int32 page-table step input."""
+
+    @abc.abstractmethod
+    def device_sinks(self):
+        """Per-slot masked-write sink ids ``[max_slots]`` for decode."""
+
+    @abc.abstractmethod
+    def sink_row(self, slot: int) -> np.ndarray:
+        """``[1]`` masked-write sink id for one slot's prefill chunk."""
+
+    @property
+    def replicas(self) -> int:
+        """Physical copies of each pool element (1 unsharded; every
+        mesh device under "replicated"; the ep devices of one dp group
+        under "dp")."""
+        if self.dist is None:
+            return 1
+        return self.dist.mesh.size // self.n_shards
+
+    # -- byte accounting ---------------------------------------------------
+    @property
+    @abc.abstractmethod
+    def free_units(self) -> int:
+        """Free allocation units (pages for a paged cache, slots for a
+        constant-state cache) — a load signal for ``Engine.step()``."""
+
+    @property
+    @abc.abstractmethod
+    def cache_bytes(self) -> int:
+        """Total logical bytes of the allocated device state (constant)."""
+
+    @property
+    @abc.abstractmethod
+    def per_device_cache_bytes(self) -> int:
+        """State bytes resident on one device."""
+
+    @property
+    @abc.abstractmethod
+    def used_bytes(self) -> int:
+        """Bytes currently bound to live sequences."""
+
+    @property
+    @abc.abstractmethod
+    def peak_used_bytes(self) -> int:
+        """High-water mark of :attr:`used_bytes`."""
+
+    @property
+    @abc.abstractmethod
+    def per_device_peak_used_bytes(self) -> int:
+        """Peak bytes resident on one device (busiest shard under dp)."""
+
+
+class ConstantStateCache(StateCache):
+    """Slot-indexed constant-size recurrent state (mamba conv window +
+    SSM state, xLSTM cell state).
+
+    Device side: ``models/kv_cache.init_state_slots`` stacks each
+    recurrent layer's per-sequence state to ``[n_periods, max_slots,
+    ...]`` — the jitted decode step reads/writes all slots batchwise,
+    chunked prefill slices one slot's row. There is no paging: a
+    sequence's state is O(1) in its length, so
+
+    * admission is by **free slot** (the per-slot byte cost is fixed at
+      construction — ``slot_bytes``);
+    * ``grow_slot`` always succeeds (nothing grows);
+    * preemption snapshot/restore moves one fixed-size slot row to the
+      host pool and back (offload is always a tiny copy — see
+      ``core.memory_model.PreemptionCost``);
+    * dp sharding shards the **slot axis** of every state array, so
+      decode stays data-parallel exactly like the paged layout.
+
+    ``alloc_slot`` zeroes the slot's rows: a freed slot's stale state
+    must never leak into the next request, and a recompute-resume must
+    re-prefill from the zero state.
+    """
+
+    kind = "constant"
+
+    def __init__(self, cfg: ArchConfig, *, max_slots: int,
+                 max_seq_len: int, dtype=jnp.bfloat16, dist=None,
+                 kv_sharding: str = "replicated", shards: int = 0):
+        super().__init__(cfg, max_slots=max_slots, dist=dist,
+                         kv_sharding=kv_sharding, shards=shards)
+        self.max_seq_len = int(max_seq_len)
+        self.pools: Any = kv_cache.init_state_slots(cfg, self.max_slots,
+                                                    dtype)
+        if self.pool_sharding is not None:
+            self.pools = jax.device_put(self.pools, self.pool_sharding)
+        self._allocated: List[bool] = [False] * self.max_slots
+        # rid -> (host state tree, owning shard): preempted-by-offload
+        # requests parked until resume (sticky placement, like paged)
+        self._offloaded: Dict[int, Tuple[Any, int]] = {}
+        self._peak_slots = 0
+        self._peak_by_shard = [0] * self.n_shards
+
+    # -- admission budget ------------------------------------------------
+    @property
+    def max_slot_tokens(self) -> int:
+        return self.max_seq_len
+
+    def free_slots_of(self, shard: int) -> int:
+        return sum(not self._allocated[s] for s in self.slots_of(shard))
+
+    def can_admit(self, total_tokens: int,
+                  shard: Optional[int] = None) -> bool:
+        if not self.admissible(total_tokens):
+            return False
+        shards = range(self.n_shards) if shard is None else (shard,)
+        return any(self.free_slots_of(s) > 0 for s in shards)
+
+    def best_shard(self, total_tokens: int,
+                   candidates: Optional[Sequence[int]] = None
+                   ) -> Optional[int]:
+        cands = range(self.n_shards) if candidates is None else candidates
+        best = None
+        for s in cands:
+            if not self.can_admit(total_tokens, s):
+                continue
+            if best is None or self.free_slots_of(s) > \
+                    self.free_slots_of(best):
+                best = s
+        return best
+
+    # -- slot lifecycle ---------------------------------------------------
+    def _note_peak(self, shard: int) -> None:
+        self._peak_slots = max(self._peak_slots, sum(self._allocated))
+        used = self.slots_per_shard - self.free_slots_of(shard)
+        self._peak_by_shard[shard] = max(self._peak_by_shard[shard], used)
+
+    def _set_slot(self, slot: int, host=None) -> None:
+        """Write one slot's state rows: zeros (alloc) or a host
+        snapshot (restore), re-pinned to the committed pool layout."""
+        spec = self.pool_sharding
+
+        def upd(leaf, h=None):
+            row = 0 if h is None else jnp.asarray(h, leaf.dtype)
+            out = leaf.at[:, slot].set(row)
+            return out if spec is None else jax.device_put(out, spec)
+
+        if host is None:
+            self.pools = jax.tree_util.tree_map(upd, self.pools)
+        else:
+            self.pools = jax.tree_util.tree_map(upd, self.pools, host)
+
+    def alloc_slot(self, slot: int, tokens: int) -> None:
+        assert not self._allocated[slot], f"slot {slot} already allocated"
+        assert self.admissible(tokens), \
+            f"alloc_slot of {tokens} tokens > {self.max_slot_tokens}"
+        self._allocated[slot] = True
+        self._set_slot(slot)             # zero: no stale-state leakage
+        self.lens[slot] = 0
+        self._note_peak(self.shard_of_slot(slot))
+
+    def grow_slot(self, slot: int) -> bool:
+        return True                      # state is O(1) in length
+
+    def free_slot(self, slot: int) -> None:
+        self._allocated[slot] = False
+        self.lens[slot] = 0
+
+    def slot_capacity(self, slot: int) -> int:
+        return self.max_slot_tokens
+
+    @property
+    def slot_bytes(self) -> int:
+        """Fixed per-slot state bytes (the admission budget unit)."""
+        return self.cache_bytes // self.max_slots
+
+    def held_bytes(self, slot: int) -> int:
+        return self.slot_bytes if self._allocated[slot] else 0
+
+    # -- preemption snapshot / restore ------------------------------------
+    def offload_slot(self, slot: int, rid: int) -> int:
+        assert self._allocated[slot], f"offload of empty slot {slot}"
+        assert rid not in self._offloaded, f"rid {rid} already offloaded"
+        shard = self.shard_of_slot(slot)
+        host = jax.tree_util.tree_map(
+            lambda leaf: np.asarray(leaf[:, slot]).copy(), self.pools)
+        nbytes = kv_cache.tree_bytes(host)
+        self._offloaded[rid] = (host, shard)
+        self.swap_out_bytes += nbytes
+        self.free_slot(slot)
+        return nbytes
+
+    def offloaded_shard(self, rid: int) -> int:
+        return self._offloaded[rid][1]
+
+    def can_restore(self, rid: int) -> bool:
+        # the state is one fixed-size row — any free slot of the owning
+        # shard can take it, and the caller only offers free slots
+        return rid in self._offloaded
+
+    def restore_slot(self, rid: int, slot: int, tokens: int) -> int:
+        host, shard = self._offloaded[rid]
+        # validate before popping: a refused restore must not lose the
+        # parked state
+        assert not self._allocated[slot], f"slot {slot} already allocated"
+        assert self.shard_of_slot(slot) == shard, \
+            f"restore of rid {rid} onto slot {slot} (shard " \
+            f"{self.shard_of_slot(slot)}) but its state lives on shard " \
+            f"{shard} — placement is sticky"
+        del self._offloaded[rid]
+        self._allocated[slot] = True
+        self._set_slot(slot, host)
+        self.lens[slot] = tokens
+        nbytes = kv_cache.tree_bytes(host)
+        self.swap_in_bytes += nbytes
+        self._note_peak(shard)
+        return nbytes
+
+    @property
+    def offloaded_count(self) -> int:
+        return len(self._offloaded)
+
+    @property
+    def host_bytes(self) -> int:
+        return sum(kv_cache.tree_bytes(host)
+                   for host, _ in self._offloaded.values())
+
+    # -- device buffers for the jit'd step --------------------------------
+    @property
+    def page_table_width(self) -> int:
+        return 1
+
+    def device_page_table(self, slot: Optional[int] = None):
+        # constant dummies (recurrent layers never index a page table);
+        # cached — the content can never change
+        if slot is None:
+            if not hasattr(self, "_dev_pt"):
+                self._dev_pt = self.to_device_slots(
+                    np.zeros((self.max_slots, 1), np.int32))
+            return self._dev_pt
+        if not hasattr(self, "_dev_pt_row"):
+            self._dev_pt_row = self.to_device(np.zeros((1, 1), np.int32))
+        return self._dev_pt_row
+
+    def device_sinks(self):
+        if not hasattr(self, "_dev_sinks"):
+            self._dev_sinks = self.to_device_slots(
+                np.zeros((self.max_slots,), np.int32))
+        return self._dev_sinks
+
+    def sink_row(self, slot: int) -> np.ndarray:
+        return np.zeros((1,), np.int32)
+
+    # -- byte accounting ---------------------------------------------------
+    @property
+    def free_units(self) -> int:
+        return self.max_slots - sum(self._allocated)
+
+    @property
+    def cache_bytes(self) -> int:
+        return kv_cache.cache_bytes(self.pools)
+
+    @property
+    def per_device_cache_bytes(self) -> int:
+        return self.cache_bytes // self.n_shards
+
+    @property
+    def used_bytes(self) -> int:
+        return sum(self._allocated) * self.slot_bytes
+
+    @property
+    def peak_used_bytes(self) -> int:
+        return self._peak_slots * self.slot_bytes
+
+    @property
+    def per_device_peak_used_bytes(self) -> int:
+        if self.n_shards == 1:
+            return self.peak_used_bytes
+        return max(self._peak_by_shard) * self.slot_bytes
+
+
+class CompositeStateCache(StateCache):
+    """Mixed-mixer models (jamba: attn + mamba layers): one
+    :class:`~repro.serve.paged_kv.PagedKVCache` for the attention
+    layers and one :class:`ConstantStateCache` for the recurrent
+    layers, behind the single protocol surface.
+
+    The two sub-caches share slot numbering, shard topology and the
+    host ``lens`` array (aliased — the engine mutates one buffer and
+    both device mirrors see it). Lifecycle calls fan out to both;
+    admission and capacity are gated by the paged side (pages are the
+    scarce resource — the constant side can always take a slot the
+    paged side granted); the page-table/sink step inputs come from the
+    paged side (recurrent layers ignore them). ``pools`` is the merged
+    per-layer dict — the two key sets are disjoint by construction
+    (``init_paged_pools`` covers exactly the attn layers,
+    ``init_state_slots`` exactly the rest).
+    """
+
+    kind = "composite"
+
+    def __init__(self, paged: "StateCache", state: ConstantStateCache):
+        # no super().__init__: topology is inherited from the sub-caches
+        # (asserted identical), not rebuilt
+        assert paged.n_shards == state.n_shards, "shard topology mismatch"
+        assert paged.max_slots == state.max_slots, "slot count mismatch"
+        self.paged = paged
+        self.state = state
+        self.cfg = paged.cfg
+        self.dist = paged.dist
+        self.kv_sharding = paged.kv_sharding
+        self.n_shards = paged.n_shards
+        self.max_slots = paged.max_slots
+        self.slots_per_shard = paged.slots_per_shard
+        self._replicated = paged._replicated
+        self._pool_spec = paged._pool_spec
+        self._slot_spec = paged._slot_spec
+        self._slot_specs = paged._slot_specs
+        # one lens buffer, three views: engine writes kv.lens[slot] and
+        # both sub-caches' device mirrors read the same array
+        state.lens = paged.lens
+        self.lens = paged.lens
+        self._paged_keys = frozenset(paged.pools)
+        self._state_keys = frozenset(state.pools)
+        assert not (self._paged_keys & self._state_keys)
+
+    # -- merged pools ------------------------------------------------------
+    @property
+    def pools(self):
+        return {**self.paged.pools, **self.state.pools}
+
+    @pools.setter
+    def pools(self, new):
+        self.paged.pools = {k: v for k, v in new.items()
+                            if k in self._paged_keys}
+        self.state.pools = {k: v for k, v in new.items()
+                            if k in self._state_keys}
+
+    # -- admission budget ------------------------------------------------
+    @property
+    def max_slot_tokens(self) -> int:
+        return min(self.paged.max_slot_tokens, self.state.max_slot_tokens)
+
+    def can_admit(self, total_tokens: int,
+                  shard: Optional[int] = None) -> bool:
+        return (self.paged.can_admit(total_tokens, shard)
+                and self.state.can_admit(total_tokens, shard))
+
+    def best_shard(self, total_tokens: int,
+                   candidates: Optional[Sequence[int]] = None
+                   ) -> Optional[int]:
+        cands = [s for s in (range(self.n_shards) if candidates is None
+                             else candidates)
+                 if self.state.can_admit(total_tokens, s)]
+        return self.paged.best_shard(total_tokens, cands)
+
+    # -- slot lifecycle ---------------------------------------------------
+    def alloc_slot(self, slot: int, tokens: int) -> None:
+        self.paged.alloc_slot(slot, tokens)
+        self.state.alloc_slot(slot, tokens)
+
+    def grow_slot(self, slot: int) -> bool:
+        return self.paged.grow_slot(slot)    # constant side never grows
+
+    def free_slot(self, slot: int) -> None:
+        self.paged.free_slot(slot)
+        self.state.free_slot(slot)
+
+    def slot_capacity(self, slot: int) -> int:
+        return self.paged.slot_capacity(slot)
+
+    def held_bytes(self, slot: int) -> int:
+        return self.paged.held_bytes(slot) + self.state.held_bytes(slot)
+
+    # -- preemption snapshot / restore ------------------------------------
+    def offload_slot(self, slot: int, rid: int) -> int:
+        return (self.paged.offload_slot(slot, rid)
+                + self.state.offload_slot(slot, rid))
+
+    def restore_slot(self, rid: int, slot: int, tokens: int) -> int:
+        return (self.paged.restore_slot(rid, slot, tokens)
+                + self.state.restore_slot(rid, slot, tokens))
+
+    def can_restore(self, rid: int) -> bool:
+        return self.paged.can_restore(rid) and self.state.can_restore(rid)
+
+    @property
+    def offloaded_count(self) -> int:
+        return self.paged.offloaded_count
+
+    @property
+    def host_bytes(self) -> int:
+        return self.paged.host_bytes + self.state.host_bytes
+
+    # -- device buffers for the jit'd step --------------------------------
+    @property
+    def page_table_width(self) -> int:
+        return self.paged.page_table_width
+
+    def device_page_table(self, slot: Optional[int] = None):
+        return self.paged.device_page_table(slot)
+
+    def device_sinks(self):
+        return self.paged.device_sinks()
+
+    def sink_row(self, slot: int) -> np.ndarray:
+        return self.paged.sink_row(slot)
+
+    # -- byte accounting ---------------------------------------------------
+    @property
+    def swap_out_bytes(self) -> int:
+        return self.paged.swap_out_bytes + self.state.swap_out_bytes
+
+    @property
+    def swap_in_bytes(self) -> int:
+        return self.paged.swap_in_bytes + self.state.swap_in_bytes
+
+    @property
+    def free_units(self) -> int:
+        return self.paged.free_units
+
+    @property
+    def cache_bytes(self) -> int:
+        return self.paged.cache_bytes + self.state.cache_bytes
+
+    @property
+    def per_device_cache_bytes(self) -> int:
+        return (self.paged.per_device_cache_bytes
+                + self.state.per_device_cache_bytes)
+
+    @property
+    def used_bytes(self) -> int:
+        return self.paged.used_bytes + self.state.used_bytes
+
+    @property
+    def peak_used_bytes(self) -> int:
+        # sum of sub-cache peaks: an upper bound on the true composite
+        # peak (the two high-water marks need not coincide)
+        return self.paged.peak_used_bytes + self.state.peak_used_bytes
+
+    @property
+    def per_device_peak_used_bytes(self) -> int:
+        return (self.paged.per_device_peak_used_bytes
+                + self.state.per_device_peak_used_bytes)
+
+
+def make_state_cache(cfg: ArchConfig, kind: str, *, num_pages: int,
+                     page_size: int, max_slots: int,
+                     max_pages_per_seq: int, max_seq_len: int,
+                     dtype=jnp.bfloat16, dist=None,
+                     kv_sharding: str = "replicated") -> StateCache:
+    """Build the :class:`StateCache` for ``cfg`` from the cache kind
+    reported by ``models/api.serving_support`` ("paged" | "constant" |
+    "composite"). The paged knobs (``num_pages`` / ``page_size`` /
+    ``max_pages_per_seq``) are ignored by a pure constant-state cache;
+    ``max_seq_len`` bounds the constant cache's per-request budget."""
+    from repro.serve.paged_kv import PagedKVCache   # lazy: avoids cycle
+
+    if kind == "paged":
+        return PagedKVCache(cfg, num_pages=num_pages, page_size=page_size,
+                            max_slots=max_slots,
+                            max_pages_per_seq=max_pages_per_seq,
+                            dtype=dtype, dist=dist, kv_sharding=kv_sharding)
+    if kind == "constant":
+        return ConstantStateCache(cfg, max_slots=max_slots,
+                                  max_seq_len=max_seq_len, dtype=dtype,
+                                  dist=dist, kv_sharding=kv_sharding)
+    if kind == "composite":
+        paged = PagedKVCache(cfg, num_pages=num_pages, page_size=page_size,
+                             max_slots=max_slots,
+                             max_pages_per_seq=max_pages_per_seq,
+                             dtype=dtype, dist=dist,
+                             kv_sharding=kv_sharding)
+        state = ConstantStateCache(cfg, max_slots=paged.max_slots,
+                                   max_seq_len=max_seq_len, dtype=dtype,
+                                   dist=dist, kv_sharding=kv_sharding)
+        return CompositeStateCache(paged, state)
+    raise ValueError(f"unknown cache kind {kind!r}")

@@ -11,7 +11,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import CPU_HOST, TPU_V5E, resolve_hw
 from repro.models import kv_cache, lm
-from repro.models.api import supports_paged
+from repro.models.api import serving_support
 from repro.serve import (Engine, EngineOptions, RequestState,
                          dense_greedy_reference as ref_decode)
 
@@ -156,13 +156,19 @@ def test_scatter_masked_writes_hit_sink_page_only():
     assert float(far[3].sum()) == 0.0
 
 
-def test_supports_paged_rejects_non_attn():
-    ok, _ = supports_paged(_cfg("llama3-8b"))
-    assert ok
-    for name in ("jamba-1.5-large-398b", "deepseek-v2-lite-16b",
-                 "xlstm-1.3b", "whisper-medium"):
-        ok, why = supports_paged(get_config(name).reduced())
-        assert not ok and why
+def test_serving_support_assigns_cache_kinds():
+    """One central capability query: every mixer mix maps to a cache
+    kind, refusals come with a stable reason."""
+    assert serving_support(_cfg("llama3-8b")) == ("paged", "")
+    assert serving_support(
+        get_config("deepseek-v2-lite-16b").reduced()) == ("paged", "")
+    assert serving_support(
+        get_config("xlstm-1.3b").reduced()) == ("constant", "")
+    assert serving_support(
+        get_config("jamba-1.5-large-398b").reduced()) == ("composite", "")
+    for name in ("whisper-medium", "qwen2-vl-2b"):
+        kind, why = serving_support(get_config(name).reduced())
+        assert kind is None and why
 
 
 # ---------------------------------------------------------------------------

@@ -38,8 +38,9 @@ REQUIRED_DOCS = ("README.md", "docs/architecture.md", "docs/serving.md",
                  "docs/distributed.md", "benchmarks/trajectory/README.md")
 REQUIRED_FLAGS = {
     "benchmarks/serving.py": ("--devices", "--smoke", "--overload",
-                              "--kv-sharding"),
-    "-m repro.launch.serve": ("--devices", "--engine", "--kv-sharding"),
+                              "--kv-sharding", "--compare-arch"),
+    "-m repro.launch.serve": ("--devices", "--engine", "--kv-sharding",
+                              "--arch"),
 }
 
 

@@ -29,6 +29,7 @@ SERVE_REL = os.path.join("src", "repro", "serve")
 DEFAULT_TESTS = ["tests/test_serving.py", "tests/test_preemption.py",
                  "tests/test_sampling.py", "tests/test_kv_sharding.py",
                  "tests/test_serving_sharded.py",
+                 "tests/test_state_cache.py",
                  "-m", "not slow", "-q"]
 
 
