@@ -55,6 +55,20 @@ tok/s and the per-slot device bytes at full budget — the recurrent slot
 is O(1) in the budget where the paged slot is O(budget):
 
     PYTHONPATH=src python benchmarks/serving.py --compare-arch --smoke
+
+``--obs-overhead`` runs the telemetry scenario (default out:
+``BENCH_obs_overhead.json``): the same burst drained with telemetry
+fully off vs fully on (span tracer + live ``/metrics`` exporter scraped
+over HTTP), reporting best-of-reps tok/s per leg and the jit-trace
+counts of both (telemetry must not add compiles), and writing the
+Perfetto trace (``BENCH_obs_trace.json``) plus the scraped Prometheus
+exposition (``BENCH_obs_metrics.prom``) as artifacts — see
+``docs/observability.md``:
+
+    PYTHONPATH=src python benchmarks/serving.py --obs-overhead --smoke
+
+Every scenario's JSON also embeds a full ``repro.obs`` registry
+snapshot under ``"telemetry"``.
 """
 from __future__ import annotations
 
@@ -99,6 +113,10 @@ def _engine_stats(engine, wall_s: float) -> dict:
         "kv_shards": s["kv_shards"],
         "peak_running_preempt_free": s["peak_running_preempt_free"],
         "resolutions": s["resolutions"],
+        # full repro.obs registry snapshot: per-stage step timings,
+        # queue/pool gauges, preempt/admit counters — the trajectory
+        # gains per-stage breakdowns without bespoke plumbing per key
+        "telemetry": engine.obs.registry.snapshot(),
     }
 
 
@@ -124,6 +142,107 @@ def run(*, arch: str, requests: int, rate: float, slots: int, chunk: int,
         "preempt": preempt,
         **_engine_stats(engine, wall_s),
     }
+
+
+# ---------------------------------------------------------------------------
+# Telemetry overhead scenario (span tracer + live /metrics on vs off)
+# ---------------------------------------------------------------------------
+
+def run_obs_overhead(*, arch: str, requests: int, slots: int, chunk: int,
+                     page_size: int, prompt_max: int, gen_max: int,
+                     seed: int, hw_name: str, reps: int = 3,
+                     trace_out: str = "BENCH_obs_trace.json",
+                     metrics_out: str = "BENCH_obs_metrics.prom") -> dict:
+    """The same burst drained twice: telemetry fully off (the default
+    no-op recorder every test runs under) vs fully on (span tracer plus
+    a live ``/metrics`` exporter scraped over HTTP mid-run). Reports
+    best-of-``reps`` tok/s per leg — the committed trajectory entry
+    pins the <2%% overhead budget — plus the jit-trace counts of both
+    legs (must match: telemetry may not add compiles) and writes the
+    Perfetto trace and the scraped exposition as artifacts."""
+    import urllib.request
+
+    from repro.obs import MetricsServer, Recorder, Tracer
+
+    cfg = get_config(arch).reduced()
+    hw = resolve_hw(hw_name)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+
+    def one(obs=None, on_engine=None):
+        opts = EngineOptions(page_size=page_size, max_slots=slots,
+                             max_seq_len=prompt_max + gen_max,
+                             chunk=chunk, hw=hw, obs=obs)
+        return run_poisson(cfg, opts, requests=requests, rate=50.0,
+                           prompt_max=prompt_max, gen_max=gen_max,
+                           seed=seed, time_scale=0.0, params=params,
+                           on_engine=on_engine)
+
+    def tok_s(engine, wall_s):
+        return sum(len(r.output) for r in engine.done) / wall_s
+
+    tok_off = 0.0
+    for _ in range(reps):
+        off_engine, wall_s = one()
+        tok_off = max(tok_off, tok_s(off_engine, wall_s))
+
+    tok_on, scrape, health = 0.0, "", ""
+    for _ in range(reps):
+        obs = Recorder(tracer=Tracer())
+        holder = {}
+
+        def attach(engine, _obs=obs, _holder=holder):
+            _holder["server"] = MetricsServer(
+                _obs.registry, port=0,
+                refresh=engine._refresh_gauges).start()
+
+        on_engine, wall_s = one(obs, attach)
+        server = holder["server"]
+        scrape = urllib.request.urlopen(
+            server.url + "/metrics", timeout=10).read().decode()
+        health = urllib.request.urlopen(
+            server.url + "/healthz", timeout=10).read().decode()
+        server.stop()
+        tok_on = max(tok_on, tok_s(on_engine, wall_s))
+
+    obs.tracer.write(trace_out)
+    with open(metrics_out, "w") as f:
+        f.write(scrape)
+    return {
+        "arch": cfg.name,
+        "hw": hw.name,
+        "requests": requests,
+        "slots": slots,
+        "chunk": chunk,
+        "page_size": page_size,
+        "reps": reps,
+        "tok_s_off": tok_off,
+        "tok_s_on": tok_on,
+        "overhead_pct": 100.0 * (1.0 - tok_on / tok_off),
+        "decode_traces_off": off_engine.decode_traces,
+        "decode_traces_on": on_engine.decode_traces,
+        "prefill_traces_off": off_engine.prefill_traces,
+        "prefill_traces_on": on_engine.prefill_traces,
+        "trace_events": len(obs.tracer.export()["traceEvents"]),
+        "trace_out": trace_out,
+        "metrics_out": metrics_out,
+        "metrics_lines": len(scrape.splitlines()),
+        "healthz": health.strip(),
+        "telemetry": obs.registry.snapshot(),
+    }
+
+
+def _print_obs(res: dict) -> None:
+    print(f"\ntelemetry overhead ({res['arch']} on {res['hw']}, "
+          f"{res['requests']}-request burst, best of {res['reps']}):")
+    print(f"  off {res['tok_s_off']:.1f} tok/s | on {res['tok_s_on']:.1f} "
+          f"tok/s (tracer + live /metrics) -> "
+          f"{res['overhead_pct']:+.2f}% overhead")
+    print(f"  jit traces off/on: decode {res['decode_traces_off']}/"
+          f"{res['decode_traces_on']}, prefill "
+          f"{res['prefill_traces_off']}/{res['prefill_traces_on']}")
+    print(f"  artifacts: {res['trace_out']} ({res['trace_events']} "
+          f"events), {res['metrics_out']} ({res['metrics_lines']} lines, "
+          f"healthz={res['healthz']})")
 
 
 # ---------------------------------------------------------------------------
@@ -650,6 +769,12 @@ def main():
                          "(h2o-danube) serving the same burst, both "
                          "golden-verified (out defaults to "
                          "BENCH_serving_arch.json)")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="telemetry scenario: the same burst with "
+                         "telemetry off vs span tracer + live /metrics "
+                         "on; writes the Perfetto trace and scraped "
+                         "exposition as artifacts (out defaults to "
+                         "BENCH_obs_overhead.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI configuration")
     ap.add_argument("--out", default=None,
@@ -659,9 +784,12 @@ def main():
     args = ap.parse_args()
 
     if sum(map(bool, (args.overload, args.devices,
-                      args.compare_arch))) > 1:
-        ap.error("--overload, --devices and --compare-arch are "
-                 "separate scenarios")
+                      args.compare_arch, args.obs_overhead))) > 1:
+        ap.error("--overload, --devices, --compare-arch and "
+                 "--obs-overhead are separate scenarios")
+    if args.obs_overhead and args.preempt is not None:
+        ap.error("--obs-overhead compares telemetry legs on the default "
+                 "policy; --preempt does not apply")
     if args.compare_arch and args.arch != "moe-gpt3-s":
         ap.error("--compare-arch runs its fixed arch pair "
                  f"({' vs '.join(ARCH_COMPARE)}); --arch does not apply")
@@ -684,17 +812,23 @@ def main():
     for name in full:
         v = getattr(args, name)
         kw[name] = profile[name] if v is None else v
-    if args.overload or args.devices or args.compare_arch:
+    if (args.overload or args.devices or args.compare_arch
+            or args.obs_overhead):
         # these scenarios drive their own arrivals over the constrained-
         # pool sizing profile
         if args.rate is not None or args.time_scale != 1.0:
-            ap.error("--overload/--devices/--compare-arch drive their "
-                     "own arrivals; --rate/--time-scale do not apply")
+            ap.error("--overload/--devices/--compare-arch/--obs-overhead "
+                     "drive their own arrivals; --rate/--time-scale do "
+                     "not apply")
         kw.pop("rate")
         for name, v in over["smoke" if args.smoke else "full"].items():
             if getattr(args, name) is None:
                 kw[name] = v
-    if args.compare_arch:
+    if args.obs_overhead:
+        out = args.out or "BENCH_obs_overhead.json"
+        res = run_obs_overhead(**kw)
+        _print_obs(res)
+    elif args.compare_arch:
         out = args.out or "BENCH_serving_arch.json"
         kw.pop("arch")
         res = run_arch_compare(**kw)

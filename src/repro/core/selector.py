@@ -14,6 +14,7 @@ resolved (n, strategy) changes (compilation cache keyed by them).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, Optional, Sequence
 
 from repro.configs.base import ArchConfig, ShapeConfig
@@ -22,6 +23,7 @@ from repro.core.perf_model import MoEWorkload, select_strategy
 from repro.core.pipeline_sim import simulate
 from repro.core.strategies import host_offload_supported
 from repro.core.types import HardwareSpec, Strategy
+from repro.obs import PID_RESOLVER, Recorder
 
 
 def moe_workload(cfg: ArchConfig, local_tokens: int, ep_size: int,
@@ -110,7 +112,8 @@ class Resolver:
                  measure_fn: Optional[Callable[[int, int, Strategy], float]]
                  = None, dp: int = 16,
                  allow_offload: Optional[bool] = None,
-                 candidates: Optional[Sequence[int]] = None):
+                 candidates: Optional[Sequence[int]] = None,
+                 obs: Optional[Recorder] = None):
         self.cfg = cfg
         self.ep_size = ep_size
         self.hw = hw
@@ -119,6 +122,18 @@ class Resolver:
         self.allow_offload = allow_offload
         self.candidates = tuple(candidates) if candidates else None
         self._searchers: Dict[str, GranularitySearcher] = {}
+        # telemetry (repro.obs): serve and train controllers thread the
+        # same Recorder through, so resolver retunes land on one surface
+        self.obs = obs if obs is not None else Recorder()
+        reg = self.obs.registry
+        self._m_retunes = reg.counter(
+            "repro_retunes_total", "resolver (n, strategy) resolutions")
+        self._m_retune_s = reg.histogram(
+            "repro_retune_seconds", "wall time per resolver resolution")
+        self._m_candidates = reg.counter(
+            "repro_candidates_measured_total",
+            "candidate (n, strategy) timings measured")
+        self.obs.tracer.thread_name(PID_RESOLVER, 1, "retune")
 
     def searcher_for(self, strategy: str) -> GranularitySearcher:
         s = self._searchers.get(strategy)
@@ -127,7 +142,14 @@ class Resolver:
                 sv = Strategy(strategy)
 
                 def fn(b: int, n: int, _s=sv) -> float:
-                    return self.measure_fn(b, n, _s)
+                    dt = self.measure_fn(b, n, _s)
+                    # measured candidate timing: Algorithm 1's probe
+                    self._m_candidates.inc()
+                    self.obs.tracer.instant(
+                        "candidate", pid=PID_RESOLVER,
+                        args={"b": b, "n": n, "strategy": _s.value,
+                              "seconds": dt})
+                    return dt
 
                 s = GranularitySearcher(
                     fn, self.candidates) if self.candidates else \
@@ -154,6 +176,16 @@ class Resolver:
                 s.reset()
             return s
 
-        return _resolve_with(self.cfg, local_tokens, self.ep_size,
-                             self.hw, self.dp, self.allow_offload,
-                             searcher_for)
+        t0 = time.perf_counter()
+        with self.obs.tracer.span(
+                "resolver.resolve", pid=PID_RESOLVER,
+                args={"tokens": local_tokens, "refresh": refresh}) as sp:
+            out = _resolve_with(self.cfg, local_tokens, self.ep_size,
+                                self.hw, self.dp, self.allow_offload,
+                                searcher_for)
+            if out.moe is not None:
+                sp["n"] = out.moe.num_partitions
+                sp["strategy"] = out.moe.memory_reuse_strategy
+        self._m_retunes.inc()
+        self._m_retune_s.observe(time.perf_counter() - t0)
+        return out

@@ -29,6 +29,12 @@ Two paths share one CLI:
 
 ``--hw`` names the :class:`HardwareSpec` the MPipeMoE resolver plans
 for; ``auto`` detects it from the attached jax backend.
+
+Telemetry (engine path only; see docs/observability.md):
+``--metrics-port`` serves live Prometheus ``/metrics`` + ``/healthz``
+for the duration of the run, and ``--trace-out PATH`` records
+engine/request/resolver spans and writes a Perfetto-loadable Chrome
+trace-event JSON at shutdown.
 """
 from __future__ import annotations
 
@@ -102,28 +108,51 @@ def legacy_loop(args, cfg, hw):
 
 def engine_loop(args, cfg, hw):
     from repro.models.api import serving_support
+    from repro.obs import MetricsServer, Recorder, Tracer
     from repro.serve import EngineOptions, SamplingParams, run_poisson
 
     kind, why = serving_support(cfg)
     if kind is None:
         raise SystemExit(f"{cfg.name} is not servable: {why}")
     print(f"state cache: {kind}")
+    obs = Recorder(tracer=Tracer()) if args.trace_out else Recorder()
     opts = EngineOptions(page_size=args.page_size, max_slots=args.batch,
                          max_seq_len=args.prompt_len + args.gen,
                          chunk=args.chunk, hw=hw, preempt=args.preempt,
                          num_pages=args.num_pages, measure=args.measure,
                          devices=args.devices,
-                         kv_sharding=args.kv_sharding)
+                         kv_sharding=args.kv_sharding, obs=obs)
     sampling = None
     if args.temperature > 0:
         sampling = SamplingParams(temperature=args.temperature,
                                   top_k=args.top_k, top_p=args.top_p,
                                   seed=args.sample_seed)
-    engine, dt = run_poisson(cfg, opts, requests=args.requests,
-                             rate=args.rate, prompt_max=args.prompt_len,
-                             gen_max=args.gen, seed=args.seed,
-                             eos_id=args.eos if args.eos >= 0 else None,
-                             time_scale=args.time_scale, sampling=sampling)
+
+    server = None
+
+    def on_engine(engine):
+        # live /metrics: scrape-time refresh through the engine's gauge
+        # updater so mid-run curls match what stats() would report
+        nonlocal server
+        if args.metrics_port >= 0:
+            server = MetricsServer(obs.registry, port=args.metrics_port,
+                                   refresh=engine._refresh_gauges).start()
+            print(f"metrics: {server.url}/metrics")
+
+    try:
+        engine, dt = run_poisson(
+            cfg, opts, requests=args.requests, rate=args.rate,
+            prompt_max=args.prompt_len, gen_max=args.gen, seed=args.seed,
+            eos_id=args.eos if args.eos >= 0 else None,
+            time_scale=args.time_scale, sampling=sampling,
+            on_engine=on_engine)
+    finally:
+        if server is not None:
+            server.stop()
+    if args.trace_out:
+        obs.tracer.write(args.trace_out)
+        print(f"trace: {args.trace_out} "
+              f"(load in https://ui.perfetto.dev)")
     s = engine.stats()
     if s["devices"] > 1:
         kvs = (f"DP-sharded KV x{s['kv_shards']}"
@@ -211,6 +240,15 @@ def main():
                     help="engine: nucleus (top-p) filter (1 = disabled)")
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="engine: per-request sampling seed")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="engine: serve live Prometheus /metrics (and "
+                         "/healthz) on this port for the duration of "
+                         "the run (0 = pick a free port, printed at "
+                         "startup; -1 = disabled)")
+    ap.add_argument("--trace-out", default="",
+                    help="engine: record spans and write a "
+                         "Perfetto-loadable Chrome trace-event JSON "
+                         "here at shutdown ('' = tracing off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -223,6 +261,9 @@ def main():
     elif args.kv_sharding == "dp":
         ap.error("--kv-sharding dp shards the KV pools over the mesh "
                  "data axis; it requires --devices > 1")
+    if (args.metrics_port >= 0 or args.trace_out) and not args.engine:
+        ap.error("--metrics-port / --trace-out instrument the "
+                 "continuous-batching engine; add --engine")
     hw = resolve_hw(args.hw)
     print(f"hw spec: {hw.name}")
     cfg = get_config(args.arch).reduced()

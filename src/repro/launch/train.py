@@ -49,6 +49,14 @@ def main():
     ap.add_argument("--retune-every", type=int, default=0,
                     help="with --adaptive: also re-resolve every K steps "
                          "(0 = only on batch-shape change)")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="serve live Prometheus /metrics (controller "
+                         "retunes + training heartbeat gauges) on this "
+                         "port (0 = free port; -1 = disabled)")
+    ap.add_argument("--trace-out", default="",
+                    help="write resolver retune spans as a "
+                         "Perfetto-loadable trace here at exit "
+                         "('' = off)")
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
 
@@ -63,6 +71,16 @@ def main():
         mesh = make_host_mesh(args.mesh_data, args.mesh_model)
         dist = DistContext(mesh=mesh, dp_axes=dp_axes(mesh),
                            ep_axis="model", tp_axis="model")
+    # one telemetry surface for training: resolver retune spans/counters
+    # land in the same repro.obs registry the serving engine uses
+    from repro.obs import MetricsServer, Recorder, Tracer
+    obs = Recorder(tracer=Tracer()) if args.trace_out else Recorder()
+    server = None
+    if args.metrics_port >= 0:
+        server = MetricsServer(obs.registry,
+                               port=args.metrics_port).start()
+        print(f"metrics: {server.url}/metrics")
+
     adaptive = False
     if cfg.moe is not None:
         if args.adaptive:
@@ -74,7 +92,7 @@ def main():
             adaptive = AdaptiveOptions(retune_every=args.retune_every,
                                        ep_size=max(1, args.mesh_model),
                                        dp=max(1, args.mesh_data),
-                                       hw=TPU_V5E)
+                                       hw=TPU_V5E, obs=obs)
             print("MPipeMoE: online adaptive (n, strategy) "
                   f"(retune_every={args.retune_every})")
         else:
@@ -89,7 +107,15 @@ def main():
                         total_steps=args.steps,
                         compress_grads=args.compress_grads)
 
+    g_step = obs.registry.gauge("repro_train_step", "last training step")
+    g_loss = obs.registry.gauge("repro_train_loss", "last training loss")
+    h_step = obs.registry.histogram("repro_train_step_seconds",
+                                    "training step wall time")
+
     def heartbeat(step, metrics):
+        g_step.set(step)
+        g_loss.set(float(metrics["loss"]))
+        h_step.observe(float(metrics["step_time_s"]))
         if step % 10 == 0:
             extra = (f" n={metrics['n']} strat={metrics['strategy']}"
                      if "n" in metrics else "")
@@ -98,11 +124,18 @@ def main():
                   flush=True)
 
     ctx = set_mesh(mesh) if mesh is not None else _null()
-    with ctx:
-        state, hist = train(cfg, steps=args.steps, batch_source=ds,
-                            opts=opts, dist=dist, checkpointer=ck,
-                            ckpt_every=args.ckpt_every,
-                            heartbeat=heartbeat, adaptive=adaptive)
+    try:
+        with ctx:
+            state, hist = train(cfg, steps=args.steps, batch_source=ds,
+                                opts=opts, dist=dist, checkpointer=ck,
+                                ckpt_every=args.ckpt_every,
+                                heartbeat=heartbeat, adaptive=adaptive)
+    finally:
+        if server is not None:
+            server.stop()
+        if args.trace_out:
+            obs.tracer.write(args.trace_out)
+            print(f"trace: {args.trace_out}")
     print(f"final loss {hist[-1]['loss']:.4f} at step {hist[-1]['step']}")
     if "n" in hist[-1]:                   # controller engaged (MoE arch)
         print(f"adaptive: n={hist[-1]['n']} "

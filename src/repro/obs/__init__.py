@@ -1,0 +1,52 @@
+"""repro.obs — engine-wide telemetry: metrics registry, span tracer,
+Perfetto export, live /metrics exporter. Stdlib only; nothing in this
+package imports jax.
+
+Module map:
+
+- ``metrics``  — ``Registry`` of counters/gauges/ring-buffer
+  histograms; shared nearest-rank ``quantile``; Prometheus ``render()``
+  and JSON ``snapshot()``.
+- ``trace``    — ``Tracer`` (Chrome trace-event spans/instants,
+  Perfetto-loadable export) and the no-op ``NullTracer``.
+- ``export``   — ``MetricsServer``: background HTTP thread serving
+  ``/metrics`` + ``/healthz``.
+
+The unit the rest of the codebase passes around is :class:`Recorder`:
+a registry (always real, so ``Engine.stats()`` and ``/metrics`` read
+one source of truth) plus a tracer (``NullTracer`` unless span
+recording was requested). "Telemetry disabled" — the default — means
+the null tracer and no exporter thread; the registry itself is plain
+counter arithmetic on the host and is never consulted inside jitted
+code, so the disabled path adds no jit traces and no measurable
+per-token cost (pinned by the conformance compile-count matrix and
+``benchmarks/trajectory/pr7_obs_overhead.json``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .export import MetricsServer
+from .metrics import Counter, Gauge, Histogram, Registry, quantile
+from .trace import (NullTracer, PID_ENGINE, PID_REQUESTS, PID_RESOLVER,
+                    Tracer)
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsServer",
+           "NullTracer", "PID_ENGINE", "PID_REQUESTS", "PID_RESOLVER",
+           "Recorder", "Registry", "Tracer", "quantile"]
+
+
+class Recorder:
+    """Registry + tracer bundle threaded through engine, scheduler,
+    caches, resolver and train controller. Construct with
+    ``Recorder(tracer=Tracer())`` to record spans; the default is
+    metrics-only with the no-op tracer."""
+
+    def __init__(self, registry: Optional[Registry] = None,
+                 tracer: Optional[NullTracer] = None):
+        self.registry = registry if registry is not None else Registry()
+        self.tracer = tracer if tracer is not None else NullTracer()
+
+    @property
+    def tracing(self) -> bool:
+        return self.tracer.enabled

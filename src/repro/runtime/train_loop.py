@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core.selector import Resolver
 from repro.core.types import TPU_V5E, HardwareSpec, Strategy
+from repro.obs import Recorder
 from repro.distributed.compression import compress_with_feedback
 from repro.models.api import get_model
 from repro.optim import get_optimizer, lr_schedule
@@ -160,6 +161,9 @@ class AdaptiveOptions:
     allow_offload: Optional[bool] = None
     candidates: Optional[Sequence[int]] = None
     cache_size: int = 32             # LRU bound on kept compiled steps
+    obs: Optional["Recorder"] = None  # telemetry recorder shared with
+                                      # the resolver (None = private
+                                      # metrics-only recorder)
 
 
 class AdaptiveController:
@@ -200,11 +204,14 @@ class AdaptiveController:
                         else "simulate")
             if mode == "wallclock":
                 measure_fn = self._wallclock_measure
+        self.obs = (self.aopts.obs if self.aopts.obs is not None
+                    else Recorder())
         self.resolver = Resolver(cfg, ep_size=self.aopts.ep_size,
                                  hw=self.aopts.hw, measure_fn=measure_fn,
                                  dp=self.aopts.dp,
                                  allow_offload=self.aopts.allow_offload,
-                                 candidates=self.aopts.candidates)
+                                 candidates=self.aopts.candidates,
+                                 obs=self.obs)
         self._step_cache: Dict[Tuple, Callable] = {}
         self._measure_cache: Dict[Tuple, Callable] = {}
         self._probe = None               # (state, batch) for wallclock

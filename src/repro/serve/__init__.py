@@ -51,6 +51,13 @@ Module map
                   per-request seeded streams; host-side stop matching.
 ``trace.py``      Poisson arrival traces + wall-clock ``replay``.
 
+Telemetry: every engine carries a ``repro.obs.Recorder`` — a metrics
+registry ``stats()`` and the live ``/metrics`` exporter both read, plus
+an (optional) span tracer emitting request-lifecycle / engine-step /
+resolver-retune spans as Perfetto-loadable Chrome trace-event JSON.
+Disabled-by-default tracing is a no-op recorder and adds zero jit
+traces (pinned by the conformance matrix) — see ``docs/observability.md``.
+
 Mesh-sharded serving (``EngineOptions.devices``): the engine builds a
 dp x ep mesh (``distributed.context.make_serving_context``), shards
 expert weights over EP, and drives chunked prefill through

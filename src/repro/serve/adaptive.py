@@ -38,6 +38,7 @@ from repro.configs.base import ArchConfig
 from repro.core.pipeline_sim import simulate
 from repro.core.selector import Resolver, moe_workload
 from repro.core.types import TPU_V5E, HardwareSpec, Strategy
+from repro.obs import Recorder
 
 log = logging.getLogger("repro.serve")
 
@@ -51,7 +52,8 @@ class PrefillBucketAdaptive:
                  ep_size: int = 1, dp: int = 1, min_bucket: int = 8,
                  max_bucket: int = 512,
                  measure_fn: Optional[Callable[[int, int, Strategy], float]]
-                 = None, shards: int = 1):
+                 = None, shards: int = 1,
+                 obs: Optional[Recorder] = None):
         assert min_bucket > 0 and max_bucket >= min_bucket
         self.cfg = cfg
         self.min_bucket = min_bucket
@@ -66,7 +68,7 @@ class PrefillBucketAdaptive:
                                  dp=dp)
                 return simulate(w, hw, n, strategy)
         self.resolver = (Resolver(cfg, ep_size=ep_size, hw=hw,
-                                  measure_fn=measure_fn, dp=dp)
+                                  measure_fn=measure_fn, dp=dp, obs=obs)
                          if cfg.moe is not None else None)
         # bucket -> (n, strategy); insertion-ordered for reporting
         self.resolutions: Dict[int, Tuple[int, str]] = {}

@@ -84,6 +84,7 @@ from repro.core.strategies import host_offload_supported
 from repro.core.types import TPU_V5E, HardwareSpec, Strategy
 from repro.distributed.context import make_serving_context
 from repro.models.api import get_model, serving_support
+from repro.obs import PID_ENGINE, PID_REQUESTS, Recorder, quantile
 from repro.serve.adaptive import PrefillBucketAdaptive, force_adaptive
 from repro.serve.state_cache import KV_SHARDINGS, make_state_cache
 from repro.serve.request import Request, RequestState
@@ -125,6 +126,11 @@ class EngineOptions:
                                        # N steps (preemption-storm tests —
                                        # constant-state caches never run
                                        # dry on their own)
+    obs: Optional[Recorder] = None     # telemetry: None = metrics-only
+                                       # registry + no-op tracer (the
+                                       # zero-cost disabled path); pass
+                                       # Recorder(tracer=Tracer()) to
+                                       # record Perfetto spans
 
     @property
     def max_pages_per_seq(self) -> int:
@@ -139,6 +145,9 @@ class Engine:
             raise NotImplementedError(f"{cfg.name}: {why}")
         self.cache_kind = kind
         self.opts = opts = options or EngineOptions()
+        # the registry is always real (stats() reads it; /metrics and
+        # stats() agree by construction); only the tracer is optional
+        self.obs = opts.obs if opts.obs is not None else Recorder()
         assert opts.preempt in PREEMPT_POLICIES, opts.preempt
         assert opts.kv_sharding in KV_SHARDINGS, opts.kv_sharding
         if opts.adaptive:
@@ -185,7 +194,8 @@ class Engine:
                 "degenerate to the replicated layout — none of the "
                 "dp-fold KV capacity/residency wins apply")
         self.scheduler = Scheduler(self.kv, chunk=opts.chunk,
-                                   full_reserve=(opts.preempt == "never"))
+                                   full_reserve=(opts.preempt == "never"),
+                                   obs=self.obs)
         measure_fn = opts.measure_fn
         mode = opts.measure
         if mode == "auto":
@@ -197,7 +207,7 @@ class Engine:
             cfg, hw=opts.hw, ep_size=ep_size, dp=dp,
             min_bucket=min(opts.min_bucket, opts.chunk),
             max_bucket=opts.chunk, measure_fn=measure_fn,
-            shards=ep_size)
+            shards=ep_size, obs=self.obs)
         # forward FLOPs/token of the active parameter set, for the
         # offload-vs-recompute preemption cost model
         self._flops_per_token = 2.0 * self.model.count_params(
@@ -225,6 +235,57 @@ class Engine:
         self.peak_running_preempt_free = 0
         self.done: List[Request] = []
         self.metrics: Dict[str, Any] = {}
+        self._init_metrics()
+
+    # -- telemetry -------------------------------------------------------
+    def _init_metrics(self) -> None:
+        """Register this engine's metric families (idempotent — a shared
+        registry across engines merges families)."""
+        reg = self.obs.registry
+        self._m_steps = reg.counter(
+            "repro_engine_steps_total", "engine host steps", ["kind"])
+        self._m_done = reg.counter(
+            "repro_requests_done_total", "requests retired")
+        self._m_tokens = reg.counter(
+            "repro_tokens_generated_total", "tokens emitted to requests")
+        self._m_prefill_tokens = reg.counter(
+            "repro_prefill_tokens_total", "prompt tokens prefilled")
+        self._m_preempts = reg.counter(
+            "repro_preempts_total", "preemptions by mode", ["mode"])
+        self._m_jit = reg.counter(
+            "repro_jit_traces_total",
+            "XLA traces of the jitted step bodies", ["body"])
+        self._m_compiles = reg.counter(
+            "repro_prefill_compiles_total", "compiled prefill programs")
+        self._m_step_s = reg.histogram(
+            "repro_step_seconds", "host wall time per engine step",
+            ["kind"])
+        self._m_lat = reg.histogram(
+            "repro_latency_seconds", "request latency (submit to done)")
+        self._m_ttft = reg.histogram(
+            "repro_ttft_seconds", "time to first token")
+        self._m_itl = reg.histogram(
+            "repro_itl_seconds", "inter-token latency")
+        # point-in-time gauges, filled by _refresh_gauges on demand
+        reg.gauge("repro_waiting_requests", "admission queue depth")
+        reg.gauge("repro_resuming_requests",
+                  "preempted requests awaiting resume")
+        reg.gauge("repro_running_slots", "occupied decode slots")
+        self.obs.tracer.thread_name(PID_ENGINE, 1, "steps")
+        self.kv.record_metrics(reg)
+
+    def _refresh_gauges(self) -> None:
+        """Pull point-in-time gauges into the registry: called by
+        ``stats()`` and by the /metrics exporter's refresh hook, never
+        per step — the disabled path pays nothing for them."""
+        reg = self.obs.registry
+        reg.gauge("repro_waiting_requests").set(
+            len(self.scheduler.waiting))
+        reg.gauge("repro_resuming_requests").set(
+            len(self.scheduler.resuming))
+        reg.gauge("repro_running_slots").set(
+            len(self.scheduler.running))
+        self.kv.record_metrics(reg)
 
     # -- mesh plumbing ---------------------------------------------------
     def _place_params(self, params):
@@ -286,6 +347,8 @@ class Engine:
     def _decode_step(self, params, pools, page_table, lens, tokens, active,
                      sinks, temp, top_k, top_p, seed, pos):
         self.decode_traces += 1        # body runs only while tracing
+        self._m_jit.labels(body="decode").inc()
+        self.obs.tracer.instant("jit.trace", args={"body": "decode"})
         logits, new_pools = self.model.decode_step_paged(
             params, pools, page_table, lens, tokens, self.cfg,
             active=active, dist=self.dist, write_sink=sinks)
@@ -301,6 +364,9 @@ class Engine:
             def body(params, pools, pt_row, pos0, toks, valid_len, slot,
                      sink, temp, top_k, top_p, seed, pos, _cfg=rcfg):
                 self.prefill_traces += 1
+                self._m_jit.labels(body="prefill").inc()
+                self.obs.tracer.instant("jit.trace",
+                                        args={"body": "prefill"})
                 logits, new_pools = self.model.prefill_chunk_paged(
                     params, pools, pt_row, pos0, toks, valid_len, _cfg,
                     dist=self.dist, write_sink=sink, slot=slot)
@@ -308,6 +374,7 @@ class Engine:
                                      pos), self._pin_pools(new_pools)
             fn = jax.jit(body)
             self.prefill_rejits += 1
+            self._m_compiles.inc()
         self._prefill_fns[key] = fn
         while len(self._prefill_fns) > max(1, self.opts.cache_size):
             self._prefill_fns.pop(next(iter(self._prefill_fns)))
@@ -472,6 +539,7 @@ class Engine:
     def _do_preempt(self, victim: Request) -> None:
         mode = self.scheduler.preempt(victim, self._preempt_mode(victim))
         self.preempts[mode] += 1
+        self._m_preempts.labels(mode=mode).inc()
         log.info("preempt rid=%d mode=%s cached=%d", victim.rid, mode,
                  victim.cached_tokens if mode == "offload" else 0)
 
@@ -498,32 +566,40 @@ class Engine:
     # -- engine iteration ------------------------------------------------
     def step(self) -> Dict[str, Any]:
         """Admit, then run one jitted step (prefill chunk or decode)."""
-        # storm injection (tests/benchmarks): constant-state caches hold
-        # O(1) bytes per slot and never run dry, so preemption storms
-        # must be forced rather than provoked by a small pool
-        if (self.opts.storm_every and self.opts.preempt != "never"
-                and self.scheduler.running):
-            self._storm_tick += 1
-            if self._storm_tick >= self.opts.storm_every:
-                self._storm_tick = 0
-                victim = self._pick_victim()
-                if victim is not None:
-                    self._do_preempt(victim)
-        self.scheduler.admit()
-        if not (self.preempts["recompute"] or self.preempts["offload"]):
-            self.peak_running_preempt_free = max(
-                self.peak_running_preempt_free,
-                len(self.scheduler.running))
-        action, req = self.scheduler.next_action()
-        info: Dict[str, Any] = {"kind": action}
-        if action == "prefill":
-            info.update(self._run_prefill(req))
-        elif action == "decode":
-            info.update(self._run_decode())
-        elif self.scheduler.waiting or self.scheduler.resuming:
-            raise RuntimeError(
-                "scheduler idle with waiting requests — admission wedged")
+        t0 = time.perf_counter()
+        with self.obs.tracer.span("engine.step",
+                                  args={"step": self.step_count}) as sp:
+            # storm injection (tests/benchmarks): constant-state caches
+            # hold O(1) bytes per slot and never run dry, so preemption
+            # storms must be forced rather than provoked by a small pool
+            if (self.opts.storm_every and self.opts.preempt != "never"
+                    and self.scheduler.running):
+                self._storm_tick += 1
+                if self._storm_tick >= self.opts.storm_every:
+                    self._storm_tick = 0
+                    victim = self._pick_victim()
+                    if victim is not None:
+                        self._do_preempt(victim)
+            self.scheduler.admit()
+            if not (self.preempts["recompute"]
+                    or self.preempts["offload"]):
+                self.peak_running_preempt_free = max(
+                    self.peak_running_preempt_free,
+                    len(self.scheduler.running))
+            action, req = self.scheduler.next_action()
+            sp["kind"] = action
+            info: Dict[str, Any] = {"kind": action}
+            if action == "prefill":
+                info.update(self._run_prefill(req))
+            elif action == "decode":
+                info.update(self._run_decode())
+            elif self.scheduler.waiting or self.scheduler.resuming:
+                raise RuntimeError("scheduler idle with waiting "
+                                   "requests — admission wedged")
         self.step_count += 1
+        self._m_steps.labels(kind=action).inc()
+        self._m_step_s.labels(kind=action).observe(
+            time.perf_counter() - t0)
         info.update(cache_bytes=self.kv.cache_bytes,
                     kv_used_bytes=self.kv.used_bytes,
                     free_pages=self.kv.free_units,
@@ -544,7 +620,12 @@ class Engine:
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :c] = req.prefill_tokens[req.prefill_pos:
                                          req.prefill_pos + c]
-        with self._mesh_scope():
+        tracer = self.obs.tracer
+        with tracer.span("prefill", args={"rid": req.rid}), \
+             tracer.span("PREFILL", pid=PID_REQUESTS, tid=req.rid,
+                         args={"chunk": c, "bucket": bucket,
+                               "pos": req.prefill_pos}), \
+             self._mesh_scope():
             tok, kv.pools = fn(self.params, kv.pools,
                                kv.device_page_table(slot),
                                kv.device_lens(slot), self._put(toks),
@@ -554,9 +635,12 @@ class Engine:
                                *self._sample_args([req]))
         req.prefill_pos += c
         kv.lens[slot] += c
+        self._m_prefill_tokens.inc(c)
         self.scheduler.prefill_advanced(req)
         if req.remaining_prefill == 0:
             req.state = RequestState.DECODE
+            tracer.begin("DECODE", pid=PID_REQUESTS, tid=req.rid)
+            req.decode_span_open = True
             # a resumed re-prefill (recompute preemption) replays tokens
             # that were already emitted — its final-chunk sample is the
             # pending decode input, not a new token
@@ -590,7 +674,9 @@ class Engine:
             tokens[s, 0] = req.output[-1]
             active[s] = True
             by_slot[s] = req
-        with self._mesh_scope():
+        with self.obs.tracer.span("decode",
+                                  args={"slots": len(slots)}), \
+             self._mesh_scope():
             toks, kv.pools = self._decode_fn(
                 self.params, kv.pools, kv.device_page_table(),
                 kv.device_lens(), self._put_slots(tokens),
@@ -606,8 +692,20 @@ class Engine:
         return {"tokens": len(slots)}
 
     def _retire(self, req: Request) -> None:
+        tracer = self.obs.tracer
+        if req.decode_span_open:
+            tracer.end("DECODE", pid=PID_REQUESTS, tid=req.rid)
+            req.decode_span_open = False
+        tracer.instant("RETIRE", pid=PID_REQUESTS, tid=req.rid,
+                       args={"reason": req.finish_reason})
         self.scheduler.finish(req)
         self.done.append(req)
+        self._m_done.inc()
+        self._m_tokens.inc(len(req.output))
+        self._m_lat.observe(req.latency_s)
+        self._m_ttft.observe(req.ttft_s)
+        for g in req.itl_s:
+            self._m_itl.observe(g)
 
     def run_until_idle(self, max_steps: int = 1_000_000) -> None:
         steps = 0
@@ -619,13 +717,14 @@ class Engine:
 
     # -- reporting -------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
-        def pct(xs: List[float], p: float) -> float:
-            return xs[min(len(xs) - 1, int(p / 100 * len(xs)))] \
-                if xs else 0.0
-
-        lat = sorted(r.latency_s for r in self.done)
-        ttft = sorted(r.ttft_s for r in self.done)
-        itl = sorted(g for r in self.done for g in r.itl_s)
+        # percentiles via the shared nearest-rank quantile (repro.obs)
+        # — the old hand-rolled int(p/100*n) index overshot by a rank
+        lat = [r.latency_s for r in self.done]
+        ttft = [r.ttft_s for r in self.done]
+        itl = [g for r in self.done for g in r.itl_s]
+        self._refresh_gauges()
+        reg = self.obs.registry
+        free_fam = reg.get("repro_kv_free_units")
         return {
             "requests_done": len(self.done),
             "tokens_generated": sum(len(r.output) for r in self.done),
@@ -638,12 +737,23 @@ class Engine:
             "prefill_compiles": self.prefill_rejits,
             "decode_traces": self.decode_traces,
             "prefill_traces": self.prefill_traces,
-            "p50_latency_s": pct(lat, 50),
-            "p99_latency_s": pct(lat, 99),
-            "p50_ttft_s": pct(ttft, 50),
-            "p99_ttft_s": pct(ttft, 99),
-            "p50_itl_s": pct(itl, 50),
-            "p99_itl_s": pct(itl, 99),
+            "p50_latency_s": quantile(lat, 50),
+            "p99_latency_s": quantile(lat, 99),
+            "p50_ttft_s": quantile(ttft, 50),
+            "p99_ttft_s": quantile(ttft, 99),
+            "p50_itl_s": quantile(itl, 50),
+            "p99_itl_s": quantile(itl, 99),
+            # live gauges, read back from the registry so /metrics and
+            # stats() report the same values by construction
+            "queue_waiting": int(
+                reg.gauge("repro_waiting_requests").value),
+            "queue_resuming": int(
+                reg.gauge("repro_resuming_requests").value),
+            "running_slots": int(
+                reg.gauge("repro_running_slots").value),
+            "free_units_by_shard": {
+                dict(c.labels)["shard"]: int(c.value)
+                for c in (free_fam.children() if free_fam else ())},
             "preempt_recompute": self.preempts["recompute"],
             "preempt_offload": self.preempts["offload"],
             "resumes": self.scheduler.resume_count,

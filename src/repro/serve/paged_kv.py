@@ -157,6 +157,25 @@ class PagedKVCache(StateCache):
     def free_units(self) -> int:
         return self.free_pages
 
+    def free_units_of(self, shard: int) -> int:
+        return self.free_pages_of(shard)
+
+    def record_metrics(self, registry) -> None:
+        super().record_metrics(registry)
+        self.record_shard_metrics(registry)
+
+    def record_shard_metrics(self, registry) -> None:
+        """Paged-only per-shard gauges (also exported by a composite
+        cache on behalf of its paged side)."""
+        free = registry.gauge("repro_kv_free_pages",
+                              "free KV pages per shard", ["shard"])
+        held = registry.gauge("repro_kv_held_bytes",
+                              "resident KV bytes per shard", ["shard"])
+        for s in range(self.n_shards):
+            free.labels(shard=s).set(self.free_pages_of(s))
+            held.labels(shard=s).set(
+                self.used_pages_of(s) * self.page_bytes)
+
     @property
     def used_pages(self) -> int:
         return (self.num_pages - self.n_shards) - self.free_pages

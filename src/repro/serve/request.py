@@ -72,6 +72,9 @@ class Request:
     # request's pages never migrate and per-shard accounting stays
     # consistent across preemption round-trips. -1 = not yet placed.
     kv_shard: int = -1
+    # telemetry: a DECODE B-span is open on the request's trace track
+    # (repro.obs) — the closer (preempt or retire) must balance it
+    decode_span_open: bool = False
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)

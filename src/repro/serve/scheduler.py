@@ -55,6 +55,7 @@ from __future__ import annotations
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
+from repro.obs import PID_REQUESTS, Recorder
 from repro.serve.request import Request, RequestState
 from repro.serve.state_cache import StateCache
 
@@ -63,17 +64,23 @@ __all__ = ["Scheduler"]
 
 class Scheduler:
     def __init__(self, kv: StateCache, *, chunk: int = 64,
-                 full_reserve: bool = False):
+                 full_reserve: bool = False,
+                 obs: Optional[Recorder] = None):
         assert chunk >= 1
         self.kv = kv
         self.chunk = chunk
         self.full_reserve = full_reserve
+        self.obs = obs if obs is not None else Recorder()
         self.waiting: Deque[Request] = deque()
         self.resuming: List[Request] = []              # PREEMPTED requests
         self.running: Dict[int, Request] = {}          # slot -> request
         self._prefilling: Deque[int] = deque()         # slots, FCFS
         self._last_was_prefill = False
         self.resume_count = 0
+        self._m_resumes = self.obs.registry.counter(
+            "repro_resumes_total", "preempted requests resumed")
+        self._m_admits = self.obs.registry.counter(
+            "repro_admits_total", "admissions by kind", ["kind"])
 
     # -- queue side ------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -101,6 +108,14 @@ class Scheduler:
         req.preempt_mode = ""
         req.cached_tokens = 0
         self.resume_count += 1
+        self._m_resumes.inc()
+        self._m_admits.labels(kind="resume").inc()
+        tracer = self.obs.tracer
+        tracer.instant("RESUME", pid=PID_REQUESTS, tid=req.rid,
+                       args={"to": req.resume_to, "slot": slot})
+        if req.state == RequestState.DECODE:
+            tracer.begin("DECODE", pid=PID_REQUESTS, tid=req.rid)
+            req.decode_span_open = True
 
     def _place_fresh(self, req: Request
                      ) -> Optional[Tuple[int, int, int]]:
@@ -151,6 +166,13 @@ class Scheduler:
                 self.waiting.popleft()
                 req.kv_shard = shard
                 req.state = RequestState.PREFILL
+                self._m_admits.labels(kind="fresh").inc()
+                tracer = self.obs.tracer
+                tracer.thread_name(PID_REQUESTS, req.rid,
+                                   f"req {req.rid}")
+                tracer.instant("ADMIT", pid=PID_REQUESTS, tid=req.rid,
+                               args={"shard": shard, "slot": slot,
+                                     "reserved_tokens": need})
             else:
                 break
             req.slot = slot
@@ -187,6 +209,13 @@ class Scheduler:
         req.preempt_mode = mode
         req.preempt_count += 1
         self.resuming.append(req)
+        tracer = self.obs.tracer
+        if req.decode_span_open:
+            tracer.end("DECODE", pid=PID_REQUESTS, tid=req.rid)
+            req.decode_span_open = False
+        tracer.instant("PREEMPT", pid=PID_REQUESTS, tid=req.rid,
+                       args={"mode": mode, "resume_to": req.resume_to,
+                             "cached_tokens": req.cached_tokens})
         return mode
 
     # -- step planning ---------------------------------------------------

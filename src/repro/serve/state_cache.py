@@ -278,6 +278,37 @@ class StateCache(abc.ABC):
         """Free allocation units (pages for a paged cache, slots for a
         constant-state cache) — a load signal for ``Engine.step()``."""
 
+    @abc.abstractmethod
+    def free_units_of(self, shard: int) -> int:
+        """Free allocation units on one shard (the per-shard breakdown
+        of :attr:`free_units` — a ``/metrics`` gauge per shard)."""
+
+    def record_metrics(self, registry) -> None:
+        """Refresh this cache's point-in-time gauges into a
+        ``repro.obs`` registry (family registration is idempotent).
+        Called on demand — by ``Engine.stats()`` and the ``/metrics``
+        exporter's refresh hook — never on the per-step hot path.
+        Subclasses extend with their own gauges via ``super()``."""
+        g = registry.gauge
+        g("repro_kv_cache_bytes",
+          "allocated device state bytes").set(self.cache_bytes)
+        g("repro_kv_used_bytes",
+          "state bytes bound to live sequences").set(self.used_bytes)
+        g("repro_kv_host_bytes",
+          "bytes parked in the host offload pool").set(self.host_bytes)
+        g("repro_kv_offloaded_requests",
+          "requests parked in the host pool").set(self.offloaded_count)
+        g("repro_swap_out_bytes",
+          "cumulative device-to-host offload traffic").set(
+            self.swap_out_bytes)
+        g("repro_swap_in_bytes",
+          "cumulative host-to-device restore traffic").set(
+            self.swap_in_bytes)
+        fam = g("repro_kv_free_units",
+                "free cache units (pages or slots) per shard", ["shard"])
+        for s in range(self.n_shards):
+            fam.labels(shard=s).set(self.free_units_of(s))
+
     @property
     @abc.abstractmethod
     def cache_bytes(self) -> int:
@@ -502,6 +533,9 @@ class ConstantStateCache(StateCache):
     def free_units(self) -> int:
         return self.max_slots - sum(self._allocated)
 
+    def free_units_of(self, shard: int) -> int:
+        return self.free_slots_of(shard)
+
     @property
     def cache_bytes(self) -> int:
         return kv_cache.cache_bytes(self.pools)
@@ -664,6 +698,17 @@ class CompositeStateCache(StateCache):
     @property
     def free_units(self) -> int:
         return self.paged.free_units
+
+    def free_units_of(self, shard: int) -> int:
+        # pages are the scarce resource — mirror free_units
+        return self.paged.free_units_of(shard)
+
+    def record_metrics(self, registry) -> None:
+        # paged side carries the composite's aggregate gauges (it sees
+        # only its own bytes), so take the base bookkeeping from *this*
+        # object's properties and the per-shard paged extras explicitly
+        StateCache.record_metrics(self, registry)
+        self.paged.record_shard_metrics(registry)
 
     @property
     def cache_bytes(self) -> int:

@@ -64,19 +64,23 @@ def poisson_trace(num_requests: int, *, rate: float, vocab_size: int,
 def run_poisson(cfg, options, *, requests: int, rate: float,
                 prompt_max: int, gen_max: int, seed: int = 0,
                 eos_id=None, time_scale: float = 1.0, sampling=None,
-                params=None):
+                params=None, on_engine=None):
     """Build an Engine for ``cfg``/``options``, replay a Poisson trace
     through it, and return ``(engine, wall_s)`` — the shared body of the
     serving CLI and ``benchmarks/serving.py``. ``sampling`` (a
     :class:`repro.serve.sampling.SamplingParams`) applies to every
     request; ``params`` reuses an existing parameter tree (so two engines
-    can be compared on identical weights)."""
+    can be compared on identical weights); ``on_engine(engine)`` runs
+    after warmup but before the replay — the hook the CLI uses to attach
+    the live ``/metrics`` exporter to the engine's gauge refresher."""
     import time
 
     from repro.serve.engine import Engine
 
     engine = Engine(cfg, params, options=options)
     engine.warmup()        # steady-state numbers, not XLA compile time
+    if on_engine is not None:
+        on_engine(engine)
     trace = poisson_trace(requests, rate=rate, vocab_size=cfg.vocab_size,
                           prompt_len_range=(4, prompt_max),
                           gen_len_range=(2, gen_max), seed=seed)

@@ -1,0 +1,316 @@
+"""Telemetry (repro.obs): the shared nearest-rank quantile (property-
+tested against a definitional reference), the metrics registry and its
+Prometheus exposition, the Chrome-trace schema over a real preemption
+storm, the live /metrics exporter agreeing with ``Engine.stats()``, and
+the zero-cost contract of disabled telemetry (identical jit traces and
+identical tokens with the tracer on or off)."""
+import dataclasses
+import json
+import math
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.obs import (MetricsServer, NullTracer, Recorder, Registry,
+                       Tracer, quantile)
+from repro.serve import Engine, EngineOptions
+
+PROMPT_LENS = (13, 29, 7, 21, 5)
+MAX_NEW = (6, 4, 8, 5, 7)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              compute_dtype="float32")
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.Generator(np.random.Philox(key=7))
+    prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in PROMPT_LENS]
+    return cfg, params, prompts
+
+
+def _run(cfg, params, prompts, *, obs=None, **over):
+    # same constrained pool as tests/test_preemption.py: ~28 pages of
+    # demand over 11 usable pages, so recompute preemptions fire
+    kw = dict(page_size=4, max_slots=3, max_seq_len=64, chunk=16,
+              min_bucket=8, num_pages=12, preempt="recompute", obs=obs)
+    kw.update(over)
+    eng = Engine(cfg, params, options=EngineOptions(**kw))
+    for p, m in zip(prompts, MAX_NEW):
+        eng.submit(p, max_new_tokens=m, arrival_s=0.0)
+    eng.run_until_idle()
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# quantile: the one shared nearest-rank implementation
+# ---------------------------------------------------------------------------
+
+def _reference_quantile(xs, p):
+    """Definitional nearest-rank: the smallest sample whose empirical
+    CDF reaches p/100 (p0 = min, p100 = max)."""
+    s = sorted(xs)
+    n = len(s)
+    for i, v in enumerate(s):
+        if (i + 1) / n >= p / 100.0 - 1e-12:
+            return v
+    return s[-1]
+
+
+def test_quantile_pinned_examples():
+    # the Engine.stats() bug this replaced: int(p/100*n) indexed one
+    # rank too high, so p50 of a 2-element list returned the max
+    assert quantile([1.0, 2.0], 50) == 1.0
+    assert quantile([1.0, 2.0], 100) == 2.0
+    assert quantile([2.0, 1.0], 0) == 1.0
+    assert quantile([5.0], 99) == 5.0
+    assert quantile([], 50) == 0.0
+    assert quantile([3, 1, 4, 1, 5], 50) == 3.0      # unsorted input ok
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @given(st.lists(st.floats(allow_nan=False, allow_infinity=False,
+                              width=32),
+                    min_size=1, max_size=200),
+           st.integers(min_value=0, max_value=100))
+    @settings(max_examples=200, deadline=None)
+    def test_quantile_matches_reference(xs, p):
+        got = quantile(xs, p)
+        assert got == _reference_quantile(xs, p)
+        assert got in xs                  # nearest-rank never interpolates
+        # ceil(p/100*n) is the textbook closed form of the same rank
+        rank = max(1, math.ceil(p / 100.0 * len(xs)))
+        assert got == sorted(xs)[rank - 1]
+
+
+# ---------------------------------------------------------------------------
+# registry + Prometheus exposition
+# ---------------------------------------------------------------------------
+
+def test_registry_render_and_snapshot():
+    reg = Registry()
+    c = reg.counter("repro_test_total", "things done")
+    c.inc()
+    c.inc(2)
+    g = reg.gauge("repro_test_gauge", "a level")
+    g.set(3.5)
+    g.inc()
+    g.dec(0.5)
+    h = reg.histogram("repro_test_seconds", "a timing")
+    for v in (1, 2, 3, 4):
+        h.observe(v)
+    text = reg.render()
+    assert "# HELP repro_test_total things done" in text
+    assert "# TYPE repro_test_total counter" in text
+    assert "repro_test_total 3" in text.splitlines()
+    assert "repro_test_gauge 4" in text.splitlines()
+    assert "# TYPE repro_test_seconds summary" in text
+    assert 'repro_test_seconds{quantile="0.5"} 2' in text
+    assert 'repro_test_seconds{quantile="0.99"} 4' in text
+    assert "repro_test_seconds_sum 10" in text
+    assert "repro_test_seconds_count 4" in text
+
+    snap = reg.snapshot()
+    json.dumps(snap)                       # JSON-serializable end to end
+    assert snap["repro_test_total"] == 3
+    assert snap["repro_test_gauge"] == 4
+    assert snap["repro_test_seconds"] == {
+        "count": 4, "sum": 10, "p50": 2, "p90": 4, "p99": 4}
+
+
+def test_registry_labels_and_idempotent_registration():
+    reg = Registry()
+    fam = reg.counter("repro_modes_total", "by mode", labels=("mode",))
+    fam.labels(mode="a").inc()
+    fam.labels(mode="b").inc(2)
+    # idempotent: re-declaring returns the same family object
+    assert reg.counter("repro_modes_total", "by mode",
+                       labels=("mode",)) is fam
+    text = reg.render()
+    assert 'repro_modes_total{mode="a"} 1' in text
+    assert 'repro_modes_total{mode="b"} 2' in text
+    assert reg.snapshot()["repro_modes_total"] == {
+        'mode="a"': 1, 'mode="b"': 2}
+    # kind and label-set mismatches are registration bugs, not merges
+    with pytest.raises(AssertionError):
+        reg.gauge("repro_modes_total", "by mode", labels=("mode",))
+    with pytest.raises(AssertionError):
+        reg.counter("repro_modes_total", "by mode", labels=("kind",))
+    with pytest.raises(AssertionError):
+        fam.labels(kind="a")
+
+
+def test_histogram_window_bounds_quantiles_not_totals():
+    reg = Registry()
+    h = reg.histogram("repro_win_seconds", "w", window=4)
+    for v in (100, 100, 1, 2, 3, 4):
+        h.observe(v)
+    # quantiles see only the last 4 observations...
+    assert h.quantile(99) == 4
+    # ...while count/sum stay lifetime totals
+    assert h.count == 6 and h.sum == 210
+
+
+# ---------------------------------------------------------------------------
+# tracer: schema/golden over a preemption storm
+# ---------------------------------------------------------------------------
+
+def test_null_tracer_is_inert():
+    t = NullTracer()
+    assert not t.enabled
+    with t.span("x", args={"k": 1}) as sp:
+        sp["late"] = 2
+    t.instant("i")
+    t.begin("b")
+    t.end("b")
+    t.thread_name(1, 1, "steps")
+    assert t.export()["traceEvents"] == []
+
+
+def test_trace_schema_over_preemption_storm(setup, tmp_path):
+    cfg, params, prompts = setup
+    obs = Recorder(tracer=Tracer())
+    eng = _run(cfg, params, prompts, obs=obs)
+    assert eng.preempts["recompute"] > 0            # the storm happened
+
+    doc = obs.tracer.export()
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    real = [e for e in evs if e["ph"] != "M"]
+    assert real and set(e["ph"] for e in real) <= {"B", "E", "X", "i"}
+
+    # stable pid/tid naming
+    proc = {e["pid"]: e["args"]["name"] for e in meta
+            if e["name"] == "process_name"}
+    assert proc[1] == "engine" and proc[2] == "requests" \
+        and proc[3] == "resolver"
+    threads = {(e["pid"], e["tid"]): e["args"]["name"] for e in meta
+               if e["name"] == "thread_name"}
+    assert threads[(1, 1)] == "steps"
+    for r in eng.done:
+        assert threads[(2, r.rid)] == f"req {r.rid}"
+
+    # timestamps sorted; X complete events carry a duration
+    ts = [e["ts"] for e in real]
+    assert ts == sorted(ts)
+    for e in real:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+        if e["ph"] == "i":
+            assert e["s"] == "t"
+
+    # B/E balanced and properly nested per (pid, tid)
+    stacks = {}
+    for e in real:
+        key = (e["pid"], e["tid"])
+        if e["ph"] == "B":
+            stacks.setdefault(key, []).append(e["name"])
+        elif e["ph"] == "E":
+            assert stacks.get(key), f"E without matching B: {e}"
+            assert stacks[key].pop() == e["name"]
+    assert all(not s for s in stacks.values())
+
+    # lifecycle instants: one ADMIT + one RETIRE per request; every
+    # PREEMPT has its RESUME; counts match the engine's own counters
+    by_name = {}
+    for e in real:
+        by_name.setdefault(e["name"], []).append(e)
+    n = len(prompts)
+    assert len(by_name["ADMIT"]) == n
+    assert len(by_name["RETIRE"]) == n
+    assert len(by_name["PREEMPT"]) == eng.preempts["recompute"]
+    assert len(by_name["RESUME"]) == len(by_name["PREEMPT"])
+    assert all(e["args"]["mode"] == "recompute"
+               for e in by_name["PREEMPT"])
+    assert by_name["PREFILL"] and by_name["engine.step"]
+
+    # the written file is valid JSON and identical to export()
+    path = tmp_path / "trace.json"
+    obs.tracer.write(str(path))
+    assert json.loads(path.read_text()) == doc
+
+
+# ---------------------------------------------------------------------------
+# live exporter: /metrics agrees with Engine.stats()
+# ---------------------------------------------------------------------------
+
+def test_metrics_server_agrees_with_stats(setup):
+    cfg, params, prompts = setup
+    obs = Recorder()
+    eng = _run(cfg, params, prompts, obs=obs)
+    server = MetricsServer(obs.registry, port=0,
+                           refresh=eng._refresh_gauges).start()
+    try:
+        assert server.port > 0
+        text = urllib.request.urlopen(server.url + "/metrics",
+                                      timeout=10).read().decode()
+        health = urllib.request.urlopen(server.url + "/healthz",
+                                        timeout=10).read().decode()
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(server.url + "/nope", timeout=10)
+    finally:
+        server.stop()
+    assert health == "ok\n"
+    assert "# TYPE repro_step_seconds summary" in text
+
+    def metric(name):
+        for line in text.splitlines():
+            if line.startswith(name + " "):
+                return float(line.rsplit(" ", 1)[1])
+        raise AssertionError(f"{name} not in exposition")
+
+    s = eng.stats()
+    assert metric("repro_requests_done_total") == len(eng.done) == \
+        len(prompts)
+    assert metric("repro_tokens_generated_total") == \
+        sum(len(r.output) for r in eng.done)
+    assert metric('repro_preempts_total{mode="recompute"}') == \
+        eng.preempts["recompute"]
+    # scrape-time refresh: the gauges /metrics serves are the ones
+    # stats() reports
+    assert metric("repro_waiting_requests") == s["queue_waiting"] == 0
+    assert metric("repro_resuming_requests") == s["queue_resuming"] == 0
+    assert metric("repro_running_slots") == s["running_slots"] == 0
+    assert metric('repro_kv_free_pages{shard="0"}') == \
+        s["free_units_by_shard"]["0"] == eng.kv.num_pages - 1
+
+
+def test_stats_quantiles_use_shared_util(setup):
+    cfg, params, prompts = setup
+    eng = _run(cfg, params, prompts)
+    s = eng.stats()
+    lats = sorted(r.latency_s for r in eng.done)
+    assert s["p50_latency_s"] == quantile(lats, 50)
+    # 5 samples: nearest-rank p50 is the 3rd, not the 4th (the old
+    # int(p/100*n) bias)
+    assert s["p50_latency_s"] == lats[2]
+
+
+# ---------------------------------------------------------------------------
+# zero-cost when disabled: tokens and jit traces identical on vs off
+# ---------------------------------------------------------------------------
+
+def test_telemetry_on_off_identical_traces_and_tokens(setup):
+    cfg, params, prompts = setup
+    off = _run(cfg, params, prompts)          # default no-op recorder
+    on = _run(cfg, params, prompts, obs=Recorder(tracer=Tracer()))
+    assert on.decode_traces == off.decode_traces
+    assert on.prefill_traces == off.prefill_traces
+    assert [r.output for r in sorted(on.done, key=lambda r: r.rid)] == \
+           [r.output for r in sorted(off.done, key=lambda r: r.rid)]
+    # default recorder still counts jit traces in its registry
+    snap = off.obs.registry.snapshot()
+    assert snap["repro_jit_traces_total"]['body="decode"'] == \
+        off.decode_traces

@@ -40,7 +40,11 @@ engine's own trace counters (``decode_traces`` / ``prefill_traces`` —
 the jitted bodies increment them only while tracing). The arch axis
 asserts the same counters, so the invariant holds for recurrent state
 threading (slot-sliced prefill writes, frozen inactive decode slots)
-too.
+too. A **telemetry leg** replays the recompute storm with the
+``repro.obs`` span tracer live and must match the telemetry-off leg's
+jit counters exactly — instrumentation runs at trace time only, so
+telemetry on/off cannot change compiled HLO (see
+``docs/observability.md``).
 """
 import pytest
 
@@ -127,6 +131,15 @@ for mode in ('never', 'recompute', 'offload'):
     eng, outs = run_engine(
         preempt=mode, num_pages=(0 if mode == 'never' else %(pages)d))
     out[mode] = report(eng, outs)
+
+# telemetry leg: the recompute storm again with the span tracer live —
+# instrumentation inside the jitted bodies runs at trace time only, so
+# the jit trace/compile counters must not move by a single trace
+from repro.obs import Recorder, Tracer
+obs = Recorder(tracer=Tracer())
+eng, outs = run_engine(preempt='recompute', num_pages=%(pages)d, obs=obs)
+out['telemetry'] = report(eng, outs)
+out['telemetry']['trace_events'] = len(obs.tracer.export()['traceEvents'])
 print(json.dumps(out))
 """
 
@@ -253,6 +266,26 @@ def test_replicated_steady_state_compiles_once():
         assert res[mode]["decode_traces"] == 1, mode
         assert res[mode]["prefill_traces"] == \
             res[mode]["prefill_compiles"], mode
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kv_sharding", KV_SHARDINGS)
+def test_telemetry_adds_zero_jit_traces(kv_sharding):
+    """The span-tracer-on leg replays the recompute storm with every
+    span/instant live (engine steps, request lifecycle, jit.trace
+    instants inside the jitted bodies): jit trace and compile counts
+    must be identical to the telemetry-off recompute leg — tracer calls
+    inside jitted Python run at trace time only and can never change
+    compiled HLO — and the run stays token-exact with a non-empty
+    exported trace."""
+    res = _matrix(kv_sharding)
+    off, on = res["recompute"], res["telemetry"]
+    assert on["token_exact"]
+    assert on["drained"] and on["preempt_recompute"] > 0
+    for k in ("decode_traces", "prefill_traces", "prefill_compiles",
+              "buckets"):
+        assert on[k] == off[k], f"{k}: {on[k]} != {off[k]}"
+    assert on["trace_events"] > 0
 
 
 # -- arch axis: every StateCache kind x every preempt mode -------------------

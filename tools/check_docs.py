@@ -35,12 +35,14 @@ CMD = re.compile(r"python\s+(-m\s+[\w.]+|\S+\.py)((?:\s+\S+)*)")
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 REQUIRED_DOCS = ("README.md", "docs/architecture.md", "docs/serving.md",
-                 "docs/distributed.md", "benchmarks/trajectory/README.md")
+                 "docs/distributed.md", "docs/observability.md",
+                 "benchmarks/trajectory/README.md")
 REQUIRED_FLAGS = {
     "benchmarks/serving.py": ("--devices", "--smoke", "--overload",
-                              "--kv-sharding", "--compare-arch"),
+                              "--kv-sharding", "--compare-arch",
+                              "--obs-overhead"),
     "-m repro.launch.serve": ("--devices", "--engine", "--kv-sharding",
-                              "--arch"),
+                              "--arch", "--metrics-port", "--trace-out"),
 }
 
 

@@ -1,8 +1,10 @@
 #!/usr/bin/env python
-"""Measure line coverage of ``src/repro/serve`` with the stdlib only.
+"""Measure line coverage of ``src/repro/serve`` + ``src/repro/obs``
+with the stdlib only.
 
-CI enforces a pytest-cov line-coverage floor on the serving package
-(``--cov=repro.serve --cov-fail-under=N`` in the tier-1 job). This tool
+CI enforces a pytest-cov line-coverage floor on the serving and
+telemetry packages (``--cov=repro.serve --cov=repro.obs
+--cov-fail-under=N`` in the tier-1 job). This tool
 reproduces that measurement without pytest-cov — containers that cannot
 install it can still re-derive the floor before bumping it:
 
@@ -24,12 +26,13 @@ import sys
 import threading
 import types
 
-SERVE_REL = os.path.join("src", "repro", "serve")
+PACKAGE_RELS = (os.path.join("src", "repro", "serve"),
+                os.path.join("src", "repro", "obs"))
 
 DEFAULT_TESTS = ["tests/test_serving.py", "tests/test_preemption.py",
                  "tests/test_sampling.py", "tests/test_kv_sharding.py",
                  "tests/test_serving_sharded.py",
-                 "tests/test_state_cache.py",
+                 "tests/test_state_cache.py", "tests/test_obs.py",
                  "-m", "not slow", "-q"]
 
 
@@ -47,9 +50,11 @@ def executable_lines(path: str) -> set:
 
 def main() -> int:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    serve_dir = os.path.join(root, SERVE_REL)
-    files = sorted(os.path.join(serve_dir, f)
-                   for f in os.listdir(serve_dir) if f.endswith(".py"))
+    files = sorted(
+        os.path.join(root, rel, f)
+        for rel in PACKAGE_RELS
+        for f in os.listdir(os.path.join(root, rel))
+        if f.endswith(".py"))
     want = {f: executable_lines(f) for f in files}
 
     hits: dict = {f: set() for f in files}
