@@ -67,6 +67,18 @@ exposition (``BENCH_obs_metrics.prom``) as artifacts — see
 
     PYTHONPATH=src python benchmarks/serving.py --obs-overhead --smoke
 
+``--attn-kernel-compare`` runs the paged-attention kernel scenario
+(default out: ``BENCH_paged_attention.json``): the same burst drained
+once with the fused Pallas paged-decode kernel
+(``attn_kernel="pallas"``; interpret mode on CPU) and once with the
+``gather_pages`` baseline, both golden-verified and checked
+token-identical to each other, reporting decode tok/s, peak KV bytes
+and the jit-trace counts per leg (selecting the kernel may not add
+compiles) — see ``docs/serving.md``:
+
+    PYTHONPATH=src python benchmarks/serving.py --attn-kernel-compare \
+        --smoke
+
 Every scenario's JSON also embeds a full ``repro.obs`` registry
 snapshot under ``"telemetry"``.
 """
@@ -675,6 +687,100 @@ def _print_arch(res: dict) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Paged-attention kernel comparison (--attn-kernel-compare)
+# ---------------------------------------------------------------------------
+
+def run_attn_kernel_compare(*, arch: str, requests: int, slots: int,
+                            chunk: int, page_size: int, prompt_max: int,
+                            gen_max: int, seed: int, hw_name: str) -> dict:
+    """Fused Pallas paged-decode kernel vs the gather baseline over one
+    burst, same engine geometry, both golden-verified. The contract is
+    bit-identical tokens (the exactness tier pins it at kernel level;
+    this pins it end-to-end on a real trace) at identical jit-trace
+    counts; the perf split reported is decode tok/s and peak KV bytes.
+    On CPU the Pallas leg runs in interpret mode, so its tok/s is an
+    exactness datapoint, not a speedup claim — the kernel's win is
+    shard-local page reads on the mesh (no gathered-KV materialization
+    or cross-shard KV collectives, see docs/serving.md)."""
+    import time
+
+    cfg = _golden_cfg(arch)
+    hw = resolve_hw(hw_name)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    trace = poisson_trace(requests, rate=1.0, vocab_size=cfg.vocab_size,
+                          prompt_len_range=(8, prompt_max),
+                          gen_len_range=(max(2, gen_max // 2), gen_max),
+                          seed=seed)
+    refs = _dense_refs(cfg, params, trace)
+
+    legs, outs = {}, {}
+    for kern in ("gather", "pallas"):
+        opts = EngineOptions(page_size=page_size, max_slots=slots,
+                             max_seq_len=prompt_max + gen_max,
+                             chunk=chunk, hw=hw, attn_kernel=kern)
+        engine = Engine(cfg, params, options=opts)
+        engine.warmup()
+        for e in trace:
+            engine.submit(e.prompt, max_new_tokens=e.max_new_tokens,
+                          arrival_s=0.0)
+        decode_s, decode_toks = 0.0, 0
+        t0 = time.perf_counter()
+        while engine.has_work:                 # drain a burst, timing
+            s0 = time.perf_counter()           # decode steps apart
+            info = engine.step()
+            if info["kind"] == "decode":
+                decode_s += time.perf_counter() - s0
+                decode_toks += info["tokens"]
+        wall = time.perf_counter() - t0
+        outs[kern] = [r.output
+                      for r in sorted(engine.done, key=lambda r: r.rid)]
+        legs[kern] = dict(
+            _engine_stats(engine, wall),
+            token_exact=outs[kern] == refs,
+            decode_tok_s=decode_toks / max(decode_s, 1e-12),
+            decode_s=decode_s,
+            decode_traces=engine.decode_traces,
+            prefill_traces=engine.prefill_traces,
+            attn_kernel=engine.stats()["attn_kernel"])
+    return {
+        "scenario": "paged_attention",
+        "arch": cfg.name,
+        "hw": hw.name,
+        "requests": requests,
+        "slots": slots,
+        "chunk": chunk,
+        "page_size": page_size,
+        "tokens_equal": outs["pallas"] == outs["gather"],
+        "token_exact": all(l["token_exact"] for l in legs.values()),
+        "traces_equal": all(
+            legs["pallas"][k] == legs["gather"][k]
+            for k in ("decode_traces", "prefill_traces")),
+        "kernel_vs_gather_decode_tok_s": (
+            legs["pallas"]["decode_tok_s"]
+            / max(legs["gather"]["decode_tok_s"], 1e-12)),
+        "pallas": legs["pallas"],
+        "gather": legs["gather"],
+    }
+
+
+def _print_attn_kernel(res: dict) -> None:
+    print(f"\npaged_attention: {res['arch']} on {res['hw']}, "
+          f"{res['requests']} requests, {res['slots']} slots, "
+          f"page {res['page_size']}")
+    for kern in ("gather", "pallas"):
+        r = res[kern]
+        print(f"  {kern:7s}: decode {r['decode_tok_s']:8.1f} tok/s | "
+              f"peak KV {r['peak_kv_used_bytes']/2**20:.2f}MiB | "
+              f"decode traces {r['decode_traces']} | "
+              f"token-exact {r['token_exact']}")
+    print(f"  tokens pallas==gather: {res['tokens_equal']} | jit "
+          f"counts equal: {res['traces_equal']} | "
+          f"pallas/gather decode tok/s: "
+          f"{res['kernel_vs_gather_decode_tok_s']:.2f}x "
+          f"(interpret mode on CPU)")
+
+
+# ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
 
@@ -769,6 +875,12 @@ def main():
                          "(h2o-danube) serving the same burst, both "
                          "golden-verified (out defaults to "
                          "BENCH_serving_arch.json)")
+    ap.add_argument("--attn-kernel-compare", action="store_true",
+                    help="paged-attention kernel scenario: fused Pallas "
+                         "page-walking decode vs the gather baseline "
+                         "over the same burst, both golden-verified and "
+                         "token-identical (out defaults to "
+                         "BENCH_paged_attention.json)")
     ap.add_argument("--obs-overhead", action="store_true",
                     help="telemetry scenario: the same burst with "
                          "telemetry off vs span tracer + live /metrics "
@@ -783,13 +895,19 @@ def main():
                          "BENCH_serving_sharded.json by scenario)")
     args = ap.parse_args()
 
-    if sum(map(bool, (args.overload, args.devices,
-                      args.compare_arch, args.obs_overhead))) > 1:
-        ap.error("--overload, --devices, --compare-arch and "
-                 "--obs-overhead are separate scenarios")
+    if sum(map(bool, (args.overload, args.devices, args.compare_arch,
+                      args.obs_overhead,
+                      args.attn_kernel_compare))) > 1:
+        ap.error("--overload, --devices, --compare-arch, "
+                 "--obs-overhead and --attn-kernel-compare are "
+                 "separate scenarios")
     if args.obs_overhead and args.preempt is not None:
         ap.error("--obs-overhead compares telemetry legs on the default "
                  "policy; --preempt does not apply")
+    if args.attn_kernel_compare and args.preempt is not None:
+        ap.error("--attn-kernel-compare compares kernel legs on the "
+                 "default policy (the conformance matrix covers the "
+                 "storm legs); --preempt does not apply")
     if args.compare_arch and args.arch != "moe-gpt3-s":
         ap.error("--compare-arch runs its fixed arch pair "
                  f"({' vs '.join(ARCH_COMPARE)}); --arch does not apply")
@@ -813,18 +931,22 @@ def main():
         v = getattr(args, name)
         kw[name] = profile[name] if v is None else v
     if (args.overload or args.devices or args.compare_arch
-            or args.obs_overhead):
+            or args.obs_overhead or args.attn_kernel_compare):
         # these scenarios drive their own arrivals over the constrained-
         # pool sizing profile
         if args.rate is not None or args.time_scale != 1.0:
-            ap.error("--overload/--devices/--compare-arch/--obs-overhead "
-                     "drive their own arrivals; --rate/--time-scale do "
-                     "not apply")
+            ap.error("--overload/--devices/--compare-arch/--obs-overhead"
+                     "/--attn-kernel-compare drive their own arrivals; "
+                     "--rate/--time-scale do not apply")
         kw.pop("rate")
         for name, v in over["smoke" if args.smoke else "full"].items():
             if getattr(args, name) is None:
                 kw[name] = v
-    if args.obs_overhead:
+    if args.attn_kernel_compare:
+        out = args.out or "BENCH_paged_attention.json"
+        res = run_attn_kernel_compare(**kw)
+        _print_attn_kernel(res)
+    elif args.obs_overhead:
         out = args.out or "BENCH_obs_overhead.json"
         res = run_obs_overhead(**kw)
         _print_obs(res)

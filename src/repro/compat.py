@@ -71,8 +71,18 @@ def ensure_host_device_count(n: int) -> None:
         subprocess.call([sys.executable] + sys.argv, env=env))
 
 
-def shard_map(f, *, mesh, in_specs, out_specs):
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep=True):
     if hasattr(jax, "shard_map"):
+        if not check_rep:
+            # pallas_call has no replication rule, so callers closing
+            # over kernels must disable the check; the kwarg was renamed
+            # check_vma and then dropped across releases — try each
+            for kw in ("check_rep", "check_vma"):
+                try:
+                    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                         out_specs=out_specs, **{kw: False})
+                except TypeError:
+                    continue
         return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs)
     from jax.experimental.shard_map import shard_map as _shard_map

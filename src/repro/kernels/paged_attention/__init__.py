@@ -1,0 +1,7 @@
+from repro.kernels.paged_attention.ops import (paged_decode_attention,
+                                               paged_mla_decode)
+from repro.kernels.paged_attention.ref import (paged_decode_attention_ref,
+                                               paged_mla_decode_ref)
+
+__all__ = ["paged_decode_attention", "paged_mla_decode",
+           "paged_decode_attention_ref", "paged_mla_decode_ref"]

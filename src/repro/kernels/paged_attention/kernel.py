@@ -1,0 +1,180 @@
+"""Paged-attention decode Pallas TPU kernels (plain GQA + MLA latent).
+
+Grid (slots, pages); pages is the innermost (sequential on TPU) axis.
+Each step DMAs ONE physical page: the page table is a scalar-prefetch
+operand, so the KV BlockSpec index maps route block ``j`` of slot ``b``
+straight to ``page_table[b, j]`` — resident KV is never materialized
+contiguously in HBM, which is the whole point vs the
+``kv_cache.gather_pages`` baseline whose copy grows with context.
+
+Exactness contract: the per-page score tiles (flash-style QK tiling)
+are staged into a full-length VMEM scratch along with the value pages,
+and the masking / softmax / PV contraction run ONCE over the staged
+``[T]`` axis at the last page — the same ops, in the same order, as the
+gather reference (``ref.py``). A running-rescale online softmax would
+be algebraically equal but not bit-equal (``exp(a)*exp(b) !=
+exp(a+b)``); we trade its O(block) score memory for O(T)-per-slot VMEM
+staging so decode stays token-exact across the kernel/gather A/B that
+the serving conformance tier pins. Sink pages and grown-ahead pages
+(slots holding more pages than ``pages_for(lens)``) need no separate
+mask: every position ``>= lens`` is cut by the length mask, and the
+page walk only ever reads pages named by the slot's own page-table row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38   # matches repro.models.layers.attention.NEG_INF
+
+
+# ---------------------------------------------------------------------------
+# Plain GQA decode
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(pt_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                   s_scr, v_scr, *, ps: int, window: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    npages = pl.num_programs(1)
+
+    q = q_ref[0]                                       # [Kv, G, D]
+    k = k_ref[0]                                       # [ps, Kv, D]
+    s = jnp.einsum("kgd,tkd->kgt", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s_scr[:, :, pl.ds(j * ps, ps)] = s
+    v_scr[pl.ds(j * ps, ps)] = v_ref[0]
+
+    @pl.when(j == npages - 1)
+    def _finish():
+        t = npages * ps
+        cl = lens_ref[b]
+        idx = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
+        valid = idx < cl
+        if window > 0:
+            valid = valid & (idx >= cl - window)
+        s_all = jnp.where(valid[None, None, :], s_scr[...], NEG_INF)
+        m = s_all.max(axis=-1, keepdims=True)
+        p = jnp.exp(s_all - m)
+        l = p.sum(axis=-1, keepdims=True)
+        out = jnp.einsum("kgt,tkd->kgd", p / jnp.maximum(l, 1e-30),
+                         v_scr[...].astype(jnp.float32))
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q, k_pool, v_pool, page_table, lens, *,
+                                  window: int = 0,
+                                  interpret: bool = False):
+    """q: [B, Kv, G, D]; pools: [P, ps, Kv, D]; page_table: [B, NP]
+    int32; lens: [B] int32 — valid cache entries per slot INCLUDING the
+    token scattered this step. Returns [B, Kv, G, D] in q's dtype.
+    """
+    b, kv, g, d = q.shape
+    _, ps = page_table.shape[0], k_pool.shape[1]
+    npages = page_table.shape[1]
+    t = npages * ps
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # page_table, lens
+        grid=(b, npages),
+        in_specs=[
+            pl.BlockSpec((1, kv, g, d), lambda bi, j, pt, ln: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, ps, kv, d),
+                         lambda bi, j, pt, ln: (pt[bi, j], 0, 0, 0)),
+            pl.BlockSpec((1, ps, kv, d),
+                         lambda bi, j, pt, ln: (pt[bi, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, kv, g, d),
+                               lambda bi, j, pt, ln: (bi, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kv, g, t), jnp.float32),
+            pltpu.VMEM((t, kv, d), v_pool.dtype),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, ps=ps, window=window,
+                          scale=d ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        interpret=interpret,
+    )(page_table, lens, q, k_pool, v_pool)
+
+
+# ---------------------------------------------------------------------------
+# MLA latent decode (absorbed formulation)
+# ---------------------------------------------------------------------------
+
+def _mla_kernel(pt_ref, lens_ref, qa_ref, qr_ref, ckv_ref, kr_ref, o_ref,
+                s_scr, c_scr, *, ps: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    npages = pl.num_programs(1)
+
+    qa = qa_ref[0]                                     # [H, R]
+    qr = qr_ref[0]                                     # [H, E]
+    ckv = ckv_ref[0]                                   # [ps, R]
+    kr = kr_ref[0]                                     # [ps, E]
+    s = (jnp.einsum("hr,tr->ht", qa, ckv.astype(qa.dtype),
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("he,te->ht", qr, kr.astype(qr.dtype),
+                      preferred_element_type=jnp.float32))
+    s_scr[:, pl.ds(j * ps, ps)] = s
+    c_scr[pl.ds(j * ps, ps)] = ckv
+
+    @pl.when(j == npages - 1)
+    def _finish():
+        t = npages * ps
+        ln = lens_ref[b]
+        idx = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
+        # decode queries sit at absolute position ``lens``; key position
+        # t is visible iff t <= lens (the just-written token included)
+        s_all = s_scr[...] * scale
+        s_all = jnp.where((idx <= ln)[None, :], s_all, NEG_INF)
+        p = jax.nn.softmax(s_all, axis=-1)
+        o_ref[0] = jnp.einsum("ht,tr->hr", p,
+                              c_scr[...].astype(jnp.float32))
+
+
+def paged_mla_decode_kernel(q_abs, q_rope, ckv_pool, kr_pool, page_table,
+                            lens, *, scale: float,
+                            interpret: bool = False):
+    """q_abs: [B, H, R] (latent-absorbed); q_rope: [B, H, E]; ckv_pool:
+    [P, ps, R]; kr_pool: [P, ps, E]; lens: [B] int32 — the slot's
+    absolute decode position (visible keys are ``t <= lens``). Returns
+    the latent context [B, H, R] float32 (``c_kv`` doubles as K and V,
+    so the pages are staged once).
+    """
+    b, h, r = q_abs.shape
+    e = q_rope.shape[-1]
+    ps = ckv_pool.shape[1]
+    npages = page_table.shape[1]
+    t = npages * ps
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # page_table, lens
+        grid=(b, npages),
+        in_specs=[
+            pl.BlockSpec((1, h, r), lambda bi, j, pt, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, h, e), lambda bi, j, pt, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, ps, r),
+                         lambda bi, j, pt, ln: (pt[bi, j], 0, 0)),
+            pl.BlockSpec((1, ps, e),
+                         lambda bi, j, pt, ln: (pt[bi, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, r),
+                               lambda bi, j, pt, ln: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, t), jnp.float32),
+            pltpu.VMEM((t, r), ckv_pool.dtype),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_mla_kernel, ps=ps, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
+        interpret=interpret,
+    )(page_table, lens, q_abs, q_rope, ckv_pool, kr_pool)

@@ -1,0 +1,67 @@
+"""Pure-lax paged-decode references (CPU oracle for the Pallas kernels).
+
+These restate the legacy gather path — ``kv_cache.gather_pages``
+followed by ``attention.decode_attention`` (plain) or the absorbed MLA
+einsums — as self-contained functions on the pool/page-table layout, so
+the exactness tier can pin kernel == ref == gather bitwise on CPU
+without importing the model layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38   # matches repro.models.layers.attention.NEG_INF
+
+
+def _gather(pool, page_table):
+    """[P, ps, ...] x [B, NP] -> [B, NP*ps, ...] (pool[page_table])."""
+    b, npages = page_table.shape
+    ps = pool.shape[1]
+    return pool[page_table].reshape((b, npages * ps) + pool.shape[2:])
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, page_table, lens, *,
+                               window: int = 0):
+    """q: [B, Kv, G, D]; pools: [P, ps, Kv, D]; lens: [B] — valid cache
+    entries per slot (including the token written this step). Returns
+    [B, Kv, G, D] in q's dtype."""
+    b, kv_heads, g, d = q.shape
+    k = _gather(k_pool, page_table)                  # [B, T, Kv, D]
+    v = _gather(v_pool, page_table)
+    t = k.shape[1]
+    s_ = jnp.einsum("bkgd,btkd->bkgt", q, k,
+                    preferred_element_type=jnp.float32) * (d ** -0.5)
+    cl = jnp.atleast_1d(jnp.asarray(lens))[:, None]  # [B, 1]
+    idx = jnp.arange(t)[None, :]
+    valid = idx < cl
+    if window > 0:
+        valid = valid & (idx >= cl - window)
+    s_ = jnp.where(valid[:, None, None, :], s_, NEG_INF)
+    m = s_.max(axis=-1, keepdims=True)
+    p = jnp.exp(s_ - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgt,btkd->bkgd", p / jnp.maximum(l, 1e-30),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def paged_mla_decode_ref(q_abs, q_rope, ckv_pool, kr_pool, page_table,
+                         lens, *, scale: float):
+    """q_abs: [B, H, R]; q_rope: [B, H, E]; ckv_pool: [P, ps, R];
+    kr_pool: [P, ps, E]; lens: [B] — the slot's absolute decode position
+    (keys at ``t <= lens`` are visible). Returns the latent context
+    [B, H, R] float32."""
+    dt = q_abs.dtype
+    ckv = _gather(ckv_pool, page_table)              # [B, T, R]
+    kr = _gather(kr_pool, page_table)                # [B, T, E]
+    t = ckv.shape[1]
+    s_ = (jnp.einsum("bhr,btr->bht", q_abs, ckv.astype(dt),
+                     preferred_element_type=jnp.float32)
+          + jnp.einsum("bhe,bte->bht", q_rope, kr.astype(dt),
+                       preferred_element_type=jnp.float32))
+    s_ = s_ * scale
+    mask = jnp.arange(t)[None, None, :] <= lens[:, None, None]
+    s_ = jnp.where(mask, s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    return jnp.einsum("bht,btr->bhr", p, ckv.astype(jnp.float32))

@@ -20,7 +20,9 @@ Two paths share one CLI:
   ``--devices N`` serves over an N-device dp x ep mesh (EP-sharded
   prefill, replicated psum decode — see docs/distributed.md); on CPU
   the launcher re-execs itself with virtual host devices when fewer
-  than N are attached.
+  than N are attached. ``--attn-kernel`` selects the paged-decode
+  attention path (fused Pallas page walk vs the gather baseline —
+  bit-identical tokens, see docs/serving.md).
 
 * default: the legacy fixed-batch loop (kept as the golden reference the
   engine is tested against), now with per-request ``max_new_tokens`` and
@@ -121,7 +123,8 @@ def engine_loop(args, cfg, hw):
                          chunk=args.chunk, hw=hw, preempt=args.preempt,
                          num_pages=args.num_pages, measure=args.measure,
                          devices=args.devices,
-                         kv_sharding=args.kv_sharding, obs=obs)
+                         kv_sharding=args.kv_sharding,
+                         attn_kernel=args.attn_kernel, obs=obs)
     sampling = None
     if args.temperature > 0:
         sampling = SamplingParams(temperature=args.temperature,
@@ -232,6 +235,14 @@ def main():
                          "axis: per-device KV drops dp-fold, per-shard "
                          "free lists, sticky least-loaded placement); "
                          "'dp' needs --devices > 1")
+    ap.add_argument("--attn-kernel", default="auto",
+                    choices=["auto", "pallas", "gather"],
+                    help="engine: paged-decode attention path — 'pallas' "
+                         "walks the page table inside a fused kernel "
+                         "(shard-local page reads under --kv-sharding "
+                         "dp), 'gather' materializes pages first (the "
+                         "exactness baseline; both emit bit-identical "
+                         "tokens), 'auto' picks pallas on TPU")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="engine: sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -264,6 +275,9 @@ def main():
     if (args.metrics_port >= 0 or args.trace_out) and not args.engine:
         ap.error("--metrics-port / --trace-out instrument the "
                  "continuous-batching engine; add --engine")
+    if args.attn_kernel != "auto" and not args.engine:
+        ap.error("--attn-kernel selects the engine's paged-decode "
+                 "attention path; add --engine")
     hw = resolve_hw(args.hw)
     print(f"hw spec: {hw.name}")
     cfg = get_config(args.arch).reduced()

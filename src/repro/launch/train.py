@@ -43,6 +43,9 @@ def main():
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="run expert FFNs through the fused Pallas "
+                         "grouped-FFN kernel (pure-jax fallback off-TPU)")
     ap.add_argument("--adaptive", action="store_true",
                     help="online (n, strategy) controller instead of a "
                          "one-shot offline resolve")
@@ -105,7 +108,8 @@ def main():
     ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
     opts = TrainOptions(lr=args.lr, warmup=min(20, args.steps // 5),
                         total_steps=args.steps,
-                        compress_grads=args.compress_grads)
+                        compress_grads=args.compress_grads,
+                        use_kernel=args.use_kernel)
 
     g_step = obs.registry.gauge("repro_train_step", "last training step")
     g_loss = obs.registry.gauge("repro_train_loss", "last training loss")

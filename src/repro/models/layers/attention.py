@@ -357,6 +357,14 @@ def _apply_paged(params, x, *, cfg: ArchConfig, positions, is_global: bool,
     plain masking (no ring buffers) — paged pools always hold full
     positions.
 
+    ``cache["attn_kernel"]`` (a trace-static string the engine threads
+    through ``decode_step_paged``) picks the decode score path:
+    ``"pallas"`` runs the fused page-walking kernel in
+    ``repro.kernels.paged_attention`` directly on the pools (no
+    materialized gather; bit-identical outputs), anything else keeps the
+    ``gather_pages`` baseline. Prefill always gathers — the kernel is
+    single-query.
+
     Mesh-sharded serving (``dist``): the pools are replicated, so this
     layer's math is device-local; the only hint GSPMD needs is to keep
     the decode batch sharded over the dp axes (dropped automatically
@@ -384,6 +392,15 @@ def _apply_paged(params, x, *, cfg: ArchConfig, positions, is_global: bool,
     v_pool = KV.scatter_pages(cache["v_pool"], cache["page_table"],
                               positions, v, valid, sink=sink)
     new_cache = {"k_pool": k_pool, "v_pool": v_pool}
+
+    if s == 1 and cache.get("attn_kernel") == "pallas":
+        from repro.kernels.paged_attention import paged_decode_attention
+        out = paged_decode_attention(
+            q, k_pool, v_pool, cache["page_table"], cache["lens"] + 1,
+            window=window, dist=dist,
+            kv_sharded=bool(cache.get("kv_sharded")))
+        out = jnp.einsum("bshe,hed->bsd", out, params["w_o"].astype(x.dtype))
+        return out, new_cache
 
     kf = KV.gather_pages(k_pool, cache["page_table"])   # [B, NP*ps, Kv, D]
     vf = KV.gather_pages(v_pool, cache["page_table"])
@@ -451,20 +468,30 @@ def _apply_mla_paged(params, x, *, cfg: ArchConfig, positions, mode: str,
                                positions, k_rope, valid, sink=sink)
     new_cache = {"ckv_pool": ckv_pool, "kr_pool": kr_pool}
 
-    ckv_all = KV.gather_pages(ckv_pool, cache["page_table"])  # [B, T, r]
-    kr_all = KV.gather_pages(kr_pool, cache["page_table"])    # [B, T, e]
     q_abs = jnp.einsum("bshe,rhe->bshr", q_nope,
                        params["w_uk"].astype(dt))
-    s_ = (jnp.einsum("bshr,btr->bhst", q_abs, ckv_all.astype(dt),
-                     preferred_element_type=jnp.float32)
-          + jnp.einsum("bshe,bte->bhst", q_rope, kr_all.astype(dt),
-                       preferred_element_type=jnp.float32))
-    s_ = s_ * ((m.nope_head_dim + m.rope_head_dim) ** -0.5)
-    t = ckv_all.shape[1]
-    mask = jnp.arange(t)[None, None, :] <= positions[:, :, None]  # [B,S,T]
-    s_ = jnp.where(mask[:, None, :, :], s_, NEG_INF)
-    p = jax.nn.softmax(s_, axis=-1)
-    ctx = jnp.einsum("bhst,btr->bshr", p, ckv_all.astype(jnp.float32))
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    if s == 1 and cache.get("attn_kernel") == "pallas":
+        # fused page walk over the latent pools (bit-identical to the
+        # gathered einsums below); decode positions == lens
+        from repro.kernels.paged_attention import paged_mla_decode
+        ctx = paged_mla_decode(
+            q_abs, q_rope, ckv_pool, kr_pool, cache["page_table"],
+            cache["lens"], scale=scale, dist=dist,
+            kv_sharded=bool(cache.get("kv_sharded")))
+    else:
+        ckv_all = KV.gather_pages(ckv_pool, cache["page_table"])  # [B,T,r]
+        kr_all = KV.gather_pages(kr_pool, cache["page_table"])    # [B,T,e]
+        s_ = (jnp.einsum("bshr,btr->bhst", q_abs, ckv_all.astype(dt),
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshe,bte->bhst", q_rope, kr_all.astype(dt),
+                           preferred_element_type=jnp.float32))
+        s_ = s_ * scale
+        t = ckv_all.shape[1]
+        mask = jnp.arange(t)[None, None, :] <= positions[:, :, None]
+        s_ = jnp.where(mask[:, None, :, :], s_, NEG_INF)
+        p = jax.nn.softmax(s_, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", p, ckv_all.astype(jnp.float32))
     out = jnp.einsum("bshr,rhe->bshe", ctx.astype(dt),
                      params["w_uv"].astype(dt))
     out = jnp.einsum("bshe,hed->bsd", out, params["w_o"].astype(dt))

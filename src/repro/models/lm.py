@@ -112,7 +112,12 @@ def forward(params, batch, cfg: ArchConfig, *, mode: str = "train",
     roles = cfg.layer_roles()
     shared_kv = ({"page_table": cache["page_table"], "lens": cache["lens"],
                   "write_valid": cache.get("write_valid"),
-                  "write_sink": cache.get("write_sink")}
+                  "write_sink": cache.get("write_sink"),
+                  # trace-static decode attention selector (str) + pool
+                  # layout flag (bool) — merged into per-layer caches as
+                  # plain Python values, invisible to the scanned pytree
+                  "attn_kernel": cache.get("attn_kernel"),
+                  "kv_sharded": cache.get("kv_sharded")}
                  if paged else None)
     # serving caches for recurrent mixers are slot-indexed [slots, ...]
     # state (no paging); chunked prefill (B == 1) works on one slot's
@@ -285,17 +290,22 @@ def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int,
 
 def decode_step_paged(params, pools, page_table, lens, tokens,
                       cfg: ArchConfig, active=None, dist=None,
-                      write_sink=None):
+                      write_sink=None, attn_kernel=None,
+                      kv_sharded=False):
     """One decode step over the whole continuous batch.
 
     pools: paged cache tree; page_table ``[slots, NP]``; lens ``[slots]``
     (tokens cached per slot); tokens ``[slots, 1]``; ``active`` masks
     finished / mid-prefill slots so their KV writes land in the reserved
     sink page — page 0, or per-slot ``write_sink`` ``[slots]`` when each
-    DP shard reserves its own sink. Returns (last-token logits
+    DP shard reserves its own sink. ``attn_kernel`` (trace-static:
+    ``"pallas"`` or ``"gather"``/None) selects the fused paged-attention
+    kernel vs the gather baseline; ``kv_sharded`` tells the kernel the
+    pools are page-sharded over the dp axis. Returns (last-token logits
     ``[slots, vocab]``, new pools).
     """
-    cache = {"layers": pools, "page_table": page_table, "lens": lens}
+    cache = {"layers": pools, "page_table": page_table, "lens": lens,
+             "attn_kernel": attn_kernel, "kv_sharded": kv_sharded}
     if active is not None:
         cache["write_valid"] = active[:, None]
     if write_sink is not None:

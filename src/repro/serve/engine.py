@@ -96,6 +96,7 @@ log = logging.getLogger("repro.serve")
 __all__ = ["Engine", "EngineOptions"]
 
 PREEMPT_POLICIES = ("auto", "recompute", "offload", "never")
+ATTN_KERNELS = ("auto", "pallas", "gather")
 
 
 @dataclasses.dataclass
@@ -120,6 +121,15 @@ class EngineOptions:
     measure_steps: int = 2             # wallclock reps per candidate
     measure_fn: Optional[Callable] = None
     preempt: str = "auto"              # auto | recompute | offload | never
+    attn_kernel: str = "auto"          # decode attention over the paged
+                                       # pools: "pallas" = fused page-walk
+                                       # kernel (repro.kernels.
+                                       # paged_attention), "gather" =
+                                       # gather_pages baseline, "auto" =
+                                       # pallas on TPU / gather elsewhere
+                                       # (CPU runs the kernel in interpret
+                                       # mode — exact but slow). Both
+                                       # paths are bit-identical.
     allow_offload: Optional[bool] = None   # None = host_offload_supported
     preempt_mfu: float = 0.5           # assumed MFU of re-prefill (cost)
     storm_every: int = 0               # N>0: force-preempt a victim every
@@ -150,6 +160,12 @@ class Engine:
         self.obs = opts.obs if opts.obs is not None else Recorder()
         assert opts.preempt in PREEMPT_POLICIES, opts.preempt
         assert opts.kv_sharding in KV_SHARDINGS, opts.kv_sharding
+        assert opts.attn_kernel in ATTN_KERNELS, opts.attn_kernel
+        self._attn_kernel = opts.attn_kernel
+        if self._attn_kernel == "auto":
+            self._attn_kernel = ("pallas"
+                                 if jax.default_backend() == "tpu"
+                                 else "gather")
         if opts.adaptive:
             cfg = force_adaptive(cfg)
         self.cfg = cfg
@@ -351,7 +367,10 @@ class Engine:
         self.obs.tracer.instant("jit.trace", args={"body": "decode"})
         logits, new_pools = self.model.decode_step_paged(
             params, pools, page_table, lens, tokens, self.cfg,
-            active=active, dist=self.dist, write_sink=sinks)
+            active=active, dist=self.dist, write_sink=sinks,
+            attn_kernel=self._attn_kernel,
+            kv_sharded=(self.opts.kv_sharding == "dp"
+                        and self.kv.n_shards > 1))
         return sample_tokens(logits, temp, top_k, top_p, seed, pos), \
             self._pin_pools(new_pools)
 
@@ -733,6 +752,7 @@ class Engine:
             "dp_size": 1 if self.dist is None else self.dist.dp_size,
             "kv_sharding": self.opts.kv_sharding,
             "kv_shards": self.kv.n_shards,
+            "attn_kernel": self._attn_kernel,
             "engine_steps": self.step_count,
             "prefill_compiles": self.prefill_rejits,
             "decode_traces": self.decode_traces,

@@ -1,0 +1,103 @@
+"""Pins tools/check_docs.py command extraction.
+
+Two behaviors are load-bearing for the docs gate:
+
+1. **Fence pairing.** The fence regex must consume EVERY opener,
+   whatever its info string. The old pattern only matched
+   ``bash``/``sh``/``console``/anonymous openers, so a ```` ```python ````
+   block's opener went unmatched and its CLOSER re-opened as an
+   anonymous fence — swallowing the prose after the block (phantom
+   commands from example text, real commands in the next fence shifted
+   out of scanning). Non-shell blocks are matched, then skipped.
+
+2. **Line-1-only flags.** Flags are extracted from the first physical
+   line of a command; a trailing ``\\`` is stripped but continuation
+   lines are NOT joined. Docs must keep load-bearing flags on line 1
+   (that is what REQUIRED_FLAGS cross-checks), and the gate must not
+   invent flags from unrelated following lines.
+"""
+import importlib.util
+import os
+import textwrap
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_docs", os.path.join(os.path.dirname(__file__), os.pardir,
+                               "tools", "check_docs.py"))
+check_docs = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_docs)
+extract_commands = check_docs.extract_commands
+
+
+def test_python_fence_does_not_swallow_following_prose():
+    """A ```python block must pair with its own closer: the prose after
+    it is NOT inside a fence (no phantom commands extracted from it)
+    and the next real shell fence IS scanned."""
+    text = textwrap.dedent('''\
+        ```python
+        # example snippet, not a command
+        train(cfg)
+        ```
+
+        Prose mentioning python tools/not_a_command.py --bogus inline.
+
+        ```bash
+        python benchmarks/serving.py --smoke
+        ```
+        ''')
+    cmds = extract_commands(text)
+    assert cmds == [("benchmarks/serving.py", ["--smoke"])]
+
+
+def test_non_shell_blocks_are_skipped_entirely():
+    """Command-looking lines inside a ```python (or any non-shell) block
+    are examples, not documented commands."""
+    text = textwrap.dedent('''\
+        ```python
+        subprocess.run(["python", "benchmarks/serving.py", "--overload"])
+        ```
+        ```text
+        python tools/check_docs.py --root .
+        ```
+        ''')
+    assert extract_commands(text) == []
+
+
+def test_shell_info_strings_are_scanned():
+    text = "".join(
+        f"```{info}\npython -m repro.launch.serve --devices 8\n```\n"
+        for info in ("", "bash", "sh", "console"))
+    cmds = extract_commands(text)
+    assert cmds == [("-m repro.launch.serve", ["--devices"])] * 4
+
+
+def test_flags_extracted_from_first_line_only():
+    """Continuation lines are not joined: line 1's flags are extracted
+    (trailing backslash stripped), later lines contribute nothing."""
+    text = textwrap.dedent('''\
+        ```bash
+        python benchmarks/serving.py --smoke --devices 8 \\
+            --kv-sharding dp --overload
+        ```
+        ''')
+    cmds = extract_commands(text)
+    assert cmds == [("benchmarks/serving.py", ["--smoke", "--devices"])]
+
+
+def test_required_flags_cover_the_new_kernel_surface():
+    """The PR 8 flags are pinned: dropping either from its CLI or from
+    the docs fails the gate."""
+    assert "--attn-kernel-compare" in \
+        check_docs.REQUIRED_FLAGS["benchmarks/serving.py"]
+    assert "--attn-kernel" in \
+        check_docs.REQUIRED_FLAGS["-m repro.launch.serve"]
+
+
+def test_docs_tree_extracts_cleanly():
+    """Smoke the real docs tree through the fixed extractor: every file
+    parses and the pinned targets are present in the documented set."""
+    root = os.path.join(os.path.dirname(__file__), os.pardir)
+    targets = set()
+    for f in check_docs.md_files(root):
+        targets |= {t for t, _ in extract_commands(open(f).read())}
+    for required in check_docs.REQUIRED_FLAGS:
+        assert required in targets, required

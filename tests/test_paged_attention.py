@@ -1,0 +1,241 @@
+"""Paged-attention decode kernel exactness tier.
+
+The fused Pallas page-walking kernel (``repro.kernels.paged_attention``,
+run in interpret mode on CPU), the pure-lax ``ref.py`` oracle and the
+legacy ``gather_pages`` + ``decode_attention`` path must agree to
+``atol=0`` — bit-identical outputs — on random page tables, ragged
+lens, garbage-filled sink pages and grown-ahead slots (the PR 3 gotcha:
+a slot holding more pages than ``pages_for(lens)`` after on-demand
+decode growth). Token-exact serving A/B (``EngineOptions.attn_kernel``)
+reduces to exactly this invariant.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import kv_cache as KV
+from repro.models.layers.attention import decode_attention
+from repro.kernels.paged_attention import (
+    paged_decode_attention, paged_decode_attention_ref,
+    paged_mla_decode, paged_mla_decode_ref)
+from repro.kernels.paged_attention.ref import NEG_INF as REF_NEG_INF
+from repro.models.layers.attention import NEG_INF as ATTN_NEG_INF
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                  # optional dep: deterministic tests
+    HAVE_HYPOTHESIS = False          # still run without it
+
+PS = 4          # page size
+NP = 5          # page-table width (pages per slot)
+GARBAGE = 3.0e4  # sink-page fill; finite but loud if it ever leaks
+
+
+def _bits_equal(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return (a.shape == b.shape and a.dtype == b.dtype
+            and a.tobytes() == b.tobytes())
+
+
+def _paged_setup(rng, lens, extra_pages, *, payload, dtype):
+    """Build pools + page tables the way the serving allocator does:
+    page 0 is the sink (filled with garbage — masked writes land there),
+    each slot owns ``pages_for(len) + extra`` distinct pages, and
+    unallocated page-table entries point at the sink."""
+    b = len(lens)
+    pools = []
+    num_pages = 1 + sum(-(-l // PS) + e for l, e in zip(lens, extra_pages))
+    for shape in payload:
+        pool = rng.standard_normal((num_pages, PS) + shape)
+        pool[0] = GARBAGE                       # sink page
+        pools.append(jnp.asarray(pool, dtype))
+    pt = np.zeros((b, NP), np.int32)            # sink-filled rows
+    nxt = 1
+    for i, (l, e) in enumerate(zip(lens, extra_pages)):
+        n = -(-l // PS) + e
+        assert n <= NP
+        pt[i, :n] = np.arange(nxt, nxt + n)
+        nxt += n
+    return pools, jnp.asarray(pt), jnp.asarray(lens, jnp.int32)
+
+
+def _three_way_plain(rng, lens, extra_pages, *, kv_heads=2, group=3,
+                     d=8, window=0, dtype=jnp.float32):
+    (k_pool, v_pool), pt, ln = _paged_setup(
+        rng, lens, extra_pages, payload=[(kv_heads, d)] * 2, dtype=dtype)
+    b = len(lens)
+    q = jnp.asarray(rng.standard_normal((b, 1, kv_heads * group, d)),
+                    dtype)
+    legacy = decode_attention(q, KV.gather_pages(k_pool, pt),
+                              KV.gather_pages(v_pool, pt), ln,
+                              window=window, ring=False)
+    ref = paged_decode_attention_ref(
+        q.reshape(b, kv_heads, group, d), k_pool, v_pool, pt, ln,
+        window=window).reshape(b, 1, kv_heads * group, d)
+    kernel = paged_decode_attention(q, k_pool, v_pool, pt, ln,
+                                    window=window)
+    assert _bits_equal(legacy, ref), "ref diverged from gather path"
+    assert _bits_equal(legacy, kernel), "kernel diverged from gather path"
+    assert np.isfinite(np.asarray(kernel, np.float32)).all()
+
+
+def _three_way_mla(rng, lens, extra_pages, *, h=3, r=8, e=4,
+                   dtype=jnp.float32):
+    (ckv_pool, kr_pool), pt, ln = _paged_setup(
+        rng, lens, extra_pages, payload=[(), ()], dtype=dtype)
+    # latent pools are [P, ps, R] / [P, ps, E]
+    ckv_pool = ckv_pool[..., None] * jnp.asarray(
+        rng.standard_normal((r,)), dtype)
+    kr_pool = kr_pool[..., None] * jnp.asarray(
+        rng.standard_normal((e,)), dtype)
+    b = len(lens)
+    q_abs = jnp.asarray(rng.standard_normal((b, 1, h, r)), dtype)
+    q_rope = jnp.asarray(rng.standard_normal((b, 1, h, e)), dtype)
+    scale = (r + e) ** -0.5
+    # legacy gather math, verbatim from attention._apply_mla_paged
+    dt = q_abs.dtype
+    ckv_all = KV.gather_pages(ckv_pool, pt)
+    kr_all = KV.gather_pages(kr_pool, pt)
+    s_ = (jnp.einsum("bshr,btr->bhst", q_abs, ckv_all.astype(dt),
+                     preferred_element_type=jnp.float32)
+          + jnp.einsum("bshe,bte->bhst", q_rope, kr_all.astype(dt),
+                       preferred_element_type=jnp.float32)) * scale
+    t = ckv_all.shape[1]
+    mask = jnp.arange(t)[None, None, :] <= ln[:, None, None, None][:, 0]
+    legacy = jnp.einsum("bhst,btr->bshr",
+                        jax.nn.softmax(jnp.where(mask[:, None], s_,
+                                                 ATTN_NEG_INF), axis=-1),
+                        ckv_all.astype(jnp.float32))
+    ref = paged_mla_decode_ref(q_abs[:, 0], q_rope[:, 0], ckv_pool,
+                               kr_pool, pt, ln, scale=scale)[:, None]
+    kernel = paged_mla_decode(q_abs, q_rope, ckv_pool, kr_pool, pt, ln,
+                              scale=scale)
+    assert _bits_equal(legacy, ref), "MLA ref diverged from gather path"
+    assert _bits_equal(legacy, kernel), \
+        "MLA kernel diverged from gather path"
+
+
+# ---------------------------------------------------------------------------
+# Deterministic exactness sweeps (always run; no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 6])
+def test_three_way_exactness_plain(dtype, window):
+    """kernel == ref == gather bitwise: ragged lens (1 token up to the
+    full table), sink-filled unallocated entries, garbage sink page."""
+    rng = np.random.default_rng(0)
+    _three_way_plain(rng, lens=[1, NP * PS, 7, 13],
+                     extra_pages=[0, 0, 0, 0], window=window, dtype=dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_three_way_exactness_mla(dtype):
+    """Latent (deepseek MLA) kernel == ref == absorbed gather einsums,
+    bitwise — including lens=0 (sole visible key is this step's)."""
+    rng = np.random.default_rng(1)
+    _three_way_mla(rng, lens=[0, NP * PS - 1, 6, 12],
+                   extra_pages=[0, 0, 0, 0], dtype=dtype)
+
+
+def test_grown_ahead_slots_pr3_gotcha():
+    """The PR 3 gotcha shape: a slot holding MORE pages than
+    ``pages_for(lens)`` (decode growth allocates the page before the
+    length catches up). The extra pages hold stale pool garbage that
+    must never reach the output."""
+    rng = np.random.default_rng(2)
+    _three_way_plain(rng, lens=[3, 6, 9], extra_pages=[2, 1, 2])
+    _three_way_mla(rng, lens=[3, 6, 9], extra_pages=[2, 1, 2])
+
+
+def test_ref_neg_inf_matches_attention():
+    """The triad's mask constant must track the layer's NEG_INF — a
+    drift would silently break bit-exactness for fully-masked rows."""
+    assert REF_NEG_INF == ATTN_NEG_INF
+
+
+def test_kernel_rejects_multi_query():
+    rng = np.random.default_rng(3)
+    (k_pool, v_pool), pt, ln = _paged_setup(
+        rng, [4], [0], payload=[(2, 8)] * 2, dtype=jnp.float32)
+    q = jnp.zeros((1, 2, 4, 8), jnp.float32)    # S=2: prefill shape
+    with pytest.raises(AssertionError):
+        paged_decode_attention(q, k_pool, v_pool, pt, ln)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level A/B: attn_kernel="pallas" tokens == attn_kernel="gather"
+# ---------------------------------------------------------------------------
+
+def test_engine_attn_kernel_token_exact():
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serve import Engine, EngineOptions
+
+    cfg = get_config("moe-gpt3-s").reduced()
+    cfg = dataclasses.replace(
+        cfg, compute_dtype="float32",
+        moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.Generator(np.random.Philox(key=7))
+    prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in (13, 7)]
+    outs, stats = {}, {}
+    for kern in ("gather", "pallas"):
+        eng = Engine(cfg, params, options=EngineOptions(
+            page_size=4, max_slots=2, max_seq_len=64, chunk=16,
+            min_bucket=8, attn_kernel=kern))
+        for p in prompts:
+            eng.submit(p, max_new_tokens=5, arrival_s=0.0)
+        eng.run_until_idle()
+        outs[kern] = [r.output
+                      for r in sorted(eng.done, key=lambda r: r.rid)]
+        stats[kern] = eng.stats()
+    assert outs["pallas"] == outs["gather"]
+    assert stats["pallas"]["attn_kernel"] == "pallas"
+    assert stats["gather"]["attn_kernel"] == "gather"
+    # the kernel is trace-static: one compiled decode program per engine
+    assert stats["pallas"]["decode_traces"] \
+        == stats["gather"]["decode_traces"] == 1
+
+
+def test_engine_attn_kernel_auto_resolution():
+    from repro.serve.engine import ATTN_KERNELS
+    assert ATTN_KERNELS == ("auto", "pallas", "gather")
+    # on CPU, auto must resolve to the gather baseline (interpret-mode
+    # pallas is an exactness oracle, not a fast path)
+    assert jax.default_backend() == "cpu"
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property: exactness over random tables / lens / dtypes
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 10_000),
+           lens=st.lists(st.integers(1, NP * PS), min_size=2, max_size=4),
+           window=st.sampled_from([0, 3, 7]),
+           bf16=st.booleans())
+    @settings(max_examples=25, deadline=None)
+    def test_paged_attention_property(seed, lens, window, bf16):
+        """Any ragged batch, any window, any dtype: the three paths are
+        bit-identical (grown-ahead pages included when they fit)."""
+        rng = np.random.default_rng(seed)
+        extra = [min(int(rng.integers(0, 3)), NP - (-(-l // PS)))
+                 for l in lens]
+        _three_way_plain(rng, lens, extra, window=window,
+                         dtype=jnp.bfloat16 if bf16 else jnp.float32)
+
+    @given(seed=st.integers(0, 10_000),
+           lens=st.lists(st.integers(0, NP * PS - 1),
+                         min_size=2, max_size=4))
+    @settings(max_examples=15, deadline=None)
+    def test_paged_mla_property(seed, lens):
+        rng = np.random.default_rng(seed)
+        extra = [min(int(rng.integers(0, 3)), NP - (-(-(l + 1) // PS)))
+                 for l in lens]
+        _three_way_mla(rng, lens, extra)

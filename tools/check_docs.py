@@ -30,7 +30,14 @@ import re
 import subprocess
 import sys
 
-FENCE = re.compile(r"```(?:bash|sh|console)?\n(.*?)```", re.DOTALL)
+# Match EVERY fence opener (any info string) so a ```python block is
+# consumed as one block rather than leaving its closer to re-open an
+# anonymous fence that swallows the following prose; extract_commands
+# then scans only shell-ish blocks. Flags are read from the first
+# physical line of a command only (trailing backslashes are stripped,
+# continuation lines are NOT joined) — pinned by tests/test_check_docs.py.
+FENCE = re.compile(r"```([^\n]*)\n(.*?)```", re.DOTALL)
+SHELL_INFOS = ("", "bash", "sh", "console")
 CMD = re.compile(r"python\s+(-m\s+[\w.]+|\S+\.py)((?:\s+\S+)*)")
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
@@ -40,9 +47,10 @@ REQUIRED_DOCS = ("README.md", "docs/architecture.md", "docs/serving.md",
 REQUIRED_FLAGS = {
     "benchmarks/serving.py": ("--devices", "--smoke", "--overload",
                               "--kv-sharding", "--compare-arch",
-                              "--obs-overhead"),
+                              "--obs-overhead", "--attn-kernel-compare"),
     "-m repro.launch.serve": ("--devices", "--engine", "--kv-sharding",
-                              "--arch", "--metrics-port", "--trace-out"),
+                              "--arch", "--metrics-port", "--trace-out",
+                              "--attn-kernel"),
 }
 
 
@@ -59,7 +67,9 @@ def md_files(root: str):
 def extract_commands(text: str):
     """(target, flags) pairs from fenced code blocks."""
     cmds = []
-    for block in FENCE.findall(text):
+    for info, block in FENCE.findall(text):
+        if info.strip() not in SHELL_INFOS:
+            continue                  # ```python etc. are not commands
         for line in block.splitlines():
             line = line.strip().rstrip("\\").strip()
             m = CMD.search(line)

@@ -1,10 +1,11 @@
 #!/usr/bin/env python
-"""Measure line coverage of ``src/repro/serve`` + ``src/repro/obs``
-with the stdlib only.
+"""Measure line coverage of ``src/repro/serve`` + ``src/repro/obs`` +
+``src/repro/kernels/paged_attention`` with the stdlib only.
 
-CI enforces a pytest-cov line-coverage floor on the serving and
-telemetry packages (``--cov=repro.serve --cov=repro.obs
---cov-fail-under=N`` in the tier-1 job). This tool
+CI enforces a pytest-cov line-coverage floor on the serving stack
+(``--cov=repro.serve --cov=repro.obs
+--cov=repro.kernels.paged_attention --cov-fail-under=N`` in the tier-1
+job). This tool
 reproduces that measurement without pytest-cov — containers that cannot
 install it can still re-derive the floor before bumping it:
 
@@ -27,12 +28,15 @@ import threading
 import types
 
 PACKAGE_RELS = (os.path.join("src", "repro", "serve"),
-                os.path.join("src", "repro", "obs"))
+                os.path.join("src", "repro", "obs"),
+                os.path.join("src", "repro", "kernels",
+                             "paged_attention"))
 
 DEFAULT_TESTS = ["tests/test_serving.py", "tests/test_preemption.py",
                  "tests/test_sampling.py", "tests/test_kv_sharding.py",
                  "tests/test_serving_sharded.py",
                  "tests/test_state_cache.py", "tests/test_obs.py",
+                 "tests/test_paged_attention.py",
                  "-m", "not slow", "-q"]
 
 
