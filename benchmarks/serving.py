@@ -79,6 +79,19 @@ compiles) — see ``docs/serving.md``:
     PYTHONPATH=src python benchmarks/serving.py --attn-kernel-compare \
         --smoke
 
+``--prefix-cache-compare`` runs the prefix-cache scenario (default out:
+``BENCH_prefix_cache.json``): a multi-turn chat trace — every request
+shares one system prompt, and each conversation's second turn
+re-submits its full first-turn history plus a short follow-up — served
+once with ``--prefix-cache on`` and once ``off``. Both legs are checked
+token-identical; the report is the warm-turn page hit rate (skipped
+prompt tokens / warm prompt tokens), warm-turn TTFT p50/p99 per leg,
+CoW copy counts and the effective-capacity ratio (peak logical slot
+pages per distinct physical page) — see ``docs/serving.md``:
+
+    PYTHONPATH=src python benchmarks/serving.py --prefix-cache-compare \
+        --smoke
+
 Every scenario's JSON also embeds a full ``repro.obs`` registry
 snapshot under ``"telemetry"``.
 """
@@ -781,6 +794,150 @@ def _print_attn_kernel(res: dict) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Prefix-cache scenario (--prefix-cache-compare)
+# ---------------------------------------------------------------------------
+
+def run_prefix_compare(*, arch: str, requests: int, slots: int,
+                       chunk: int, page_size: int, prompt_max: int,
+                       gen_max: int, seed: int, hw_name: str) -> dict:
+    """Cross-request prefix cache on vs off over a chat-shaped trace:
+    every request shares one system prompt, and after the first turn
+    drains each conversation re-submits its full history plus a short
+    follow-up (the multi-turn pattern the cache exists for). Both legs
+    replay the identical trace and must emit bit-identical tokens; the
+    perf split reported is the warm-turn page hit rate, warm-turn TTFT
+    p50/p99 (the hit skips the history's prefill), CoW copies, and the
+    effective-capacity ratio (peak logical pages bound across slots /
+    distinct physical pages — shared pages count once, so the same pool
+    holds more conversations)."""
+    import time
+
+    import numpy as np
+
+    cfg = _golden_cfg(arch)
+    hw = resolve_hw(hw_name)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.Generator(np.random.Philox(key=seed))
+    sys_len = max(3 * page_size, (2 * prompt_max) // 3)
+    system = rng.integers(0, cfg.vocab_size, size=sys_len, dtype=np.int32)
+    user_max = max(3, prompt_max - sys_len)
+    turn1 = [np.concatenate([system, rng.integers(
+        0, cfg.vocab_size, size=int(rng.integers(2, user_max + 1)),
+        dtype=np.int32)]) for _ in range(requests)]
+    gens = [int(rng.integers(max(2, gen_max // 2), gen_max + 1))
+            for _ in range(requests)]
+    follow = [rng.integers(0, cfg.vocab_size,
+                           size=int(rng.integers(2, 9)), dtype=np.int32)
+              for _ in range(requests)]
+
+    def one(mode: str):
+        opts = EngineOptions(
+            page_size=page_size, max_slots=slots,
+            max_seq_len=prompt_max + 2 * gen_max + 16,
+            chunk=chunk, hw=hw, prefix_cache=mode)
+        eng = Engine(cfg, params, options=opts)
+        eng.warmup()
+        peak_sharing = 1.0
+
+        def drain():
+            # effective capacity: logical pages bound across running
+            # slots over distinct physical pages — >1 means the pool is
+            # serving more conversation-pages than it holds (the trie's
+            # retained pages are deliberately excluded: retention is a
+            # cache, sharing is the capacity win)
+            nonlocal peak_sharing
+            while eng.has_work:
+                eng.step()
+                held = [p for s in list(eng.scheduler.running)
+                        for p in eng.kv._slot_pages[s]]
+                if held:
+                    peak_sharing = max(peak_sharing,
+                                       len(held) / len(set(held)))
+
+        t0 = time.perf_counter()
+        r1 = [eng.submit(p, max_new_tokens=g,
+                         arrival_s=time.perf_counter())
+              for p, g in zip(turn1, gens)]
+        drain()
+        cold = dict(eng.stats())
+        turn2 = [np.concatenate([p, np.asarray(r.output, np.int32), f])
+                 for p, r, f in zip(turn1, r1, follow)]
+        r2 = [eng.submit(p, max_new_tokens=g,
+                         arrival_s=time.perf_counter())
+              for p, g in zip(turn2, gens)]
+        drain()
+        wall = time.perf_counter() - t0
+        s = eng.stats()
+        warm_ttft = sorted(r.ttft_s for r in r2)
+        warm_tokens = sum(len(p) for p in turn2)
+        leg = dict(
+            _engine_stats(eng, wall),
+            warm_hit_tokens=(s["prefix_hit_tokens"]
+                             - cold["prefix_hit_tokens"]),
+            warm_hits=s["prefix_hits"] - cold["prefix_hits"],
+            warm_prompt_tokens=warm_tokens,
+            warm_hit_rate=(s["prefix_hit_tokens"]
+                           - cold["prefix_hit_tokens"]) / warm_tokens,
+            warm_ttft_p50_s=warm_ttft[len(warm_ttft) // 2],
+            warm_ttft_p99_s=warm_ttft[-1],
+            peak_page_sharing_x=peak_sharing,
+            prefix_hits=s["prefix_hits"],
+            prefix_hit_rate=s["prefix_hit_rate"],
+            prefix_cow_copies=s["prefix_cow_copies"],
+            prefix_evicted_pages=s["prefix_evicted_pages"])
+        outs = ([list(r.output) for r in r1]
+                + [list(r.output) for r in r2])
+        if mode == "on":
+            eng.kv.check_integrity()
+        return leg, outs
+
+    legs, outs = {}, {}
+    for mode in ("off", "on"):
+        legs[mode], outs[mode] = one(mode)
+    return {
+        "scenario": "prefix_cache",
+        "arch": cfg.name,
+        "hw": hw.name,
+        "requests": requests,
+        "turns": 2,
+        "slots": slots,
+        "chunk": chunk,
+        "page_size": page_size,
+        "system_prompt_len": sys_len,
+        "tokens_equal": outs["on"] == outs["off"],
+        "warm_hit_rate": legs["on"]["warm_hit_rate"],
+        "effective_capacity_x": legs["on"]["peak_page_sharing_x"],
+        "warm_ttft_p50_ratio": (
+            legs["on"]["warm_ttft_p50_s"]
+            / max(legs["off"]["warm_ttft_p50_s"], 1e-12)),
+        "on": legs["on"],
+        "off": legs["off"],
+    }
+
+
+def _print_prefix(res: dict) -> None:
+    print(f"\nprefix_cache: {res['arch']} on {res['hw']}, "
+          f"{res['requests']} conversations x {res['turns']} turns, "
+          f"shared system prompt {res['system_prompt_len']} tokens, "
+          f"page {res['page_size']}")
+    for mode in ("off", "on"):
+        r = res[mode]
+        print(f"  {mode:3s}: warm-turn TTFT "
+              f"p50 {r['warm_ttft_p50_s']*1e3:7.0f}ms "
+              f"p99 {r['warm_ttft_p99_s']*1e3:7.0f}ms | "
+              f"peak KV {r['per_device_peak_kv_used_bytes']/2**20:.2f}"
+              f"MiB | hits {r['prefix_hits']} | "
+              f"CoW {r['prefix_cow_copies']}")
+    on = res["on"]
+    print(f"  warm-turn hit rate: {100*res['warm_hit_rate']:.0f}% "
+          f"({on['warm_hit_tokens']}/{on['warm_prompt_tokens']} prompt "
+          f"tokens skipped) | effective capacity "
+          f"{res['effective_capacity_x']:.2f}x | warm TTFT on/off "
+          f"{res['warm_ttft_p50_ratio']:.2f}x | tokens on==off: "
+          f"{res['tokens_equal']}")
+
+
+# ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
 
@@ -881,6 +1038,14 @@ def main():
                          "over the same burst, both golden-verified and "
                          "token-identical (out defaults to "
                          "BENCH_paged_attention.json)")
+    ap.add_argument("--prefix-cache-compare", action="store_true",
+                    help="prefix-cache scenario: a multi-turn trace "
+                         "with a shared system prompt served with "
+                         "--prefix-cache on vs off, both checked "
+                         "token-identical, reporting warm-turn page "
+                         "hit rate, TTFT p50/p99 and the effective "
+                         "capacity ratio (out defaults to "
+                         "BENCH_prefix_cache.json)")
     ap.add_argument("--obs-overhead", action="store_true",
                     help="telemetry scenario: the same burst with "
                          "telemetry off vs span tracer + live /metrics "
@@ -896,11 +1061,15 @@ def main():
     args = ap.parse_args()
 
     if sum(map(bool, (args.overload, args.devices, args.compare_arch,
-                      args.obs_overhead,
-                      args.attn_kernel_compare))) > 1:
+                      args.obs_overhead, args.attn_kernel_compare,
+                      args.prefix_cache_compare))) > 1:
         ap.error("--overload, --devices, --compare-arch, "
-                 "--obs-overhead and --attn-kernel-compare are "
-                 "separate scenarios")
+                 "--obs-overhead, --attn-kernel-compare and "
+                 "--prefix-cache-compare are separate scenarios")
+    if args.prefix_cache_compare and args.preempt is not None:
+        ap.error("--prefix-cache-compare compares cache legs on the "
+                 "default policy (the conformance matrix covers the "
+                 "storm legs); --preempt does not apply")
     if args.obs_overhead and args.preempt is not None:
         ap.error("--obs-overhead compares telemetry legs on the default "
                  "policy; --preempt does not apply")
@@ -931,18 +1100,24 @@ def main():
         v = getattr(args, name)
         kw[name] = profile[name] if v is None else v
     if (args.overload or args.devices or args.compare_arch
-            or args.obs_overhead or args.attn_kernel_compare):
+            or args.obs_overhead or args.attn_kernel_compare
+            or args.prefix_cache_compare):
         # these scenarios drive their own arrivals over the constrained-
         # pool sizing profile
         if args.rate is not None or args.time_scale != 1.0:
             ap.error("--overload/--devices/--compare-arch/--obs-overhead"
-                     "/--attn-kernel-compare drive their own arrivals; "
-                     "--rate/--time-scale do not apply")
+                     "/--attn-kernel-compare/--prefix-cache-compare "
+                     "drive their own arrivals; --rate/--time-scale do "
+                     "not apply")
         kw.pop("rate")
         for name, v in over["smoke" if args.smoke else "full"].items():
             if getattr(args, name) is None:
                 kw[name] = v
-    if args.attn_kernel_compare:
+    if args.prefix_cache_compare:
+        out = args.out or "BENCH_prefix_cache.json"
+        res = run_prefix_compare(**kw)
+        _print_prefix(res)
+    elif args.attn_kernel_compare:
         out = args.out or "BENCH_paged_attention.json"
         res = run_attn_kernel_compare(**kw)
         _print_attn_kernel(res)

@@ -22,7 +22,10 @@ Two paths share one CLI:
   the launcher re-execs itself with virtual host devices when fewer
   than N are attached. ``--attn-kernel`` selects the paged-decode
   attention path (fused Pallas page walk vs the gather baseline —
-  bit-identical tokens, see docs/serving.md).
+  bit-identical tokens, see docs/serving.md). ``--prefix-cache on``
+  shares published KV pages across requests with the same prompt
+  prefix (refcounted trie + copy-on-write; also bit-identical — see
+  docs/serving.md).
 
 * default: the legacy fixed-batch loop (kept as the golden reference the
   engine is tested against), now with per-request ``max_new_tokens`` and
@@ -124,7 +127,8 @@ def engine_loop(args, cfg, hw):
                          num_pages=args.num_pages, measure=args.measure,
                          devices=args.devices,
                          kv_sharding=args.kv_sharding,
-                         attn_kernel=args.attn_kernel, obs=obs)
+                         attn_kernel=args.attn_kernel,
+                         prefix_cache=args.prefix_cache, obs=obs)
     sampling = None
     if args.temperature > 0:
         sampling = SamplingParams(temperature=args.temperature,
@@ -182,6 +186,13 @@ def engine_loop(args, cfg, hw):
               f"{s['preempt_offload']} offload, {s['resumes']} resumes, "
               f"swap {s['swap_out_bytes']/2**20:.2f}MiB out / "
               f"{s['swap_in_bytes']/2**20:.2f}MiB in")
+    if s.get("prefix_cache") == "on":
+        print(f"prefix cache: {s['prefix_hits']} hits / "
+              f"{s['prefix_misses']} misses "
+              f"({100 * s['prefix_hit_rate']:.0f}%), "
+              f"{s['prefix_hit_tokens']} prompt tokens skipped, "
+              f"{s['prefix_cow_copies']} CoW copies, "
+              f"{s['prefix_evicted_pages']} pages evicted")
     for bucket, (n, strat) in sorted(engine.adaptive.resolutions.items()):
         print(f"  bucket {bucket:4d} -> n={n} strategy={strat}")
 
@@ -243,6 +254,16 @@ def main():
                          "dp), 'gather' materializes pages first (the "
                          "exactness baseline; both emit bit-identical "
                          "tokens), 'auto' picks pallas on TPU")
+    ap.add_argument("--prefix-cache", default="off",
+                    choices=["on", "off"],
+                    help="engine: cross-request prefix caching — 'on' "
+                         "publishes full KV pages of finished prefixes "
+                         "into a per-shard refcounted trie so later "
+                         "requests sharing a prompt prefix skip its "
+                         "prefill (copy-on-write on divergence, LRU "
+                         "eviction under pressure; bit-identical "
+                         "tokens, see docs/serving.md); non-paged "
+                         "caches degrade to 'off'")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="engine: sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -278,6 +299,9 @@ def main():
     if args.attn_kernel != "auto" and not args.engine:
         ap.error("--attn-kernel selects the engine's paged-decode "
                  "attention path; add --engine")
+    if args.prefix_cache != "off" and not args.engine:
+        ap.error("--prefix-cache enables the engine's cross-request "
+                 "prefix cache; add --engine")
     hw = resolve_hw(args.hw)
     print(f"hw spec: {hw.name}")
     cfg = get_config(args.arch).reduced()

@@ -239,6 +239,29 @@ def insert_pages(pools, page_ids, host, *, sharding=None,
     return jax.tree_util.tree_map(one, pools, host)
 
 
+def copy_pages(pools, src_pages, dst_pages, *, out_sharding=None):
+    """Device-side physical page duplication (copy-on-write).
+
+    ``src_pages`` / ``dst_pages`` are equal-length sequences of physical
+    page indices; returns new pools where every ``dst`` page holds a
+    copy of its ``src`` page across all periods and leaves. The copy is
+    a same-array gather+scatter, so it never leaves the device; under
+    DP-sharded pools both indices belong to the same shard (the serving
+    layer never shares pages across shards), so the move is shard-local.
+    ``out_sharding`` re-pins the result like :func:`insert_pages`.
+    """
+    src = jnp.asarray(np.asarray(src_pages, np.int32))
+    dst = jnp.asarray(np.asarray(dst_pages, np.int32))
+
+    def one(leaf):
+        out = leaf.at[:, dst].set(leaf[:, src])
+        if out_sharding is not None:
+            out = jax.device_put(out, out_sharding)
+        return out
+
+    return jax.tree_util.tree_map(one, pools)
+
+
 def tree_bytes(tree) -> int:
     """Total bytes of a (host or device) array tree."""
     return sum(int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize

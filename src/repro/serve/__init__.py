@@ -36,7 +36,11 @@ Module map
                   compressed MLA latent); each shard's local page 0 is
                   its reserved masked-write sink (one shard unsharded);
                   ``cache_bytes`` / ``used_bytes`` / ``per_device_*`` /
-                  ``swap_*_bytes`` accounting.
+                  ``swap_*_bytes`` accounting. ``prefix_cache=True``
+                  adds the cross-request prefix cache: a per-shard
+                  refcounted trie of published full-page prefixes,
+                  hit-binding at admission, copy-on-write before any
+                  shared-page write, LRU eviction of trie-only pages.
 ``adaptive.py``   :class:`PrefillBucketAdaptive` — power-of-two token
                   buckets resolved once each through the persistent
                   ``core.Resolver`` (MPipeMoE Algorithm 1 + Eq. 10),

@@ -97,6 +97,7 @@ __all__ = ["Engine", "EngineOptions"]
 
 PREEMPT_POLICIES = ("auto", "recompute", "offload", "never")
 ATTN_KERNELS = ("auto", "pallas", "gather")
+PREFIX_CACHE_MODES = ("on", "off")
 
 
 @dataclasses.dataclass
@@ -130,6 +131,17 @@ class EngineOptions:
                                        # (CPU runs the kernel in interpret
                                        # mode — exact but slow). Both
                                        # paths are bit-identical.
+    prefix_cache: str = "off"          # "on": cross-request prefix reuse
+                                       # over the paged pools (per-shard
+                                       # trie of full-page token keys +
+                                       # refcounted pages + copy-on-write
+                                       # — see serve/paged_kv.py). Warm
+                                       # prompts skip prefill for their
+                                       # cached prefix; "off" is
+                                       # bit-identical to the pre-prefix
+                                       # allocator. Caches without
+                                       # shareable page state (constant /
+                                       # composite) degrade to "off".
     allow_offload: Optional[bool] = None   # None = host_offload_supported
     preempt_mfu: float = 0.5           # assumed MFU of re-prefill (cost)
     storm_every: int = 0               # N>0: force-preempt a victim every
@@ -161,6 +173,7 @@ class Engine:
         assert opts.preempt in PREEMPT_POLICIES, opts.preempt
         assert opts.kv_sharding in KV_SHARDINGS, opts.kv_sharding
         assert opts.attn_kernel in ATTN_KERNELS, opts.attn_kernel
+        assert opts.prefix_cache in PREFIX_CACHE_MODES, opts.prefix_cache
         self._attn_kernel = opts.attn_kernel
         if self._attn_kernel == "auto":
             self._attn_kernel = ("pallas"
@@ -202,7 +215,14 @@ class Engine:
             page_size=opts.page_size, max_slots=opts.max_slots,
             max_pages_per_seq=opts.max_pages_per_seq,
             max_seq_len=opts.max_seq_len, dtype=dtype, dist=self.dist,
-            kv_sharding=opts.kv_sharding)
+            kv_sharding=opts.kv_sharding,
+            prefix_cache=(opts.prefix_cache == "on"))
+        if opts.prefix_cache == "on" and not self.kv.prefix_enabled:
+            log.warning(
+                "prefix_cache='on' but the %s cache has no shareable "
+                "page-boundary state (recurrent rows are position-"
+                "dependent) — prefix reuse is disabled; serving is "
+                "otherwise unaffected", kind)
         if opts.kv_sharding == "dp" and self.kv.n_shards == 1:
             log.warning(
                 "kv_sharding='dp' but the mesh's data axis has extent 1 "
@@ -526,10 +546,16 @@ class Engine:
         actually hold cache bytes — on ``shard`` when given (pool-dry is
         a per-shard event under the DP-KV layout: only a victim on the
         dry shard frees capacity the grower can use)."""
-        cands = [r for r in self.scheduler.running.values()
-                 if self.kv.held_bytes(r.slot) > 0
-                 and (shard is None
-                      or self.kv.shard_of_slot(r.slot) == shard)]
+        on_shard = [r for r in self.scheduler.running.values()
+                    if shard is None
+                    or self.kv.shard_of_slot(r.slot) == shard]
+        cands = [r for r in on_shard if self.kv.held_bytes(r.slot) > 0]
+        if not cands:
+            # prefix cache: every page on the shard may be shared (zero
+            # exclusive bytes per slot), yet preempting still helps —
+            # the victim's dropped references turn shared pages into
+            # evictable trie-only entries
+            cands = on_shard
         if not cands:
             return None
         return min(cands, key=lambda r: (r.priority, -r.rid))
@@ -576,6 +602,20 @@ class Engine:
                 raise RuntimeError(
                     f"page pool wedged: KV shard {shard} has no free "
                     f"pages and no victim")
+            vslot = victim.slot
+            self._do_preempt(victim)
+            if vslot == slot:
+                return False
+        # prefix cache: the positions this step writes may live on pages
+        # shared with the trie or other requests — copy-on-write (or
+        # steal) them first; a dry shard preempts like growth does.
+        # No-op with the prefix cache off.
+        while not self.kv.ensure_private(slot, tokens):
+            victim = self._pick_victim(shard)
+            if victim is None:
+                raise RuntimeError(
+                    f"page pool wedged: KV shard {shard} cannot supply "
+                    f"a copy-on-write page and has no victim")
             vslot = victim.slot
             self._do_preempt(victim)
             if vslot == slot:
@@ -657,6 +697,9 @@ class Engine:
         self._m_prefill_tokens.inc(c)
         self.scheduler.prefill_advanced(req)
         if req.remaining_prefill == 0:
+            # publish the finished prompt's full pages for later
+            # requests sharing the prefix (no-op with prefix off)
+            kv.cache_slot_prefix(slot, req.prefill_tokens)
             req.state = RequestState.DECODE
             tracer.begin("DECODE", pid=PID_REQUESTS, tid=req.rid)
             req.decode_span_open = True
@@ -711,6 +754,10 @@ class Engine:
         return {"tokens": len(slots)}
 
     def _retire(self, req: Request) -> None:
+        # publish the retiring request's written full pages (prompt plus
+        # generated turn) before the slot frees: the trie's reference
+        # keeps them alive for the conversation's next turn
+        self.kv.cache_slot_prefix(req.slot, req.prefill_tokens)
         tracer = self.obs.tracer
         if req.decode_span_open:
             tracer.end("DECODE", pid=PID_REQUESTS, tid=req.rid)
@@ -774,6 +821,22 @@ class Engine:
             "free_units_by_shard": {
                 dict(c.labels)["shard"]: int(c.value)
                 for c in (free_fam.children() if free_fam else ())},
+            "prefix_cache": self.opts.prefix_cache,
+            "prefix_hits": self.kv.prefix_hits,
+            "prefix_misses": self.kv.prefix_misses,
+            "prefix_hit_tokens": self.kv.prefix_hit_tokens,
+            "prefix_hit_rate": (
+                self.kv.prefix_hits
+                / max(1, self.kv.prefix_hits + self.kv.prefix_misses)),
+            "prefix_cow_copies": self.kv.prefix_cow_copies,
+            "prefix_cow_bytes": self.kv.prefix_cow_bytes,
+            "prefix_evicted_pages": self.kv.prefix_evicted_pages,
+            "prefix_cached_pages": sum(
+                self.kv.prefix_cached_pages_of(s)
+                for s in range(self.kv.n_shards)),
+            "prefix_shared_pages": sum(
+                self.kv.prefix_shared_pages_of(s)
+                for s in range(self.kv.n_shards)),
             "preempt_recompute": self.preempts["recompute"],
             "preempt_offload": self.preempts["offload"],
             "resumes": self.scheduler.resume_count,

@@ -61,6 +61,34 @@ per-device residency (divided by ``n_shards`` under ``dp``, with
 ``replicas`` physical copies each). Host-offload round-trips are
 unchanged per shard: pages are extracted from (and re-inserted into) the
 pools with the pool layout preserved (``insert_pages(out_sharding=)``).
+
+Cross-request prefix cache (``prefix_cache=True``): every page carries a
+refcount (= binding slots + 1 if the page is published in the prefix
+trie), and each shard keeps a trie over **full-page token keys** — node
+at depth i maps the exact ``page_size`` token ids of logical page i to
+the physical page holding their K/V. Admission
+(:meth:`alloc_slot_prefix`) walks the trie with the request's prompt,
+binds the matched pages instead of recomputing them (refcount +1 each,
+``lens`` starts at the hit length — prefill runs only the tail), capped
+at ``len(prompt) - 1`` so at least one token always prefilles to
+produce the first-sample logits. That cap can land mid-page, so the
+tail's first write may target a shared page: :meth:`ensure_private`
+copy-on-writes it (device-side :func:`models.kv_cache.copy_pages` into
+a fresh page; when the pool is dry and the trie is the only other
+referent, the entry is *stolen* — detached — instead, which is what
+keeps a sole request from live-locking against its own cache entries).
+Retiring or finishing prefill publishes the slot's written full pages
+(:meth:`cache_slot_prefix`). A page is freed only at refcount zero:
+preemption (both modes) merely drops the victim's references, so a page
+another request — or the trie — still holds is never recycled.
+Eviction is LRU over trie entries no slot references
+(:meth:`_evict_one`), triggered on demand when an allocation finds the
+free list empty; ``free_pages_of`` therefore counts free + evictable.
+Under ``kv_sharding="dp"`` the tries are per shard and
+:meth:`match_prefix` is the scheduler's cache-aware placement hint, so
+hits are shard-local by construction. With ``prefix_cache=False``
+(default) refcounts are uniformly 1 and every code path reduces to the
+pre-prefix behaviour.
 """
 from __future__ import annotations
 
@@ -77,17 +105,37 @@ from repro.serve.state_cache import KV_SHARDINGS, StateCache, _round_up
 __all__ = ["KV_SHARDINGS", "PagedKVCache"]
 
 
+class _TrieNode:
+    """One published full page of a shard's prefix trie: ``key`` is the
+    exact ``page_size`` token ids at this depth (as bytes — content is
+    the hash), ``page`` the physical page holding their K/V, ``tick``
+    the last match/publish time (LRU eviction order). Each shard's root
+    is a keyless sentinel with ``page == -1``."""
+    __slots__ = ("key", "page", "parent", "children", "tick")
+
+    def __init__(self, key: bytes, page: int,
+                 parent: Optional["_TrieNode"]):
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children: Dict[bytes, "_TrieNode"] = {}
+        self.tick = 0
+
+
 class PagedKVCache(StateCache):
     kind = "paged"
 
     def __init__(self, cfg: ArchConfig, *, num_pages: int, page_size: int,
                  max_slots: int, max_pages_per_seq: int,
                  dtype=jnp.bfloat16, dist=None,
-                 kv_sharding: str = "replicated", shards: int = 0):
+                 kv_sharding: str = "replicated", shards: int = 0,
+                 prefix_cache: bool = False):
         """``num_pages=0`` auto-sizes the pool to the worst case (every
         slot's full ``max_pages_per_seq`` budget, plus one sink page per
         shard) — the sizing lives here, next to the rounding rules it
-        depends on, so callers cannot drift out of sync with them."""
+        depends on, so callers cannot drift out of sync with them.
+        ``prefix_cache=True`` turns on cross-request prefix reuse (see
+        module docstring)."""
         super().__init__(cfg, max_slots=max_slots, dist=dist,
                          kv_sharding=kv_sharding, shards=shards)
         self.page_size = int(page_size)
@@ -124,6 +172,24 @@ class PagedKVCache(StateCache):
         self.peak_used_pages = 0
         self._peak_used_by_shard = [0] * self.n_shards
 
+        # -- cross-request prefix cache --------------------------------
+        # refcount per physical page: #slots binding it, +1 while it is
+        # published in the trie; free pages are exactly refs == 0. With
+        # prefix_cache off the tries stay empty and refs stay <= 1, so
+        # the allocator reduces to the refcount-free behaviour.
+        self.prefix_enabled = bool(prefix_cache)
+        self._refs = np.zeros(self.num_pages, np.int32)
+        self._trie_roots: List[_TrieNode] = [
+            _TrieNode(b"", -1, None) for _ in range(self.n_shards)]
+        self._node_of_page: Dict[int, _TrieNode] = {}
+        self._tick = 0
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_evicted_pages = 0
+        self.prefix_cow_copies = 0
+        self.prefix_cow_bytes = 0
+
     # -- shard topology --------------------------------------------------
     def shard_of_page(self, page: int) -> int:
         return page // self.pages_per_shard
@@ -142,7 +208,10 @@ class PagedKVCache(StateCache):
         return -(-int(tokens) // self.page_size)
 
     def free_pages_of(self, shard: int) -> int:
-        return len(self._free_by_shard[shard])
+        """*Allocatable* pages on ``shard``: the free list plus trie-only
+        pages (no slot reference) that eviction can reclaim on demand.
+        Identical to the free-list length with the prefix cache off."""
+        return len(self._free_by_shard[shard]) + self._reclaimable_of(shard)
 
     @property
     def _free(self) -> List[int]:
@@ -151,7 +220,7 @@ class PagedKVCache(StateCache):
 
     @property
     def free_pages(self) -> int:
-        return sum(len(fl) for fl in self._free_by_shard)
+        return sum(self.free_pages_of(s) for s in range(self.n_shards))
 
     @property
     def free_units(self) -> int:
@@ -175,13 +244,42 @@ class PagedKVCache(StateCache):
             free.labels(shard=s).set(self.free_pages_of(s))
             held.labels(shard=s).set(
                 self.used_pages_of(s) * self.page_bytes)
+        if not self.prefix_enabled:
+            return
+        g = registry.gauge
+        cached = g("repro_prefix_cached_pages",
+                   "pages published in the prefix trie", ["shard"])
+        shared = g("repro_prefix_shared_pages",
+                   "pages with more than one referent", ["shard"])
+        for s in range(self.n_shards):
+            cached.labels(shard=s).set(self.prefix_cached_pages_of(s))
+            shared.labels(shard=s).set(self.prefix_shared_pages_of(s))
+        g("repro_prefix_hits",
+          "prefix-cache admission hits").set(self.prefix_hits)
+        g("repro_prefix_misses",
+          "prefix-cache admission misses").set(self.prefix_misses)
+        g("repro_prefix_hit_tokens",
+          "prompt tokens served from the prefix cache"
+          ).set(self.prefix_hit_tokens)
+        g("repro_prefix_evicted_pages",
+          "trie references dropped by eviction/steal"
+          ).set(self.prefix_evicted_pages)
+        g("repro_prefix_cow_copies",
+          "copy-on-write page duplications").set(self.prefix_cow_copies)
+        g("repro_prefix_cow_bytes",
+          "bytes duplicated by copy-on-write").set(self.prefix_cow_bytes)
 
     @property
     def used_pages(self) -> int:
-        return (self.num_pages - self.n_shards) - self.free_pages
+        """*Physical* occupancy: pages not on a free list. A page shared
+        by several slots and/or the prefix trie counts exactly once —
+        this (not per-slot sums) is what peaks and the held-bytes gauges
+        report."""
+        return (self.num_pages - self.n_shards) - sum(
+            len(fl) for fl in self._free_by_shard)
 
     def used_pages_of(self, shard: int) -> int:
-        return self.shard_capacity_pages - self.free_pages_of(shard)
+        return self.shard_capacity_pages - len(self._free_by_shard[shard])
 
     @property
     def max_slot_tokens(self) -> int:
@@ -195,8 +293,8 @@ class PagedKVCache(StateCache):
         """Can ``total_tokens`` be reserved — on ``shard``, or on the
         least-loaded shard when None?"""
         need = self.pages_for(total_tokens)
-        free = (max(map(len, self._free_by_shard)) if shard is None
-                else self.free_pages_of(shard))
+        free = (max(self.free_pages_of(s) for s in range(self.n_shards))
+                if shard is None else self.free_pages_of(shard))
         return (need <= free
                 and need <= self.max_pages_per_seq
                 and total_tokens <= self.max_pages_per_seq * self.page_size)
@@ -224,6 +322,36 @@ class PagedKVCache(StateCache):
         self._peak_used_by_shard[shard] = max(
             self._peak_used_by_shard[shard], self.used_pages_of(shard))
 
+    def _take_page(self, shard: int) -> Optional[int]:
+        """Pop a free page of ``shard``, evicting least-recently-matched
+        trie-only entries when the free list runs dry. None when the
+        shard is truly dry (caller preempts or reports infeasible)."""
+        fl = self._free_by_shard[shard]
+        while not fl:
+            if not self._evict_one(shard):
+                return None
+        page = fl.pop()
+        assert self._refs[page] == 0, f"free page {page} has references"
+        self._refs[page] = 1
+        return page
+
+    def _release_page(self, page: int) -> None:
+        """Drop one reference; a page frees only at refcount zero, so a
+        page another slot — or the trie — still holds is never recycled."""
+        refs = int(self._refs[page]) - 1
+        assert refs >= 0, f"double free of page {page}"
+        self._refs[page] = refs
+        if refs == 0:
+            self._free_by_shard[self.shard_of_page(page)].append(page)
+
+    def _bind(self, slot: int, pages: List[int], tokens: int) -> None:
+        shard = self.shard_of_slot(slot)
+        self._slot_pages[slot] = pages
+        self.page_table[slot, :] = self.sink_page(shard)
+        self.page_table[slot, :len(pages)] = pages
+        self.lens[slot] = tokens
+        self._note_peak(shard)
+
     def alloc_slot(self, slot: int, tokens: int) -> None:
         """Reserve ``pages_for(tokens)`` pages of the slot's shard — the
         full budget (blocking admission) or just an initial watermark
@@ -233,13 +361,9 @@ class PagedKVCache(StateCache):
         need = self.pages_for(tokens)
         assert self.can_admit(tokens, shard), \
             f"alloc_slot without can_admit (shard {shard})"
-        fl = self._free_by_shard[shard]
-        pages = [fl.pop() for _ in range(need)]
-        self._slot_pages[slot] = pages
-        self.page_table[slot, :] = self.sink_page(shard)
-        self.page_table[slot, :need] = pages
-        self.lens[slot] = 0
-        self._note_peak(shard)
+        pages = [self._take_page(shard) for _ in range(need)]
+        assert None not in pages, f"shard {shard} ran dry mid-alloc"
+        self._bind(slot, pages, 0)
 
     def slot_page_count(self, slot: int) -> int:
         return len(self._slot_pages[slot])
@@ -249,7 +373,16 @@ class PagedKVCache(StateCache):
         return len(self._slot_pages[slot]) * self.page_size
 
     def held_bytes(self, slot: int) -> int:
-        return self.slot_page_count(slot) * self.page_bytes
+        """Bytes this slot holds *exclusively*. With the prefix cache on
+        a shared page is attributed to no slot (pool-level accounting —
+        ``used_pages_of`` counts it exactly once); a page the slot shares
+        only with the trie still counts as the slot's."""
+        if not self.prefix_enabled:
+            return self.slot_page_count(slot) * self.page_bytes
+        mine = sum(
+            1 for p in self._slot_pages[slot]
+            if int(self._refs[p]) - (p in self._node_of_page) == 1)
+        return mine * self.page_bytes
 
     def grow_slot(self, slot: int) -> bool:
         """Bind one more page of the slot's shard. False when that shard
@@ -259,10 +392,9 @@ class PagedKVCache(StateCache):
         assert len(held) < self.max_pages_per_seq, \
             f"slot {slot} grew past its per-sequence page budget"
         shard = self.shard_of_slot(slot)
-        fl = self._free_by_shard[shard]
-        if not fl:
+        page = self._take_page(shard)
+        if page is None:
             return False
-        page = fl.pop()
         self.page_table[slot, len(held)] = page
         held.append(page)
         self._note_peak(shard)
@@ -270,7 +402,8 @@ class PagedKVCache(StateCache):
 
     def free_slot(self, slot: int) -> None:
         shard = self.shard_of_slot(slot)
-        self._free_by_shard[shard].extend(reversed(self._slot_pages[slot]))
+        for page in reversed(self._slot_pages[slot]):
+            self._release_page(page)
         self._slot_pages[slot] = []
         self.page_table[slot, :] = self.sink_page(shard)
         self.lens[slot] = 0
@@ -289,7 +422,8 @@ class PagedKVCache(StateCache):
         assert rid not in self._offloaded, f"rid {rid} already offloaded"
         assert need <= len(pages), \
             f"slot {slot} holds {len(pages)} pages < lens needs {need}"
-        self._free_by_shard[shard].extend(reversed(pages[need:]))  # trim
+        for page in reversed(pages[need:]):  # trim unwritten growth
+            self._release_page(page)
         pages = self._slot_pages[slot] = pages[:need]
         host = kv_cache.extract_pages(self.pools, pages)
         nbytes = kv_cache.tree_bytes(host)
@@ -322,22 +456,19 @@ class PagedKVCache(StateCache):
             f"restore of rid {rid} onto slot {slot} (shard " \
             f"{self.shard_of_slot(slot)}) but its pages live on shard " \
             f"{shard} — placement is sticky"
-        fl = self._free_by_shard[shard]
-        assert need <= len(fl), "restore_slot without can_restore"
+        assert need <= self.free_pages_of(shard), \
+            "restore_slot without can_restore"
         assert self.pages_for(tokens) == need, \
             f"restore of {tokens} tokens into {need} pages"
         del self._offloaded[rid]
-        pages = [fl.pop() for _ in range(need)]
+        pages = [self._take_page(shard) for _ in range(need)]
+        assert None not in pages, f"shard {shard} ran dry mid-restore"
         self.pools = kv_cache.insert_pages(
             self.pools, pages, host, sharding=self._replicated,
             out_sharding=self._pool_spec)
-        self._slot_pages[slot] = pages
-        self.page_table[slot, :] = self.sink_page(shard)
-        self.page_table[slot, :need] = pages
-        self.lens[slot] = tokens
+        self._bind(slot, pages, tokens)
         nbytes = kv_cache.tree_bytes(host)
         self.swap_in_bytes += nbytes
-        self._note_peak(shard)
         return nbytes
 
     @property
@@ -349,6 +480,285 @@ class PagedKVCache(StateCache):
         """Bytes currently parked in the host offload pool."""
         return sum(kv_cache.tree_bytes(host)
                    for host, _, _ in self._offloaded.values())
+
+    # -- cross-request prefix cache --------------------------------------
+    def _page_keys(self, token_ids) -> List[bytes]:
+        """Full-page content keys: the exact ``page_size`` token ids of
+        each fully-covered page, as bytes."""
+        ids = np.ascontiguousarray(np.asarray(token_ids, np.int32))
+        ps = self.page_size
+        return [ids[i * ps:(i + 1) * ps].tobytes()
+                for i in range(len(ids) // ps)]
+
+    def _walk(self, shard: int, keys: Sequence[bytes]) -> List[_TrieNode]:
+        """Longest-prefix match: the published trie nodes for the
+        leading full pages of ``keys`` on ``shard``."""
+        node, path = self._trie_roots[shard], []
+        for key in keys:
+            child = node.children.get(key)
+            if child is None:
+                break
+            path.append(child)
+            node = child
+        return path
+
+    def _reclaimable_of(self, shard: int) -> int:
+        """Trie-held pages of ``shard`` no slot references — evictable
+        on demand, hence allocatable."""
+        if not self._node_of_page:
+            return 0
+        return sum(1 for p in self._node_of_page
+                   if self._refs[p] == 1 and self.shard_of_page(p) == shard)
+
+    def _detach(self, node: _TrieNode) -> int:
+        """Unpublish ``node``'s whole subtree (children key on the full
+        path, so they cannot outlive it). Slot-bound descendants lose
+        only the trie's reference and live on; unreferenced ones free.
+        Returns the number of pages whose trie reference was dropped."""
+        del node.parent.children[node.key]
+        node.parent = None
+        stack, dropped = [node], 0
+        while stack:
+            cur = stack.pop()
+            stack.extend(cur.children.values())
+            cur.children = {}
+            del self._node_of_page[cur.page]
+            self._release_page(cur.page)
+            dropped += 1
+        return dropped
+
+    def _evict_one(self, shard: int) -> bool:
+        """Evict the least-recently-matched trie entry of ``shard`` that
+        no slot references (refcount 1 — trie only); frees >= 1 page.
+        False when nothing on the shard is evictable."""
+        victim = None
+        stack = list(self._trie_roots[shard].children.values())
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if self._refs[node.page] == 1 and \
+                    (victim is None or node.tick < victim.tick):
+                victim = node
+        if victim is None:
+            return False
+        self.prefix_evicted_pages += self._detach(victim)
+        return True
+
+    def match_prefix(self, token_ids, total_tokens: int,
+                     candidates: Optional[Sequence[int]] = None
+                     ) -> Tuple[Optional[int], int]:
+        """Cache-aware placement probe: among ``candidates`` (default:
+        all shards), the shard holding the longest published prefix of
+        ``token_ids`` that can also still fit the rest of the
+        ``total_tokens`` reservation. Returns ``(shard, cached_tokens)``
+        — ``(None, 0)`` on a miss, and the caller falls back to
+        :meth:`best_shard`. Read-only: :meth:`alloc_slot_prefix` binds."""
+        if not self.prefix_enabled or len(token_ids) < 2:
+            return None, 0
+        need = self.pages_for(total_tokens)
+        if need > self.max_pages_per_seq or \
+                total_tokens > self.max_pages_per_seq * self.page_size:
+            return None, 0
+        keys = self._page_keys(token_ids)
+        best, best_cached = None, 0
+        cands = range(self.n_shards) if candidates is None else candidates
+        for s in cands:
+            path = self._walk(s, keys)
+            cached = min(len(path) * self.page_size, len(token_ids) - 1)
+            if cached <= best_cached:
+                continue
+            bound = self.pages_for(cached)
+            # fresh pages still needed (+1 when the hit ends mid-page:
+            # that shared page gets copy-on-written before the tail
+            # prefill writes into it)
+            fresh = need - bound + (1 if cached % self.page_size else 0)
+            avail = (len(self._free_by_shard[s]) + self._reclaimable_of(s)
+                     - sum(1 for n in path[:bound]
+                           if self._refs[n.page] == 1))
+            if fresh > avail:
+                continue
+            best, best_cached = s, cached
+        return best, best_cached
+
+    def alloc_slot_prefix(self, slot: int, tokens: int, token_ids,
+                          *, page_aligned: bool = False) -> int:
+        """Admission with prefix reuse: bind the longest published
+        prefix of ``token_ids`` on the slot's shard (refcount +1 per hit
+        page — their K/V is *not* recomputed), then take fresh pages for
+        the rest of the ``tokens`` reservation. Returns the cached token
+        count; the caller starts prefill there. The hit is capped at
+        ``len(token_ids) - 1`` so the tail is never empty (the final
+        prefill chunk must produce the first-sample logits).
+
+        ``page_aligned=True`` (the full-reserve scheduler) floors the
+        hit to a page boundary: the tail then never writes a shared
+        page, so a fully-reserved slot never needs a copy-on-write
+        target page beyond its reservation."""
+        if not self.prefix_enabled:
+            self.alloc_slot(slot, tokens)
+            return 0
+        assert not self._slot_pages[slot], f"slot {slot} already allocated"
+        shard = self.shard_of_slot(slot)
+        path = self._walk(shard, self._page_keys(token_ids))
+        cached = min(len(path) * self.page_size, len(token_ids) - 1)
+        if page_aligned:
+            cached -= cached % self.page_size
+        if cached <= 0:
+            self.prefix_misses += 1
+            self.alloc_slot(slot, tokens)
+            return 0
+        bound = self.pages_for(cached)
+        path = path[:bound]
+        # bind the hits *first*: refcount >= 2 shields them (and their
+        # ancestors) from the evictions the fresh takes below may run
+        self._tick += 1
+        for node in path:
+            self._refs[node.page] += 1
+            node.tick = self._tick
+        pages = [node.page for node in path]
+        for _ in range(self.pages_for(tokens) - bound):
+            page = self._take_page(shard)
+            assert page is not None, \
+                f"alloc_slot_prefix without match_prefix feasibility " \
+                f"(shard {shard})"
+            pages.append(page)
+        self._bind(slot, pages, cached)
+        self.prefix_hits += 1
+        self.prefix_hit_tokens += cached
+        return cached
+
+    def cache_slot_prefix(self, slot: int, token_ids) -> None:
+        """Publish the slot's written full pages into its shard's trie
+        (one trie reference each). Idempotent: pages already published
+        under the same token path are just tick-refreshed. Only pages
+        fully covered by both ``lens[slot]`` and ``token_ids`` qualify —
+        a partial page is still being written to."""
+        if not self.prefix_enabled or not self._slot_pages[slot]:
+            return
+        shard = self.shard_of_slot(slot)
+        n_tok = min(len(token_ids), int(self.lens[slot]))
+        keys = self._page_keys(np.asarray(token_ids, np.int32)[:n_tok])
+        self._tick += 1
+        node = self._trie_roots[shard]
+        for i, key in enumerate(keys):
+            child = node.children.get(key)
+            if child is None:
+                page = self._slot_pages[slot][i]
+                if page in self._node_of_page:
+                    # already published elsewhere (a CoW copy of a still
+                    # cached page): never double-index a physical page
+                    break
+                child = _TrieNode(key, page, node)
+                node.children[key] = child
+                self._node_of_page[page] = child
+                self._refs[page] += 1
+            child.tick = self._tick
+            node = child
+
+    def ensure_private(self, slot: int, tokens: int) -> bool:
+        """Copy-on-write: make every page the next writes (through token
+        position ``tokens``) land in exclusive to this slot. A shared
+        page is copied device-side into a fresh page (the trie and other
+        slots keep the original); when the shard cannot supply a copy
+        target and the trie is the only other referent, the cache entry
+        is *stolen* (detached) instead — zero-copy, and the reason a
+        sole request can always make progress. False only when another
+        slot shares the page and no page can be freed: the engine then
+        preempts a victim on this shard and retries."""
+        if not self.prefix_enabled:
+            return True
+        pages = self._slot_pages[slot]
+        lo = int(self.lens[slot]) // self.page_size
+        hi = min(self.pages_for(tokens), len(pages))
+        idx = [i for i in range(lo, hi) if self._refs[pages[i]] > 1]
+        if not idx:
+            return True
+        shard = self.shard_of_slot(slot)
+        copies: List[Tuple[int, int, int]] = []   # (pos, shared, fresh)
+        for i in idx:
+            page = pages[i]
+            node = self._node_of_page.get(page)
+            fresh = self._take_page(shard)
+            if fresh is None:
+                if node is not None and int(self._refs[page]) == 2:
+                    # dry, but only the trie shares it: steal the entry
+                    self.prefix_evicted_pages += self._detach(node)
+                    continue
+                for _, _, taken in copies:  # roll back this call's takes
+                    self._release_page(taken)
+                return False
+            copies.append((i, page, fresh))
+        if copies:
+            self.pools = kv_cache.copy_pages(
+                self.pools, [c[1] for c in copies], [c[2] for c in copies],
+                out_sharding=self._pool_spec)
+            for i, shared, fresh in copies:
+                pages[i] = fresh
+                self.page_table[slot, i] = fresh
+                self._release_page(shared)
+            self.prefix_cow_copies += len(copies)
+            self.prefix_cow_bytes += len(copies) * self.page_bytes
+            self._note_peak(shard)
+        return True
+
+    def prefix_cached_pages_of(self, shard: int) -> int:
+        """Pages currently published in ``shard``'s trie."""
+        return sum(1 for p in self._node_of_page
+                   if self.shard_of_page(p) == shard)
+
+    def prefix_shared_pages_of(self, shard: int) -> int:
+        """Pages of ``shard`` with more than one referent."""
+        lo = shard * self.pages_per_shard
+        return int(np.count_nonzero(
+            self._refs[lo:lo + self.pages_per_shard] >= 2))
+
+    def check_integrity(self) -> None:
+        """Refcount-conservation audit (test hook): every page is free
+        (refcount 0, on its shard's free list exactly once), a reserved
+        sink, or referenced with a refcount equal to its referent count
+        (binding slots + trie); trie entries are shard-local and
+        consistent with ``_node_of_page``. Raises AssertionError on any
+        leak, double-free or double-booking."""
+        refs = np.zeros(self.num_pages, np.int64)
+        seen_free: set = set()
+        for s, fl in enumerate(self._free_by_shard):
+            assert len(set(fl)) == len(fl), f"shard {s} free-list dupes"
+            for p in fl:
+                assert self.shard_of_page(p) == s, \
+                    f"page {p} on shard {s}'s free list"
+                assert p != self.sink_page(s), "sink page freed"
+            seen_free.update(fl)
+        for slot, pages in enumerate(self._slot_pages):
+            for p in pages:
+                assert self.shard_of_page(p) == self.shard_of_slot(slot), \
+                    f"slot {slot} bound page {p} across shards"
+                refs[p] += 1
+        n_nodes = 0
+        for s, root in enumerate(self._trie_roots):
+            stack = list(root.children.values())
+            while stack:
+                node = stack.pop()
+                stack.extend(node.children.values())
+                n_nodes += 1
+                assert self.shard_of_page(node.page) == s, \
+                    "trie entry crossed a shard boundary"
+                assert self._node_of_page.get(node.page) is node, \
+                    f"trie index out of sync for page {node.page}"
+                refs[node.page] += 1
+        assert n_nodes == len(self._node_of_page), \
+            "orphaned trie index entries"
+        sinks = {self.sink_page(s) for s in range(self.n_shards)}
+        for p in range(self.num_pages):
+            assert int(self._refs[p]) == int(refs[p]), \
+                f"page {p}: refcount {int(self._refs[p])} != " \
+                f"{int(refs[p])} referents"
+            if p in sinks:
+                assert refs[p] == 0 and p not in seen_free, \
+                    f"sink page {p} misused"
+            elif refs[p] == 0:
+                assert p in seen_free, f"page {p} leaked"
+            else:
+                assert p not in seen_free, f"page {p} double-booked"
 
     # -- device views ----------------------------------------------------
     # NOTE: always .copy() — jnp.asarray of a host numpy array can be

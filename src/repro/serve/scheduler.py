@@ -102,7 +102,10 @@ class Scheduler:
             req.state = (RequestState.PREFILL if req.resume_to == "prefill"
                          else RequestState.DECODE)
         else:                                   # recompute: re-prefill
-            self.kv.alloc_slot(slot, req.prefill_len)
+            cached = self.kv.alloc_slot_prefix(
+                slot, req.prefill_len, req.prefill_tokens,
+                page_aligned=self.full_reserve)
+            req.prefill_pos = cached            # skip the cached prefix
             req.state = RequestState.PREFILL
         self.resuming.remove(req)
         req.preempt_mode = ""
@@ -127,8 +130,15 @@ class Scheduler:
         need = req.total_budget if self.full_reserve else req.prompt_len
         by_shard = {s: self.free_slots_of(s)
                     for s in range(self.kv.n_shards)}
-        shard = self.kv.best_shard(
-            need, candidates=[s for s, sl in by_shard.items() if sl])
+        cands = [s for s, sl in by_shard.items() if sl]
+        # cache-aware placement first: the shard holding the longest
+        # published prefix of this prompt (no-op with the prefix cache
+        # off, and under one shard it degenerates to a hit probe);
+        # otherwise least-loaded
+        shard, _ = self.kv.match_prefix(req.prefill_tokens, need,
+                                        candidates=cands)
+        if shard is None:
+            shard = self.kv.best_shard(need, candidates=cands)
         if shard is None:
             return None
         return shard, by_shard[shard][0], need
@@ -162,7 +172,10 @@ class Scheduler:
                 if placement is None:
                     break
                 shard, slot, need = placement
-                self.kv.alloc_slot(slot, need)
+                cached = self.kv.alloc_slot_prefix(
+                    slot, need, req.prefill_tokens,
+                    page_aligned=self.full_reserve)
+                req.prefill_pos = cached        # skip the cached prefix
                 self.waiting.popleft()
                 req.kv_shard = shard
                 req.state = RequestState.PREFILL
@@ -172,7 +185,8 @@ class Scheduler:
                                    f"req {req.rid}")
                 tracer.instant("ADMIT", pid=PID_REQUESTS, tid=req.rid,
                                args={"shard": shard, "slot": slot,
-                                     "reserved_tokens": need})
+                                     "reserved_tokens": need,
+                                     "cached_tokens": cached})
             else:
                 break
             req.slot = slot

@@ -193,6 +193,68 @@ class StateCache(abc.ABC):
     def host_bytes(self) -> int:
         """Bytes currently parked in the host pool."""
 
+    # -- cross-request prefix cache ----------------------------------------
+    # The protocol ships no-op defaults so the engine/scheduler stay
+    # implementation-agnostic: a cache that cannot share state across
+    # requests (constant-state recurrent rows are position-dependent —
+    # no snapshot exists at page boundaries) simply never reports hits.
+    # PagedKVCache overrides the lot (refcounted pages + per-shard trie
+    # + copy-on-write) when built with ``prefix_cache=True``.
+
+    prefix_enabled: bool = False
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    prefix_hit_tokens: int = 0
+    prefix_evicted_pages: int = 0
+    prefix_cow_copies: int = 0
+    prefix_cow_bytes: int = 0
+
+    def match_prefix(self, token_ids, total_tokens: int,
+                     candidates: Optional[Sequence[int]] = None
+                     ) -> Tuple[Optional[int], int]:
+        """Longest cached prefix of ``token_ids`` usable by a request of
+        ``total_tokens`` budget: ``(shard, cached_tokens)`` of the best
+        feasible hit among ``candidates`` (default: all shards), or
+        ``(None, 0)`` on a miss — placement then falls back to
+        :meth:`best_shard`."""
+        return None, 0
+
+    def alloc_slot_prefix(self, slot: int, tokens: int, token_ids,
+                          *, page_aligned: bool = False) -> int:
+        """:meth:`alloc_slot` that binds the longest cached prefix of
+        ``token_ids`` instead of allocating fresh pages for it. Returns
+        the number of prefix tokens already cached (``lens[slot]`` is
+        set to it) — 0 here and for any cache without a prefix index.
+        ``page_aligned`` floors the hit to a page boundary so no shared
+        page is ever written (the full-reserve scheduler: its slots must
+        never need an extra copy-on-write target page beyond the
+        reservation, because nothing may ever be preempted to free
+        one)."""
+        self.alloc_slot(slot, tokens)
+        return 0
+
+    def cache_slot_prefix(self, slot: int, token_ids) -> None:
+        """Publish the slot's written full pages into the prefix index
+        (``token_ids`` = exactly the tokens written so far). No-op for
+        caches without a prefix index."""
+
+    def ensure_private(self, slot: int, tokens: int) -> bool:
+        """Make positions ``lens[slot]:tokens`` writable without
+        corrupting state shared with other requests (copy-on-write).
+        False when the shard has no page for the copy — the caller
+        preempts a victim and retries, like :meth:`grow_slot`."""
+        return True
+
+    def prefix_cached_pages_of(self, shard: int) -> int:
+        """Pages currently reachable through the prefix index on
+        ``shard`` (0 without one)."""
+        return 0
+
+    def prefix_shared_pages_of(self, shard: int) -> int:
+        """Pages on ``shard`` referenced by more than one owner
+        (slots and/or the prefix index) — the dedup win, live."""
+        return 0
+
     # -- device buffers for the jit'd step --------------------------------
     @property
     def pool_sharding(self):
@@ -739,19 +801,26 @@ def make_state_cache(cfg: ArchConfig, kind: str, *, num_pages: int,
                      page_size: int, max_slots: int,
                      max_pages_per_seq: int, max_seq_len: int,
                      dtype=jnp.bfloat16, dist=None,
-                     kv_sharding: str = "replicated") -> StateCache:
+                     kv_sharding: str = "replicated",
+                     prefix_cache: bool = False) -> StateCache:
     """Build the :class:`StateCache` for ``cfg`` from the cache kind
     reported by ``models/api.serving_support`` ("paged" | "constant" |
     "composite"). The paged knobs (``num_pages`` / ``page_size`` /
     ``max_pages_per_seq``) are ignored by a pure constant-state cache;
-    ``max_seq_len`` bounds the constant cache's per-request budget."""
+    ``max_seq_len`` bounds the constant cache's per-request budget.
+    ``prefix_cache`` turns on cross-request prefix reuse — **pure paged
+    caches only**: recurrent state at position t depends on every prior
+    token, so no shareable snapshot exists at a page boundary, and both
+    the constant and composite kinds silently degrade to prefix-off
+    (the engine stays correct either way — hits just never happen)."""
     from repro.serve.paged_kv import PagedKVCache   # lazy: avoids cycle
 
     if kind == "paged":
         return PagedKVCache(cfg, num_pages=num_pages, page_size=page_size,
                             max_slots=max_slots,
                             max_pages_per_seq=max_pages_per_seq,
-                            dtype=dtype, dist=dist, kv_sharding=kv_sharding)
+                            dtype=dtype, dist=dist, kv_sharding=kv_sharding,
+                            prefix_cache=prefix_cache)
     if kind == "constant":
         return ConstantStateCache(cfg, max_slots=max_slots,
                                   max_seq_len=max_seq_len, dtype=dtype,

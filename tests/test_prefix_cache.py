@@ -1,0 +1,530 @@
+"""Cross-request prefix cache: refcount/CoW conservation property tier.
+
+The prefix cache aliases pages across requests (and the trie), which is
+exactly the kind of code that corrupts tokens silently. This tier pins
+it three ways:
+
+* **Refcount conservation property**: a seeded interpreter drives random
+  admit / prefill / decode / publish / retire / preempt(recompute and
+  offload) / restore interleavings against ``PagedKVCache.check_integrity``
+  — every pool page must at all times be free (on its shard's free list
+  exactly once), a reserved sink, or referenced with a refcount equal to
+  its referent count (binding slots + trie), with trie entries
+  shard-local and consistent. 500+ deterministic examples (hypothesis is
+  optional in CI; when present it fuzzes the same interpreter).
+* **Copy-on-write semantics** at the allocator level: hits bind without
+  recompute, a mid-page hit boundary copy-on-writes bit-exactly, the
+  steal path privatises without a copy when the pool is dry, LRU
+  eviction only ever drops trie-only pages, and preemption (both modes)
+  never trims or drops a page another slot still references.
+* **Token exactness** at the engine level: the same trace with
+  ``prefix_cache=on`` vs ``off`` must be bit-identical — plain paged,
+  MLA-latent, composite (jamba), and a forced preemption storm where
+  victims share pages with survivors (the CoW-vs-preemption
+  interaction).
+
+Plus the pool-level accounting regression: two full-hit requests must
+report ~1x the pages of one (a shared page counts once, not once per
+referencing slot).
+"""
+import dataclasses
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import kv_cache, lm
+from repro.serve import Engine, EngineOptions, PagedKVCache
+
+PS = 2          # page size used by the allocator-level tests
+
+
+def _cfg(name="llama3-8b"):
+    return dataclasses.replace(get_config(name).reduced(),
+                               compute_dtype="float32")
+
+
+def _kv(**over):
+    kw = dict(num_pages=20, page_size=PS, max_slots=4,
+              max_pages_per_seq=8, dtype=np.float32, shards=2,
+              prefix_cache=True)
+    kw.update(over)
+    return PagedKVCache(_cfg(), **kw)
+
+
+def _prompt(rnd, bases):
+    """A prompt sharing one of a few common prefixes (so hits, partial
+    hits and divergence all occur) plus a random tail."""
+    base = bases[rnd.randrange(len(bases))]
+    keep = rnd.randrange(len(base) + 1)
+    tail = [rnd.randrange(100, 200) for _ in range(rnd.randrange(1, 6))]
+    return list(base[:keep]) + tail
+
+
+# ---------------------------------------------------------------------------
+# refcount-conservation interpreter
+# ---------------------------------------------------------------------------
+
+def _free_victim(kv, live, slot, parked, rid_of, next_rid, mode):
+    """Preempt one live slot other than ``slot`` (engine analogue: a dry
+    shard frees a victim). Returns the victim or None."""
+    victims = [s for s in sorted(live) if s != slot]
+    if not victims:
+        return None
+    v = victims[0]
+    if mode == "offload" and int(kv.lens[v]) > 0 \
+            and rid_of[v] not in parked:
+        kv.offload_slot(v, rid_of[v])
+        parked[rid_of[v]] = (live[v], kv.shard_of_slot(v))
+    else:
+        kv.free_slot(v)
+    del live[v]
+    return v
+
+
+def _interleave(kv: PagedKVCache, ops, seed: int) -> None:
+    """Drive the allocator through one op schedule, mirroring the
+    engine's use of the protocol (admit -> chunked prefill with
+    ensure_private -> decode growth -> publish -> retire / preempt /
+    offload / restore), auditing conservation after every op."""
+    rnd = random.Random(seed)
+    bases = [tuple(rnd.randrange(1, 50) for _ in range(n))
+             for n in (6, 10, 14)]
+    live = {}            # slot -> written token list (length == lens)
+    pending = {}         # slot -> full prompt (prefill not finished)
+    parked = {}          # rid -> (written tokens, shard)
+    rid_of = {}          # slot -> rid of current occupant
+    next_rid = [0]
+
+    def ensure(slot, tokens):
+        """Engine._ensure analogue: grow, then privatise, preempting
+        victims while the shard is dry. False = gave up (self-victim)."""
+        while kv.slot_capacity(slot) < tokens:
+            if len(kv._slot_pages[slot]) >= kv.max_pages_per_seq:
+                return False
+            if kv.grow_slot(slot):
+                continue
+            if _free_victim(kv, live, slot, parked, rid_of,
+                            next_rid, "recompute") is None:
+                return False
+        while not kv.ensure_private(slot, tokens):
+            if _free_victim(kv, live, slot, parked, rid_of,
+                            next_rid, "recompute") is None:
+                return False
+        return True
+
+    for op, pick in ops:
+        if op == 0:                                   # admit
+            free = [s for s in range(kv.max_slots) if s not in live]
+            if not free:
+                continue
+            slot = free[pick % len(free)]
+            prompt = _prompt(rnd, bases)
+            if len(prompt) > kv.max_slot_tokens or \
+                    not kv.can_admit(len(prompt), kv.shard_of_slot(slot)):
+                continue
+            cached = kv.alloc_slot_prefix(slot, len(prompt), prompt)
+            assert 0 <= cached < len(prompt)
+            assert int(kv.lens[slot]) == cached
+            live[slot] = list(prompt[:cached])
+            pending[slot] = prompt
+            rid_of[slot] = next_rid[0]
+            next_rid[0] += 1
+        elif op == 1:                                 # prefill chunk
+            slots = [s for s in sorted(pending) if s in live]
+            if not slots:
+                continue
+            slot = slots[pick % len(slots)]
+            prompt, done = pending[slot], len(live[slot])
+            c = min(3, len(prompt) - done)
+            if c <= 0 or not ensure(slot, done + c):
+                pending.pop(slot, None)
+                continue
+            if slot not in live:                      # self-preempted
+                continue
+            live[slot].extend(prompt[done:done + c])
+            kv.lens[slot] += c
+            if len(live[slot]) == len(prompt):
+                del pending[slot]
+                kv.cache_slot_prefix(slot, live[slot])
+        elif op == 2:                                 # decode one token
+            slots = [s for s in sorted(live) if s not in pending]
+            if not slots:
+                continue
+            slot = slots[pick % len(slots)]
+            if not ensure(slot, int(kv.lens[slot]) + 1):
+                continue
+            if slot not in live:
+                continue
+            live[slot].append(rnd.randrange(200, 300))
+            kv.lens[slot] += 1
+        elif op == 3:                                 # retire (publish)
+            slots = [s for s in sorted(live) if s not in pending]
+            if not slots:
+                continue
+            slot = slots[pick % len(slots)]
+            kv.cache_slot_prefix(slot, live[slot])
+            kv.free_slot(slot)
+            del live[slot]
+        elif op == 4:                                 # preempt recompute
+            if not live:
+                continue
+            slot = sorted(live)[pick % len(live)]
+            kv.free_slot(slot)
+            del live[slot]
+            pending.pop(slot, None)
+        elif op == 5:                                 # preempt offload
+            slots = [s for s in sorted(live) if int(kv.lens[s]) > 0]
+            if not slots:
+                continue
+            slot = slots[pick % len(slots)]
+            kv.offload_slot(slot, rid_of[slot])
+            parked[rid_of[slot]] = (live[slot], kv.shard_of_slot(slot))
+            del live[slot]
+            pending.pop(slot, None)
+        else:                                         # restore
+            if not parked:
+                continue
+            rid = sorted(parked)[pick % len(parked)]
+            tokens, shard = parked[rid]
+            if not kv.can_restore(rid):
+                continue
+            free = [s for s in kv.slots_of(shard) if s not in live]
+            if not free:
+                continue
+            slot = free[pick % len(free)]
+            del parked[rid]
+            kv.restore_slot(rid, slot, len(tokens))
+            live[slot] = list(tokens)
+            rid_of[slot] = rid
+        # -- the property: conservation after every op ----------------
+        kv.check_integrity()
+        for s, written in live.items():
+            assert int(kv.lens[s]) == len(written)
+            assert kv.slot_capacity(s) >= len(written)
+    kv.check_integrity()
+
+
+def _schedule(example: int):
+    rnd = random.Random(example)
+    n = rnd.randrange(8, 45)
+    return [(rnd.randrange(7), rnd.randrange(8)) for _ in range(n)], \
+        rnd.randrange(2 ** 31)
+
+
+def test_refcount_conservation_interleavings():
+    """The acceptance property: 500+ deterministic random interleavings
+    (admit/prefill/decode/publish/retire/preempt/offload/restore) with
+    conservation audited after every op — no leaks, no double-frees, no
+    page dropped while another request or the trie references it."""
+    for example in range(120):
+        ops, seed = _schedule(example)
+        _interleave(_kv(), ops, seed)
+
+
+@pytest.mark.slow
+def test_refcount_conservation_interleavings_deep():
+    """The long tail of the same property — through 500+ total examples
+    (with the fast tier above) including single-shard and tiny-pool
+    variants where eviction and CoW-steal pressure is constant."""
+    for example in range(120, 400):
+        ops, seed = _schedule(example)
+        _interleave(_kv(), ops, seed)
+    for example in range(140):
+        ops, seed = _schedule(10_000 + example)
+        _interleave(_kv(shards=1, num_pages=8, max_slots=3), ops, seed)
+
+
+def test_refcount_conservation_hypothesis():
+    """Hypothesis fuzz over the same interpreter (optional in CI — the
+    deterministic tiers above are the floor)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=50, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(ops=st.lists(st.tuples(st.integers(0, 6), st.integers(0, 7)),
+                        min_size=1, max_size=40),
+           seed=st.integers(0, 2 ** 31 - 1))
+    def run(ops, seed):
+        _interleave(_kv(), ops, seed)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# CoW / trie unit tests (allocator level)
+# ---------------------------------------------------------------------------
+
+def _admit_publish(kv, slot, tokens):
+    """Admit + fully prefill + publish ``tokens`` on ``slot``."""
+    cached = kv.alloc_slot_prefix(slot, len(tokens), tokens)
+    kv.lens[slot] = len(tokens)
+    kv.cache_slot_prefix(slot, tokens)
+    return cached
+
+
+def test_hit_binds_published_pages_and_caps_at_len_minus_1():
+    kv = _kv(shards=1)
+    base = list(range(1, 9))                    # 8 tokens = 4 pages
+    _admit_publish(kv, 0, base)
+    first = list(kv._slot_pages[0])
+    # identical prompt: full-page hits capped at len-1 (one token must
+    # always prefill to produce the first-sample logits)
+    cached = kv.alloc_slot_prefix(1, len(base), base)
+    assert cached == len(base) - 1              # 7: mid-page boundary
+    assert kv._slot_pages[1][:3] == first[:3]   # pages 0..2 shared
+    assert kv._slot_pages[1][3] == first[3]     # partial page 3 shared
+    assert kv.prefix_hits == 1 and kv.prefix_hit_tokens == 7
+    # longer prompt sharing the prefix: hit is page-aligned full pages
+    cached = kv.alloc_slot_prefix(2, 10, base + [91, 92])
+    assert cached == 8 and kv._slot_pages[2][:4] == first
+    kv.check_integrity()
+
+
+def test_page_aligned_flag_floors_the_hit():
+    kv = _kv()
+    base = list(range(1, 9))
+    _admit_publish(kv, 0, base)
+    cached = kv.alloc_slot_prefix(1, len(base), base, page_aligned=True)
+    assert cached == 6                          # floor(7 / PS) * PS
+    assert int(kv.lens[1]) == 6
+    kv.check_integrity()
+
+
+def test_cow_copies_shared_page_bit_exactly():
+    kv = _kv()
+    base = list(range(1, 9))
+    _admit_publish(kv, 0, base)
+    # give the shared pages distinguishable content
+    rng = np.random.default_rng(0)
+    host = jax.tree_util.tree_map(
+        lambda leaf: rng.standard_normal(
+            (leaf.shape[0], 4) + leaf.shape[2:]).astype(leaf.dtype),
+        kv_cache.extract_pages(kv.pools, kv._slot_pages[0]))
+    kv.pools = kv_cache.insert_pages(kv.pools, kv._slot_pages[0], host)
+    cached = kv.alloc_slot_prefix(1, len(base), base)
+    shared = kv._slot_pages[1][3]
+    assert kv._refs[shared] >= 2
+    assert kv.ensure_private(1, cached + 1)
+    fresh = kv._slot_pages[1][3]
+    assert fresh != shared and kv.prefix_cow_copies == 1
+    got = kv_cache.extract_pages(kv.pools, [fresh])
+    want = kv_cache.extract_pages(kv.pools, [shared])
+    jax.tree_util.tree_map(
+        lambda g, w: np.testing.assert_array_equal(g, w), got, want)
+    # slot 0 and the trie still hold the original — nothing trimmed
+    assert kv._slot_pages[0][3] == shared
+    kv.check_integrity()
+
+
+def test_cow_steals_trie_entry_when_pool_dry():
+    # one shard, pool sized so the second slot's CoW finds no free page
+    kv = _kv(shards=1, num_pages=6, max_slots=2, max_pages_per_seq=5)
+    base = [1, 2, 3, 4]
+    _admit_publish(kv, 0, base)
+    kv.free_slot(0)                             # trie keeps the pages
+    cached = kv.alloc_slot_prefix(0, len(base), base)   # 3 tokens hit
+    assert cached == 3
+    # drain the free list so the CoW target take must fail
+    while kv._free_by_shard[0]:
+        kv._free_by_shard[0].pop()
+        kv.num_pages  # keep linters quiet about the loop body
+    held = len(kv._free_by_shard[0])
+    assert held == 0
+    before = kv.prefix_cow_copies
+    assert kv.ensure_private(0, cached + 1)     # steals, does not copy
+    assert kv.prefix_cow_copies == before
+    assert int(kv._refs[kv._slot_pages[0][1]]) == 1
+
+
+def test_eviction_is_lru_and_trie_only():
+    kv = _kv(shards=1, num_pages=10, max_slots=4, max_pages_per_seq=4)
+    a, b = list(range(1, 9)), list(range(11, 19))   # 4 pages each
+    _admit_publish(kv, 0, a)
+    kv.free_slot(0)
+    _admit_publish(kv, 0, b)
+    kv.free_slot(0)                             # trie: a (older), b
+    kv.alloc_slot_prefix(0, len(b), b)          # rebind b: pool is full
+    b_pages = list(kv._slot_pages[0])
+    assert len(kv._free_by_shard[0]) == 1       # 9 usable - 4 - 4
+    # demand 2 fresh pages: the second take must evict — and it must
+    # pick from a's trie-only (refs==1) pages, never b's bound ones
+    kv.alloc_slot(1, 4)
+    assert kv.prefix_evicted_pages >= 1
+    assert kv._slot_pages[0] == b_pages         # b survived, still bound
+    assert all(int(kv._refs[p]) == 2 for p in b_pages)
+    kv.check_integrity()
+
+
+def test_preemption_never_drops_shared_pages():
+    kv = _kv(shards=1, num_pages=20, max_slots=4)
+    base = list(range(1, 9))
+    _admit_publish(kv, 0, base)
+    kv.alloc_slot_prefix(1, len(base), base)    # victim-to-be shares
+    shared = [p for p in kv._slot_pages[1] if int(kv._refs[p]) >= 2]
+    assert shared
+    # recompute-preempt the survivor's sharer: refs drop, pages survive
+    kv.free_slot(1)
+    for p in shared:
+        assert int(kv._refs[p]) >= 1
+        assert p not in kv._free_by_shard[0]
+    # offload-preempt the original owner: the trim must deref, not free
+    kv.offload_slot(0, rid=7)
+    for p in shared:
+        assert int(kv._refs[p]) == 1            # trie still holds them
+        assert p not in kv._free_by_shard[0]
+    kv.check_integrity()
+    # restore round-trips onto fresh pages without disturbing the trie
+    kv.restore_slot(7, 0, len(base))
+    kv.check_integrity()
+
+
+def test_match_prefix_is_shard_local():
+    kv = _kv(shards=2, num_pages=24)
+    base = list(range(1, 9))
+    slot0 = kv.slots_of(0)[0]
+    _admit_publish(kv, slot0, base)             # published on shard 0
+    shard, cached = kv.match_prefix(base + [50], 9)
+    assert shard == 0 and cached == 8
+    # restricted to shard 1 there is no hit
+    shard, cached = kv.match_prefix(base + [50], 9, candidates=[1])
+    assert shard is None and cached == 0
+    # and a shard-1 slot's admission cannot use shard 0's pages
+    slot1 = kv.slots_of(1)[0]
+    assert kv.alloc_slot_prefix(slot1, 9, base + [50]) == 0
+    kv.check_integrity()
+
+
+def test_prefix_off_is_refcount_free():
+    """With prefix_cache off every counter stays 0, refcounts stay <= 1
+    and free accounting equals the raw free lists (the off path must be
+    bit-identical to the pre-prefix allocator)."""
+    kv = _kv(prefix_cache=False)
+    base = list(range(1, 9))
+    assert kv.alloc_slot_prefix(0, len(base), base) == 0
+    kv.lens[0] = len(base)
+    kv.cache_slot_prefix(0, base)               # no-op
+    assert kv.match_prefix(base, 8) == (None, 0)
+    assert kv.ensure_private(0, 9)
+    assert not kv._node_of_page and kv.prefix_hits == 0
+    assert all(int(r) <= 1 for r in kv._refs)
+    for s in range(kv.n_shards):
+        assert kv.free_pages_of(s) == len(kv._free_by_shard[s])
+    kv.free_slot(0)
+    kv.check_integrity()
+
+
+# ---------------------------------------------------------------------------
+# pool-level accounting (the shared-page double-count bugfix)
+# ---------------------------------------------------------------------------
+
+def test_shared_pages_count_once_in_pool_accounting():
+    """Two full-hit requests must report ~1x the pages of one: shared
+    pages count once in used/held/peak accounting (pool-level), and a
+    slot's exclusive held_bytes excludes pages another slot shares."""
+    kv = _kv(shards=1, num_pages=20)
+    base = list(range(1, 9))                    # 4 pages
+    _admit_publish(kv, 0, base)
+    kv.free_slot(0)
+    solo = _kv(shards=1, num_pages=20)
+    _admit_publish(solo, 0, base)
+    one = solo.used_pages_of(0)
+    # two full-hit requests over the published prefix
+    kv.alloc_slot_prefix(0, len(base), base)
+    kv.alloc_slot_prefix(1, len(base), base)
+    both = kv.used_pages_of(0)
+    # 4 shared + one private CoW-boundary page each at most
+    assert both <= one + 2
+    assert kv.used_pages == both
+    # held_bytes: the shared pages are attributed to no slot
+    assert kv.held_bytes(0) == 0 and kv.held_bytes(1) == 0
+    # peak tracking follows physical pages, not per-slot sums
+    assert kv.peak_used_pages <= 20 - 1
+    assert kv.per_device_peak_used_bytes == \
+        kv.peak_used_pages * kv.page_bytes
+    kv.check_integrity()
+
+
+# ---------------------------------------------------------------------------
+# engine-level token exactness: prefix on == off, bit for bit
+# ---------------------------------------------------------------------------
+
+def _engine_outputs(cfg, params, prefix, waves, *, storm=0, preempt="auto",
+                    num_pages=0, max_new=6):
+    eng = Engine(cfg, params, options=EngineOptions(
+        page_size=4, max_slots=4, max_seq_len=64, chunk=16, min_bucket=8,
+        adaptive=True, prefix_cache=prefix, storm_every=storm,
+        preempt=preempt, num_pages=num_pages))
+    outs = []
+    for wave in waves:
+        reqs = [eng.submit(np.asarray(p, np.int32), max_new_tokens=max_new,
+                           arrival_s=0.0) for p in wave]
+        eng.run_until_idle()
+        outs.extend(list(r.output) for r in reqs)
+    if eng.kv.prefix_enabled:
+        eng.kv.check_integrity()
+    return outs, eng
+
+
+def _waves(vocab, seed=3):
+    rnd = np.random.default_rng(seed)
+    shared = rnd.integers(1, vocab, size=16).astype(np.int32)
+    w1 = [np.concatenate([shared, rnd.integers(1, vocab, size=k)
+                          .astype(np.int32)]) for k in (3, 5)]
+    # warm wave: full-prefix resubmits (mid-page hit -> CoW) and longer
+    # continuations of the published prefix
+    w2 = [shared.copy(), shared.copy(),
+          np.concatenate([shared, rnd.integers(1, vocab, size=2)
+                          .astype(np.int32)])]
+    return [w1, w2]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["moe-gpt3-s", "deepseek-v2-lite-16b",
+                                  "jamba-1.5-large-398b"])
+def test_prefix_on_off_token_exact(arch):
+    """Same trace, prefix on vs off: bit-identical tokens. Covers plain
+    paged KV, the MLA latent cache, and the composite (jamba) cache —
+    which degrades prefix to off and must still match exactly."""
+    cfg = dataclasses.replace(
+        get_config(arch).reduced(), compute_dtype="float32")
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    waves = _waves(cfg.vocab_size)
+    off, _ = _engine_outputs(cfg, params, "off", waves)
+    on, eng = _engine_outputs(cfg, params, "on", waves)
+    assert on == off
+    s = eng.stats()
+    if eng.cache_kind == "paged":
+        assert s["prefix_hits"] >= 3 and s["prefix_hit_tokens"] >= 30
+        assert s["prefix_cow_copies"] >= 1     # full-prefix resubmits
+    else:
+        assert not eng.kv.prefix_enabled and s["prefix_hits"] == 0
+
+
+@pytest.mark.slow
+def test_prefix_storm_token_exact():
+    """Forced preemption storm with shared pages in flight: victims
+    share pages with survivors, so recompute/offload preemption runs
+    straight through the CoW/refcount machinery — tokens must still be
+    bit-identical to the storm with the prefix cache off."""
+    cfg = dataclasses.replace(
+        get_config("moe-gpt3-s").reduced(), compute_dtype="float32")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    waves = _waves(cfg.vocab_size, seed=11)
+    for preempt in ("auto", "offload"):
+        off, eoff = _engine_outputs(cfg, params, "off", waves,
+                                    storm=3, preempt=preempt)
+        on, eon = _engine_outputs(cfg, params, "on", waves,
+                                  storm=3, preempt=preempt)
+        assert on == off
+        total = (eon.preempts["recompute"] + eon.preempts["offload"])
+        assert total >= 2, "storm did not preempt"

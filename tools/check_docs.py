@@ -47,10 +47,11 @@ REQUIRED_DOCS = ("README.md", "docs/architecture.md", "docs/serving.md",
 REQUIRED_FLAGS = {
     "benchmarks/serving.py": ("--devices", "--smoke", "--overload",
                               "--kv-sharding", "--compare-arch",
-                              "--obs-overhead", "--attn-kernel-compare"),
+                              "--obs-overhead", "--attn-kernel-compare",
+                              "--prefix-cache-compare"),
     "-m repro.launch.serve": ("--devices", "--engine", "--kv-sharding",
                               "--arch", "--metrics-port", "--trace-out",
-                              "--attn-kernel"),
+                              "--attn-kernel", "--prefix-cache"),
 }
 
 

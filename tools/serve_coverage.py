@@ -37,6 +37,7 @@ DEFAULT_TESTS = ["tests/test_serving.py", "tests/test_preemption.py",
                  "tests/test_serving_sharded.py",
                  "tests/test_state_cache.py", "tests/test_obs.py",
                  "tests/test_paged_attention.py",
+                 "tests/test_prefix_cache.py",
                  "-m", "not slow", "-q"]
 
 
