@@ -92,6 +92,20 @@ pages per distinct physical page) — see ``docs/serving.md``:
     PYTHONPATH=src python benchmarks/serving.py --prefix-cache-compare \
         --smoke
 
+``--ingress-loadgen`` runs the HTTP ingress scenario (default out:
+``BENCH_serving_ingress.json``): calibrate the sustainable rate with
+the in-process replay path, then drive the same trace through the real
+asyncio HTTP/SSE ingress tier (``repro.serve.ingress``) with a
+closed-loop client fleet at 1x/2x/4x that rate, once per shed policy —
+no shedding, ``reject`` (429 + Retry-After) and ``degrade``
+(``max_new_tokens`` clamp) — reporting SLO-goodput per leg (SLO = the
+unshedded 1x leg's median client-side TTFT). Hard invariant: every
+token streamed over SSE is checked against the in-process replay
+outputs (degraded streams as a prefix) — see ``docs/serving.md``:
+
+    PYTHONPATH=src python benchmarks/serving.py --ingress-loadgen \
+        --smoke
+
 Every scenario's JSON also embeds a full ``repro.obs`` registry
 snapshot under ``"telemetry"``.
 """
@@ -938,6 +952,202 @@ def _print_prefix(res: dict) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Ingress load-generation scenario (--ingress-loadgen)
+# ---------------------------------------------------------------------------
+
+def run_ingress_loadgen(*, arch: str, requests: int, slots: int,
+                        chunk: int, page_size: int, prompt_max: int,
+                        gen_max: int, seed: int, hw_name: str,
+                        factors=(1.0, 2.0, 4.0),
+                        num_clients: int = 12) -> dict:
+    """Closed-loop client fleet over the real HTTP/SSE ingress tier.
+
+    Calibrate the sustainable rate by draining the trace as a burst
+    through the in-process replay path, then drive the same trace over
+    real sockets at ``factors`` x that rate — once per shed policy
+    ("none" = an admission bound that never binds, then "reject" and
+    "degrade" with a tight bound) — and report SLO-goodput per leg
+    (tokens/s of requests whose client-side TTFT met the 1x baseline's
+    median). Hard invariant: every streamed token is checked against
+    the in-process replay outputs — completed streams exactly,
+    degraded streams as a prefix; rejected streams contribute nothing.
+    """
+    import threading
+    import time
+
+    from repro.obs import quantile
+    from repro.serve import IngressClient, IngressOptions, IngressServer
+
+    cfg = _golden_cfg(arch)
+    hw = resolve_hw(hw_name)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    common = dict(page_size=page_size, max_slots=slots,
+                  max_seq_len=prompt_max + gen_max, chunk=chunk, hw=hw)
+    # The overload window must be long enough for queue buildup (the
+    # thing shedding protects against) to dominate per-request jitter:
+    # stretch short traces to at least 8 slots' worth of requests.
+    requests = max(requests, 8 * slots)
+    # Deliberately decode-dominant: single-chunk prompts and long
+    # decodes, so clamping max_new under `degrade` sheds real work (a
+    # prefill-heavy mix would leave the degraded leg just as overloaded
+    # as the unshedded one).
+    trace = poisson_trace(requests, rate=1.0, vocab_size=cfg.vocab_size,
+                          prompt_len_range=(4, max(4, min(prompt_max,
+                                                          chunk))),
+                          gen_len_range=(max(4, (3 * gen_max) // 4),
+                                         gen_max),
+                          seed=seed)
+
+    # sustainable rate + golden outputs, both from the in-process
+    # replay path the SSE streams must match bit for bit
+    cal = Engine(cfg, params, options=EngineOptions(**common))
+    cal.warmup()
+    t0 = time.perf_counter()
+    replay(cal, trace, time_scale=0.0)
+    cal_wall = time.perf_counter() - t0
+    sustainable = requests / cal_wall
+    refs = [r.output for r in sorted(cal.done, key=lambda r: r.rid)]
+
+    admission = max(2, slots)
+    exact = [True]
+
+    def fleet(policy: str, rate: float):
+        """One leg: fresh engine + ingress, num_clients workers
+        issuing the trace entries at their rescaled arrival times."""
+        opts = IngressOptions(
+            admission_queue=(10 * requests if policy == "none"
+                             else admission),
+            shed_policy=("reject" if policy == "none" else policy),
+            degrade_max_new=max(1, gen_max // 4))
+        engine = Engine(cfg, params, options=EngineOptions(**common))
+        engine.warmup()
+        srv = IngressServer(engine, options=opts).start()
+        results = [None] * len(trace)
+        pending = iter(range(len(trace)))
+        lock = threading.Lock()
+        t_leg = time.perf_counter()
+
+        def worker():
+            cli = IngressClient(srv.host, srv.port, timeout=300.0)
+            while True:
+                with lock:
+                    i = next(pending, None)
+                if i is None:
+                    return
+                e = trace[i]
+                delay = (e.arrival_s / rate
+                         - (time.perf_counter() - t_leg))
+                if delay > 0:
+                    time.sleep(delay)
+                results[i] = cli.generate(
+                    e.prompt, max_new_tokens=e.max_new_tokens)
+
+        workers = [threading.Thread(target=worker, daemon=True)
+                   for _ in range(num_clients)]
+        for w in workers:
+            w.start()
+        for w in workers:
+            w.join()
+        wall = time.perf_counter() - t_leg
+        srv.stop()
+        snap = engine.obs.registry.snapshot()
+        return results, wall, snap
+
+    def summarize(policy: str, factor: float, results, wall, snap):
+        completed = rejected = degraded = tokens = 0
+        per_req = []                     # (client ttft, token count)
+        for i, res in enumerate(results):
+            if res.status == 429:
+                rejected += 1
+                continue
+            if res.status != 200:
+                exact[0] = False         # nothing else may fail here
+                continue
+            ref = refs[i]
+            if res.degraded:
+                degraded += 1
+                ok = bool(res.tokens) and res.tokens == ref[:len(
+                    res.tokens)]
+            else:
+                ok = res.tokens == ref
+            if not ok:
+                exact[0] = False
+            completed += 1
+            tokens += len(res.tokens)
+            per_req.append((res.ttft_s, len(res.tokens)))
+        ttfts = [t for t, _ in per_req]
+        return {
+            "policy": policy, "factor": factor,
+            "rate_req_s": factor * sustainable, "wall_s": wall,
+            "completed": completed, "rejected": rejected,
+            "degraded": degraded, "tokens": tokens,
+            "tokens_per_s": tokens / wall,
+            "p50_ttft_s": quantile(ttfts, 50.0),
+            "p99_ttft_s": quantile(ttfts, 99.0),
+            "ingress": {k: v for k, v in snap.items()
+                        if k.startswith("repro_ingress")},
+            "_per_req": per_req,
+        }
+
+    legs = []
+    for factor in factors:
+        for policy in ("none", "reject", "degrade"):
+            results, wall, snap = fleet(policy, factor * sustainable)
+            legs.append(summarize(policy, factor, results, wall, snap))
+
+    # SLO = twice the unshedded 1x leg's median client-side TTFT
+    # ("within 2x unloaded latency"); goodput of every leg is measured
+    # against that one bar
+    slo = 2.0 * next(l["p50_ttft_s"] for l in legs
+                     if l["policy"] == "none" and l["factor"] == factors[0])
+    for leg in legs:
+        good = sum(n for t, n in leg.pop("_per_req") if t <= slo)
+        leg["goodput_tok_s"] = good / leg["wall_s"]
+    by = {(l["policy"], l["factor"]): l for l in legs}
+    ratios = {
+        pol: (by[(pol, 2.0)]["goodput_tok_s"]
+              / max(by[("none", 2.0)]["goodput_tok_s"], 1e-12))
+        for pol in ("reject", "degrade")
+        if (pol, 2.0) in by and ("none", 2.0) in by}
+    return {
+        "scenario": "ingress_loadgen",
+        "arch": cfg.name,
+        "hw": hw.name,
+        "requests": requests,
+        "slots": slots,
+        "chunk": chunk,
+        "page_size": page_size,
+        "num_clients": num_clients,
+        "admission_queue": admission,
+        "factors": list(factors),
+        "sustainable_req_s": sustainable,
+        "slo_ttft_s": slo,
+        "token_exact": exact[0],
+        "legs": legs,
+        "goodput_vs_none_at_2x": ratios,
+        "telemetry": cal.obs.registry.snapshot(),
+    }
+
+
+def _print_ingress(res: dict) -> None:
+    print(f"\ningress_loadgen: {res['arch']} on {res['hw']}, "
+          f"{res['requests']} requests over HTTP/SSE x "
+          f"{res['num_clients']} clients, sustainable "
+          f"{res['sustainable_req_s']:.2f} req/s, SLO "
+          f"ttft<={res['slo_ttft_s']*1e3:.0f}ms")
+    for leg in res["legs"]:
+        print(f"  {leg['policy']:7s} @ {leg['factor']:.0f}x: goodput "
+              f"{leg['goodput_tok_s']:8.1f} tok/s | done "
+              f"{leg['completed']:3d} rej {leg['rejected']:3d} deg "
+              f"{leg['degraded']:3d} | ttft p50 "
+              f"{leg['p50_ttft_s']*1e3:6.0f}ms p99 "
+              f"{leg['p99_ttft_s']*1e3:6.0f}ms")
+    for pol, ratio in sorted(res["goodput_vs_none_at_2x"].items()):
+        print(f"  goodput {pol}/none @ 2x: {ratio:.2f}x")
+    print(f"  token-exact vs in-process replay: {res['token_exact']}")
+
+
+# ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
 
@@ -1046,6 +1256,14 @@ def main():
                          "hit rate, TTFT p50/p99 and the effective "
                          "capacity ratio (out defaults to "
                          "BENCH_prefix_cache.json)")
+    ap.add_argument("--ingress-loadgen", action="store_true",
+                    help="HTTP ingress scenario: a closed-loop client "
+                         "fleet drives the asyncio SSE ingress at "
+                         "1x/2x/4x the calibrated sustainable rate "
+                         "under each shed policy, reporting SLO-goodput "
+                         "and checking every streamed token against the "
+                         "in-process replay path (out defaults to "
+                         "BENCH_serving_ingress.json)")
     ap.add_argument("--obs-overhead", action="store_true",
                     help="telemetry scenario: the same burst with "
                          "telemetry off vs span tracer + live /metrics "
@@ -1062,10 +1280,16 @@ def main():
 
     if sum(map(bool, (args.overload, args.devices, args.compare_arch,
                       args.obs_overhead, args.attn_kernel_compare,
-                      args.prefix_cache_compare))) > 1:
+                      args.prefix_cache_compare,
+                      args.ingress_loadgen))) > 1:
         ap.error("--overload, --devices, --compare-arch, "
-                 "--obs-overhead, --attn-kernel-compare and "
-                 "--prefix-cache-compare are separate scenarios")
+                 "--obs-overhead, --attn-kernel-compare, "
+                 "--prefix-cache-compare and --ingress-loadgen are "
+                 "separate scenarios")
+    if args.ingress_loadgen and args.preempt is not None:
+        ap.error("--ingress-loadgen drives the default policy over an "
+                 "ample pool (the cancel/shed machinery, not "
+                 "preemption, is under test); --preempt does not apply")
     if args.prefix_cache_compare and args.preempt is not None:
         ap.error("--prefix-cache-compare compares cache legs on the "
                  "default policy (the conformance matrix covers the "
@@ -1101,19 +1325,25 @@ def main():
         kw[name] = profile[name] if v is None else v
     if (args.overload or args.devices or args.compare_arch
             or args.obs_overhead or args.attn_kernel_compare
-            or args.prefix_cache_compare):
+            or args.prefix_cache_compare or args.ingress_loadgen):
         # these scenarios drive their own arrivals over the constrained-
-        # pool sizing profile
+        # pool sizing profile (the ingress fleet keeps the standard
+        # sizing — its pressure comes from the admission queue)
         if args.rate is not None or args.time_scale != 1.0:
             ap.error("--overload/--devices/--compare-arch/--obs-overhead"
-                     "/--attn-kernel-compare/--prefix-cache-compare "
-                     "drive their own arrivals; --rate/--time-scale do "
-                     "not apply")
+                     "/--attn-kernel-compare/--prefix-cache-compare/"
+                     "--ingress-loadgen drive their own arrivals; "
+                     "--rate/--time-scale do not apply")
         kw.pop("rate")
-        for name, v in over["smoke" if args.smoke else "full"].items():
-            if getattr(args, name) is None:
-                kw[name] = v
-    if args.prefix_cache_compare:
+        if not args.ingress_loadgen:
+            for name, v in over["smoke" if args.smoke else "full"].items():
+                if getattr(args, name) is None:
+                    kw[name] = v
+    if args.ingress_loadgen:
+        out = args.out or "BENCH_serving_ingress.json"
+        res = run_ingress_loadgen(**kw)
+        _print_ingress(res)
+    elif args.prefix_cache_compare:
         out = args.out or "BENCH_prefix_cache.json"
         res = run_prefix_compare(**kw)
         _print_prefix(res)

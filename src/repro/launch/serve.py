@@ -40,6 +40,16 @@ Telemetry (engine path only; see docs/observability.md):
 for the duration of the run, and ``--trace-out PATH`` records
 engine/request/resolver spans and writes a Perfetto-loadable Chrome
 trace-event JSON at shutdown.
+
+``--http-port`` (engine path only) swaps the Poisson replay for the
+asyncio HTTP/SSE ingress tier (``repro.serve.ingress``): real clients
+``POST /generate`` and stream tokens back per decode step; client
+disconnects cancel their request; ``--shed-policy`` /
+``--admission-queue`` configure overload shedding. Serves until
+interrupted —
+
+    PYTHONPATH=src python -m repro.launch.serve --engine \\
+        --http-port 8080 --shed-policy degrade --admission-queue 16
 """
 from __future__ import annotations
 
@@ -111,10 +121,12 @@ def legacy_loop(args, cfg, hw):
               f"(stopped early: {int(done.sum())})")
 
 
-def engine_loop(args, cfg, hw):
+def _engine_setup(args, cfg, hw):
+    """Shared by the replay and ingress engine paths: servability
+    check, recorder, EngineOptions from the CLI."""
     from repro.models.api import serving_support
-    from repro.obs import MetricsServer, Recorder, Tracer
-    from repro.serve import EngineOptions, SamplingParams, run_poisson
+    from repro.obs import Recorder, Tracer
+    from repro.serve import EngineOptions
 
     kind, why = serving_support(cfg)
     if kind is None:
@@ -129,6 +141,53 @@ def engine_loop(args, cfg, hw):
                          kv_sharding=args.kv_sharding,
                          attn_kernel=args.attn_kernel,
                          prefix_cache=args.prefix_cache, obs=obs)
+    return obs, opts
+
+
+def ingress_loop(args, cfg, hw):
+    """Serve real HTTP/SSE clients until interrupted (no trace replay)."""
+    from repro.obs import MetricsServer
+    from repro.serve import Engine, IngressOptions, IngressServer
+
+    obs, opts = _engine_setup(args, cfg, hw)
+    engine = Engine(cfg, None, options=opts)
+    engine.warmup()
+    server = None
+    if args.metrics_port >= 0:
+        server = MetricsServer(obs.registry, port=args.metrics_port,
+                               refresh=engine._refresh_gauges).start()
+        print(f"metrics: {server.url}/metrics")
+    ingress = IngressServer(engine, options=IngressOptions(
+        port=args.http_port, shed_policy=args.shed_policy,
+        admission_queue=args.admission_queue)).start()
+    print(f"ingress: {ingress.url} — POST /generate streams SSE "
+          f"(shed={args.shed_policy}, "
+          f"admission_queue={args.admission_queue}); ^C to stop")
+    try:
+        while True:
+            time.sleep(1.0)
+    except KeyboardInterrupt:
+        print("draining...")
+    finally:
+        ingress.stop()
+        if server is not None:
+            server.stop()
+    if args.trace_out:
+        obs.tracer.write(args.trace_out)
+        print(f"trace: {args.trace_out} "
+              f"(load in https://ui.perfetto.dev)")
+    s = engine.stats()
+    print(f"served {s['requests_done']} requests "
+          f"({s['requests_cancelled']} cancelled: "
+          f"{s['cancelled_by_stage']}), "
+          f"{s['tokens_generated']} tokens in {s['engine_steps']} steps")
+
+
+def engine_loop(args, cfg, hw):
+    from repro.obs import MetricsServer
+    from repro.serve import SamplingParams, run_poisson
+
+    obs, opts = _engine_setup(args, cfg, hw)
     sampling = None
     if args.temperature > 0:
         sampling = SamplingParams(temperature=args.temperature,
@@ -281,6 +340,21 @@ def main():
                     help="engine: record spans and write a "
                          "Perfetto-loadable Chrome trace-event JSON "
                          "here at shutdown ('' = tracing off)")
+    ap.add_argument("--http-port", type=int, default=-1,
+                    help="engine: serve the HTTP/SSE ingress tier on "
+                         "this port instead of replaying a Poisson "
+                         "trace — POST /generate streams one SSE event "
+                         "per generated token, client disconnects "
+                         "cancel their request (0 = pick a free port, "
+                         "printed at startup; -1 = disabled)")
+    ap.add_argument("--shed-policy", default="reject",
+                    choices=["reject", "degrade"],
+                    help="ingress: behaviour past --admission-queue — "
+                         "'reject' answers 429 with Retry-After, "
+                         "'degrade' admits with max_new_tokens clamped")
+    ap.add_argument("--admission-queue", type=int, default=8,
+                    help="ingress: bound on requests accepted but not "
+                         "yet finished before load shedding kicks in")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -302,10 +376,19 @@ def main():
     if args.prefix_cache != "off" and not args.engine:
         ap.error("--prefix-cache enables the engine's cross-request "
                  "prefix cache; add --engine")
+    if args.http_port >= 0 and not args.engine:
+        ap.error("--http-port serves the continuous-batching engine "
+                 "over HTTP/SSE; add --engine")
+    if args.http_port < 0 and (args.shed_policy != "reject"
+                               or args.admission_queue != 8):
+        ap.error("--shed-policy / --admission-queue configure the "
+                 "HTTP ingress tier; add --http-port")
     hw = resolve_hw(args.hw)
     print(f"hw spec: {hw.name}")
     cfg = get_config(args.arch).reduced()
-    if args.engine:
+    if args.engine and args.http_port >= 0:
+        ingress_loop(args, cfg, hw)
+    elif args.engine:
         engine_loop(args, cfg, hw)
     else:
         legacy_loop(args, cfg, hw)

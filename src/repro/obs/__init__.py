@@ -28,12 +28,12 @@ from typing import Optional
 
 from .export import MetricsServer
 from .metrics import Counter, Gauge, Histogram, Registry, quantile
-from .trace import (NullTracer, PID_ENGINE, PID_REQUESTS, PID_RESOLVER,
-                    Tracer)
+from .trace import (NullTracer, PID_ENGINE, PID_INGRESS, PID_REQUESTS,
+                    PID_RESOLVER, Tracer)
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsServer",
-           "NullTracer", "PID_ENGINE", "PID_REQUESTS", "PID_RESOLVER",
-           "Recorder", "Registry", "Tracer", "quantile"]
+           "NullTracer", "PID_ENGINE", "PID_INGRESS", "PID_REQUESTS",
+           "PID_RESOLVER", "Recorder", "Registry", "Tracer", "quantile"]
 
 
 class Recorder:

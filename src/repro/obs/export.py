@@ -39,6 +39,7 @@ class MetricsServer:
         self._thread = threading.Thread(
             target=self._httpd.serve_forever, name="obs-metrics",
             daemon=True)
+        self._stopped = False
         self.host = host
         self.port = int(self._httpd.server_address[1])
 
@@ -60,11 +61,16 @@ class MetricsServer:
                 else:
                     self.send_error(404)
                     return
-                self.send_response(200)
-                self.send_header("Content-Type", ctype)
-                self.send_header("Content-Length", str(len(body)))
-                self.end_headers()
-                self.wfile.write(body)
+                # a scraper may hang up mid-response (timeout, ^C):
+                # that is its business, not a handler-thread traceback
+                try:
+                    self.send_response(200)
+                    self.send_header("Content-Type", ctype)
+                    self.send_header("Content-Length", str(len(body)))
+                    self.end_headers()
+                    self.wfile.write(body)
+                except (BrokenPipeError, ConnectionResetError):
+                    pass
 
             def log_message(self, fmt, *args):
                 pass    # scrapes must not spam the serving console
@@ -76,9 +82,17 @@ class MetricsServer:
         return self
 
     def stop(self) -> None:
-        self._httpd.shutdown()
+        """Idempotent: every shutdown path (CLI finally-blocks, tests,
+        signal handlers) may call it without coordinating."""
+        if self._stopped:
+            return
+        self._stopped = True
+        # shutdown() blocks on an event only serve_forever() sets — on
+        # a server that was never start()ed it would wait forever
+        if self._thread.is_alive():
+            self._httpd.shutdown()
+            self._thread.join(timeout=5.0)
         self._httpd.server_close()
-        self._thread.join(timeout=5.0)
 
     @property
     def url(self) -> str:

@@ -30,15 +30,16 @@ import json
 import time
 from typing import Any, Dict, List, Optional
 
-__all__ = ["NullTracer", "Tracer", "PID_ENGINE", "PID_REQUESTS",
-           "PID_RESOLVER"]
+__all__ = ["NullTracer", "Tracer", "PID_ENGINE", "PID_INGRESS",
+           "PID_REQUESTS", "PID_RESOLVER"]
 
 PID_ENGINE = 1
 PID_REQUESTS = 2
 PID_RESOLVER = 3
+PID_INGRESS = 4
 
 _PROCESS_NAMES = {PID_ENGINE: "engine", PID_REQUESTS: "requests",
-                  PID_RESOLVER: "resolver"}
+                  PID_RESOLVER: "resolver", PID_INGRESS: "ingress"}
 
 
 def _now_us() -> float:

@@ -54,6 +54,13 @@ Module map
                   jit-stable temperature / top-k / top-p with
                   per-request seeded streams; host-side stop matching.
 ``trace.py``      Poisson arrival traces + wall-clock ``replay``.
+``ingress.py``    :class:`IngressServer` / :class:`IngressOptions` —
+                  asyncio HTTP/SSE front end: per-decode-step token
+                  streaming, bounded admission with ``reject`` /
+                  ``degrade`` load shedding, client-disconnect →
+                  ``Engine.cancel`` propagation; plus the blocking
+                  :class:`IngressClient` used by tests and the
+                  ``--ingress-loadgen`` benchmark.
 
 Telemetry: every engine carries a ``repro.obs.Recorder`` — a metrics
 registry ``stats()`` and the live ``/metrics`` exporter both read, plus
@@ -83,9 +90,12 @@ ever touch the sink page; a request's sampled tokens depend only on
 """
 from repro.serve.adaptive import PrefillBucketAdaptive, force_adaptive
 from repro.serve.engine import Engine, EngineOptions
+from repro.serve.ingress import (IngressClient, IngressOptions,
+                                 IngressServer, StreamResult)
 from repro.serve.paged_kv import PagedKVCache
 from repro.serve.request import Request, RequestState
-from repro.serve.sampling import SamplingParams, sample_tokens, stop_hit
+from repro.serve.sampling import (SamplingParams, normalize_stops,
+                                  sample_tokens, stop_hit)
 from repro.serve.scheduler import Scheduler
 from repro.serve.state_cache import (CompositeStateCache,
                                      ConstantStateCache, StateCache,
@@ -95,8 +105,10 @@ from repro.serve.trace import (TraceEntry, dense_greedy_reference,
 
 __all__ = [
     "CompositeStateCache", "ConstantStateCache", "Engine", "EngineOptions",
-    "PagedKVCache", "PrefillBucketAdaptive", "Request", "RequestState",
-    "SamplingParams", "Scheduler", "StateCache", "TraceEntry",
+    "IngressClient", "IngressOptions", "IngressServer", "PagedKVCache",
+    "PrefillBucketAdaptive", "Request", "RequestState", "SamplingParams",
+    "Scheduler", "StateCache", "StreamResult", "TraceEntry",
     "dense_greedy_reference", "force_adaptive", "make_state_cache",
-    "poisson_trace", "replay", "run_poisson", "sample_tokens", "stop_hit",
+    "normalize_stops", "poisson_trace", "replay", "run_poisson",
+    "sample_tokens", "stop_hit",
 ]

@@ -270,6 +270,10 @@ class Engine:
         # first preemption" capacity the DP-sharded benchmark reports
         self.peak_running_preempt_free = 0
         self.done: List[Request] = []
+        # cancelled requests are kept apart from ``done``: they carry a
+        # truncated output and (often) no tokens at all, so folding them
+        # into the latency/TTFT percentiles would corrupt the SLO story
+        self.cancelled: List[Request] = []
         self.metrics: Dict[str, Any] = {}
         self._init_metrics()
 
@@ -288,6 +292,9 @@ class Engine:
             "repro_prefill_tokens_total", "prompt tokens prefilled")
         self._m_preempts = reg.counter(
             "repro_preempts_total", "preemptions by mode", ["mode"])
+        self._m_cancels = reg.counter(
+            "repro_cancels_total",
+            "cancelled requests by lifecycle stage", ["stage"])
         self._m_jit = reg.counter(
             "repro_jit_traces_total",
             "XLA traces of the jitted step bodies", ["body"])
@@ -498,6 +505,34 @@ class Engine:
                 f"({self.kv.max_slot_tokens} tokens per slot)")
         self.scheduler.submit(req)
         return req
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel ``req`` from whatever lifecycle stage it is in,
+        releasing its slot, pages and/or host-offload snapshot. Returns
+        True if the request was live (now CANCELLED), False if it had
+        already finished — a race every disconnect path hits, so it is
+        not an error. NOT thread-safe: call between steps on the thread
+        driving the engine (the ingress tier routes client disconnects
+        through its engine-thread command queue for exactly this
+        reason)."""
+        if req.state in (RequestState.DONE, RequestState.CANCELLED):
+            return False
+        stage = self.scheduler.cancel(req)
+        req.state = RequestState.CANCELLED
+        req.finish_reason = "cancelled"
+        req.finish_s = time.perf_counter()
+        tracer = self.obs.tracer
+        if req.decode_span_open:
+            tracer.end("DECODE", pid=PID_REQUESTS, tid=req.rid)
+            req.decode_span_open = False
+        tracer.instant("CANCEL", pid=PID_REQUESTS, tid=req.rid,
+                       args={"stage": stage,
+                             "tokens": len(req.output)})
+        self._m_cancels.labels(stage=stage).inc()
+        self.cancelled.append(req)
+        if req.on_done is not None:
+            req.on_done(req)
+        return True
 
     @property
     def has_work(self) -> bool:
@@ -793,6 +828,10 @@ class Engine:
         free_fam = reg.get("repro_kv_free_units")
         return {
             "requests_done": len(self.done),
+            "requests_cancelled": len(self.cancelled),
+            "cancelled_by_stage": {
+                dict(c.labels)["stage"]: int(c.value)
+                for c in self._m_cancels.children()},
             "tokens_generated": sum(len(r.output) for r in self.done),
             "devices": 1 if self.dist is None else self.dist.mesh.size,
             "ep_size": 1 if self.dist is None else self.dist.ep_size,

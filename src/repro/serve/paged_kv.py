@@ -443,6 +443,12 @@ class PagedKVCache(StateCache):
         _, need, shard = self._offloaded[rid]
         return need <= self.free_pages_of(shard)
 
+    def drop_offload(self, rid: int) -> None:
+        """Discard a parked request's host pages (cancellation). The
+        device pages were freed back to the shard at offload time, so
+        nothing page-table-side changes — the snapshot just dies."""
+        del self._offloaded[rid]
+
     def restore_slot(self, rid: int, slot: int, tokens: int) -> int:
         """Swap a preempted request's pages back in: allocate fresh
         physical pages on the owning shard (the table re-maps), copy the

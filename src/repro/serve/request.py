@@ -2,7 +2,10 @@
 
 A request moves QUEUED -> PREFILL -> DECODE -> DONE, possibly bouncing
 through PREEMPTED (back to the scheduler's resume queue) any number of
-times when the paged KV pool runs dry. Tokens stream to the caller
+times when the paged KV pool runs dry. ``Engine.cancel`` can end a
+request from any non-terminal stage (client disconnect): it lands in
+CANCELLED with ``finish_reason="cancelled"`` and whatever tokens it had
+already produced. Tokens stream to the caller
 through ``on_token`` as they are produced; ``on_done`` fires once with
 the finished request. Stopping: per-request ``max_new_tokens``, optional
 ``eos_id`` and optional ``stop`` token sequences — all applied
@@ -36,6 +39,7 @@ class RequestState(enum.Enum):
     DECODE = "decode"
     PREEMPTED = "preempted"
     DONE = "done"
+    CANCELLED = "cancelled"            # terminal: client went away
 
 
 @dataclasses.dataclass
@@ -56,7 +60,7 @@ class Request:
     slot: int = -1                         # continuous-batch slot index
     prefill_pos: int = 0                   # source tokens already cached
     output: List[int] = dataclasses.field(default_factory=list)
-    finish_reason: str = ""                # "eos" | "length" | "stop"
+    finish_reason: str = ""    # "eos" | "length" | "stop" | "cancelled"
     first_token_s: float = 0.0
     finish_s: float = 0.0
     token_times: List[float] = dataclasses.field(default_factory=list)

@@ -29,7 +29,8 @@ import jax.numpy as jnp
 
 NEG_INF = -1.0e30
 
-__all__ = ["SamplingParams", "sample_tokens", "stop_hit"]
+__all__ = ["SamplingParams", "normalize_stops", "sample_tokens",
+           "stop_hit"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,17 +57,22 @@ def _sample_row(logits, temperature, top_k, top_p, seed, position):
     lg = logits.astype(jnp.float32)
     greedy = temperature <= 0.0
     scaled = lg / jnp.where(greedy, 1.0, temperature)
-    order = jnp.sort(scaled)[::-1]                       # descending
-    # top-k threshold: the k-th largest scaled logit (0 => keep all)
+    # rank in the descending sort, ties broken by vocab index (argsort
+    # is stable): the keep set is decided by rank, never by comparing
+    # against a threshold *value* — a value cut keeps every entry tied
+    # at the k-th logit, so top_k=1 over equal logits was not argmax
+    sort_idx = jnp.argsort(-scaled)
+    rank = jnp.zeros((v,), jnp.int32).at[sort_idx].set(
+        jnp.arange(v, dtype=jnp.int32))
+    order = scaled[sort_idx]                             # descending
+    # top-k width (0 => keep all)
     k_eff = jnp.clip(jnp.where(top_k <= 0, v, top_k), 1, v)
-    kth = order[k_eff - 1]
-    # top-p (nucleus) threshold: smallest prefix with mass >= top_p
+    # top-p (nucleus) width: smallest prefix with mass >= top_p
     p_eff = jnp.where((top_p <= 0.0) | (top_p >= 1.0), 1.0, top_p)
     probs = jax.nn.softmax(order)
     below = jnp.cumsum(probs) - probs                    # mass before each
     n_keep = jnp.maximum(jnp.sum(below < p_eff), 1)
-    pth = order[n_keep - 1]
-    masked = jnp.where(scaled >= jnp.maximum(kth, pth), scaled, NEG_INF)
+    masked = jnp.where(rank < jnp.minimum(k_eff, n_keep), scaled, NEG_INF)
     key = jax.random.fold_in(jax.random.PRNGKey(seed), position)
     sampled = jax.random.categorical(key, masked)
     return jnp.where(greedy, jnp.argmax(lg), sampled).astype(jnp.int32)

@@ -232,6 +232,47 @@ class Scheduler:
                              "cached_tokens": req.cached_tokens})
         return mode
 
+    # -- cancellation ----------------------------------------------------
+    def cancel(self, req: Request) -> str:
+        """Release everything ``req`` holds, from whatever lifecycle
+        stage it is in, and return that stage ("queued" | "prefill" |
+        "decode" | "preempted"). The engine (``Engine.cancel``) owns the
+        state transition, callbacks and telemetry; this method owns the
+        queue/slot/page bookkeeping:
+
+        * QUEUED — drop from the waiting queue (nothing allocated yet);
+        * PREFILL / DECODE — publish the completed full prefix pages
+          (later requests sharing the prompt still benefit; no-op with
+          the prefix cache off), then free the slot;
+        * PREEMPTED — drop from the resume queue; an offload victim's
+          host snapshot is discarded (its device pages were already
+          freed at offload time, so nothing device-side moves).
+        """
+        stage = req.state.value
+        if req.state == RequestState.QUEUED:
+            self.waiting.remove(req)
+        elif req.state in (RequestState.PREFILL, RequestState.DECODE):
+            slot = req.slot
+            assert self.running.get(slot) is req, \
+                f"request {req.rid} not running in slot {slot}"
+            self.kv.cache_slot_prefix(slot, req.prefill_tokens)
+            self.kv.free_slot(slot)
+            if slot in self._prefilling:
+                self._prefilling.remove(slot)
+            del self.running[slot]
+            req.slot = -1
+        elif req.state == RequestState.PREEMPTED:
+            self.resuming.remove(req)
+            if req.preempt_mode == "offload":
+                self.kv.drop_offload(req.rid)
+            req.preempt_mode = ""
+            req.cached_tokens = 0
+        else:
+            raise ValueError(
+                f"cancel of request {req.rid} in terminal state "
+                f"{req.state.value}")
+        return stage
+
     # -- step planning ---------------------------------------------------
     def decode_slots(self) -> List[int]:
         return [s for s, r in self.running.items()

@@ -183,6 +183,12 @@ class StateCache(abc.ABC):
     def can_restore(self, rid: int) -> bool:
         """Does the parked request's shard have room to restore now?"""
 
+    @abc.abstractmethod
+    def drop_offload(self, rid: int) -> None:
+        """Discard a parked request's host snapshot (cancellation — it
+        will never resume). Device state was already released at
+        ``offload_slot`` time, so this is pure host bookkeeping."""
+
     @property
     @abc.abstractmethod
     def offloaded_count(self) -> int:
@@ -537,6 +543,9 @@ class ConstantStateCache(StateCache):
         # shard can take it, and the caller only offers free slots
         return rid in self._offloaded
 
+    def drop_offload(self, rid: int) -> None:
+        del self._offloaded[rid]
+
     def restore_slot(self, rid: int, slot: int, tokens: int) -> int:
         host, shard = self._offloaded[rid]
         # validate before popping: a refused restore must not lose the
@@ -725,6 +734,10 @@ class CompositeStateCache(StateCache):
 
     def can_restore(self, rid: int) -> bool:
         return self.paged.can_restore(rid) and self.state.can_restore(rid)
+
+    def drop_offload(self, rid: int) -> None:
+        self.paged.drop_offload(rid)
+        self.state.drop_offload(rid)
 
     @property
     def offloaded_count(self) -> int:

@@ -114,6 +114,9 @@ def replay(engine, trace: List[TraceEntry], *, eos_id=None,
         if engine.has_work:
             engine.step()
         elif pending:
+            # idle until the next scheduled arrival, in one sleep — the
+            # 0.05 s cap keeps very long gaps responsive to wall-clock
+            # drift without degenerating into a 1 kHz busy-poll
             time.sleep(max(0.0, min(
-                0.001, pending[0].arrival_s * time_scale - now)))
+                0.05, pending[0].arrival_s * time_scale - now)))
     return requests

@@ -1,0 +1,189 @@
+"""Cancellation conformance (Engine.cancel / Scheduler.cancel): a
+request cancelled from every lifecycle stage — QUEUED, PREFILL
+mid-chunk, DECODE, PREEMPTED (recompute and offload) — must release
+everything it holds (queue entry, slot, pages, host snapshot), keep the
+page-refcount audit clean, and leave every surviving request
+token-exact vs the uncancelled golden run. Parametrized over
+prefix_cache on|off, since cancellation publishes completed prefix
+pages on the way out."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve import (Engine, EngineOptions, RequestState,
+                         dense_greedy_reference as ref_decode)
+
+PROMPT_LENS = (13, 29, 7, 21, 5)
+MAX_NEW = (6, 4, 8, 5, 7)
+
+pytestmark = pytest.mark.parametrize("prefix", ["off", "on"])
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              compute_dtype="float32")
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.Generator(np.random.Philox(key=7))
+    prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in PROMPT_LENS]
+    refs = [ref_decode(params, cfg, p, m)
+            for p, m in zip(prompts, MAX_NEW)]
+    return cfg, params, prompts, refs
+
+
+def _engine(cfg, params, prefix, **over):
+    kw = dict(page_size=4, max_slots=3, max_seq_len=64, chunk=16,
+              min_bucket=8, prefix_cache=prefix)
+    kw.update(over)
+    return Engine(cfg, params, options=EngineOptions(**kw))
+
+
+def _submit_all(eng, prompts):
+    return [eng.submit(p, max_new_tokens=m, arrival_s=0.0)
+            for p, m in zip(prompts, MAX_NEW)]
+
+
+def _step_until(eng, pred, limit=500):
+    """Step until ``pred()`` returns a truthy value (the victim)."""
+    for _ in range(limit):
+        eng.step()
+        got = pred()
+        if got:
+            return got
+    raise AssertionError("target lifecycle stage never reached")
+
+
+def _check_end_state(eng, reqs, refs, victims):
+    """Drain, audit the allocator, check the victims terminal and the
+    survivors bit-exact vs the uncancelled dense reference."""
+    eng.run_until_idle()
+    eng.kv.check_integrity()
+    assert not any(getattr(eng.kv, "_slot_pages", [])), "pages leaked"
+    for v in victims:
+        assert v.state == RequestState.CANCELLED
+        assert v.finish_reason == "cancelled"
+        assert v.slot == -1
+        # whatever it produced before dying is a prefix of its golden run
+        ref = refs[reqs.index(v)]
+        assert v.output == ref[:len(v.output)]
+    for r, ref in zip(reqs, refs):
+        if r in victims:
+            continue
+        assert r.state == RequestState.DONE
+        assert r.output == ref
+    assert eng.stats()["requests_cancelled"] == len(victims)
+
+
+def test_cancel_queued(setup, prefix):
+    cfg, params, prompts, refs = setup
+    eng = _engine(cfg, params, prefix)
+    reqs = _submit_all(eng, prompts)
+    victim = reqs[3]
+    assert victim.state == RequestState.QUEUED
+    assert eng.cancel(victim)
+    assert victim not in eng.scheduler.waiting
+    assert not victim.output                 # never produced a token
+    _check_end_state(eng, reqs, refs, [victim])
+    assert eng.stats()["cancelled_by_stage"] == {"queued": 1}
+
+
+def test_cancel_prefill_mid_chunk(setup, prefix):
+    cfg, params, prompts, refs = setup
+    eng = _engine(cfg, params, prefix)
+    reqs = _submit_all(eng, prompts)
+
+    def mid_prefill():
+        return next(
+            (r for r in reqs if r.state == RequestState.PREFILL
+             and 0 < int(eng.kv.lens[r.slot]) < len(r.prompt)), None)
+
+    victim = _step_until(eng, mid_prefill)
+    slot = victim.slot
+    assert eng.cancel(victim)
+    # the slot is back immediately, not at some later retirement
+    assert victim.slot == -1
+    assert slot not in eng.scheduler.running
+    assert slot not in eng.scheduler._prefilling
+    _check_end_state(eng, reqs, refs, [victim])
+    assert eng.stats()["cancelled_by_stage"] == {"prefill": 1}
+
+
+def test_cancel_prefill_publishes_prefix(setup, prefix):
+    """With the prefix cache on, a cancelled request's completed full
+    pages are published on the way out — a later identical prompt
+    skips that prefill work and still decodes bit-exact."""
+    if prefix == "off":
+        pytest.skip("prefix-cache path only")
+    cfg, params, prompts, refs = setup
+    eng = _engine(cfg, params, prefix)
+    long_i = PROMPT_LENS.index(29)           # 2 chunks of 16
+    r1 = eng.submit(prompts[long_i], max_new_tokens=MAX_NEW[long_i])
+
+    def mid_prefill():
+        return (r1 if r1.state == RequestState.PREFILL
+                and int(eng.kv.lens[r1.slot]) >= eng.kv.page_size
+                else None)
+
+    _step_until(eng, mid_prefill)
+    assert eng.cancel(r1)
+    eng.kv.check_integrity()
+    r2 = eng.submit(prompts[long_i], max_new_tokens=MAX_NEW[long_i])
+    eng.run_until_idle()
+    assert r2.output == refs[long_i]
+    assert eng.stats()["prefix_hits"] >= 1
+    eng.kv.check_integrity()
+
+
+def test_cancel_decode(setup, prefix):
+    cfg, params, prompts, refs = setup
+    eng = _engine(cfg, params, prefix)
+    reqs = _submit_all(eng, prompts)
+    victim = _step_until(eng, lambda: next(
+        (r for r in reqs
+         if r.state == RequestState.DECODE and r.output), None))
+    assert eng.cancel(victim)
+    assert victim.slot == -1
+    _check_end_state(eng, reqs, refs, [victim])
+    assert eng.stats()["cancelled_by_stage"] == {"decode": 1}
+
+
+@pytest.mark.parametrize("mode", ["recompute", "offload"])
+def test_cancel_preempted(setup, prefix, mode):
+    cfg, params, prompts, refs = setup
+    # pool pressure (test_preemption's storm sizing) so requests are
+    # parked in PREEMPTED for the cancel to land on
+    eng = _engine(cfg, params, prefix, num_pages=12, preempt=mode)
+    reqs = _submit_all(eng, prompts)
+    victim = _step_until(eng, lambda: next(
+        (r for r in reqs if r.state == RequestState.PREEMPTED), None))
+    assert victim.preempt_mode == mode
+    if mode == "offload":
+        assert eng.kv.offloaded_count >= 1
+        before = eng.kv.host_bytes
+        assert before > 0
+    assert eng.cancel(victim)
+    assert victim not in eng.scheduler.resuming
+    if mode == "offload":
+        # the host snapshot died with the request
+        assert eng.kv.host_bytes < before or eng.kv.offloaded_count == 0
+    eng.kv.check_integrity()
+    _check_end_state(eng, reqs, refs, [victim])
+    assert eng.stats()["cancelled_by_stage"] == {"preempted": 1}
+    assert eng.kv.offloaded_count == 0 and eng.kv.host_bytes == 0
+
+
+def test_cancel_done_is_noop(setup, prefix):
+    cfg, params, prompts, refs = setup
+    eng = _engine(cfg, params, prefix)
+    r = eng.submit(prompts[0], max_new_tokens=MAX_NEW[0])
+    eng.run_until_idle()
+    assert r.state == RequestState.DONE
+    # the disconnect-vs-finished race: cancel after completion is a no-op
+    assert not eng.cancel(r)
+    assert r.state == RequestState.DONE and r.output == refs[0]
+    assert eng.stats()["requests_cancelled"] == 0

@@ -1,0 +1,213 @@
+"""HTTP/SSE ingress tier (repro.serve.ingress): end-to-end streaming
+over real sockets bit-exact vs the in-process engine, client-disconnect
+→ Engine.cancel propagation with allocator integrity, both load-shed
+policies, request validation, and the ingress metric/span families."""
+import concurrent.futures
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.obs import PID_INGRESS, Recorder, Tracer
+from repro.serve import (Engine, EngineOptions, IngressClient,
+                         IngressOptions, IngressServer,
+                         dense_greedy_reference as ref_decode)
+
+PROMPT_LENS = (13, 29, 7)
+MAX_NEW = (6, 8, 5)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              compute_dtype="float32")
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.Generator(np.random.Philox(key=7))
+    prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in PROMPT_LENS]
+    refs = [ref_decode(params, cfg, p, m)
+            for p, m in zip(prompts, MAX_NEW)]
+    return cfg, params, prompts, refs
+
+
+@pytest.fixture(scope="module")
+def eng(setup):
+    cfg, params, _, _ = setup
+    e = Engine(cfg, params, options=EngineOptions(
+        page_size=4, max_slots=3, max_seq_len=64, chunk=16, min_bucket=8,
+        obs=Recorder(tracer=Tracer())))
+    e.warmup()
+    return e
+
+
+class _serve:
+    """Start an IngressServer over the shared engine for one test."""
+
+    def __init__(self, eng, **opts):
+        self.srv = IngressServer(eng, options=IngressOptions(**opts))
+
+    def __enter__(self):
+        self.srv.start()
+        return self.srv, IngressClient(self.srv.host, self.srv.port)
+
+    def __exit__(self, *exc):
+        self.srv.stop()
+
+
+def _wait(pred, timeout=10.0):
+    deadline = time.perf_counter() + timeout
+    while time.perf_counter() < deadline:
+        if pred():
+            return True
+        time.sleep(0.005)
+    return False
+
+
+def test_sse_stream_token_exact(setup, eng):
+    """Concurrent SSE streams emit exactly the tokens of the in-process
+    Engine.step() loop (itself pinned to the dense reference)."""
+    cfg, params, prompts, refs = setup
+    with _serve(eng) as (srv, cli):
+        assert cli.healthz()
+        with concurrent.futures.ThreadPoolExecutor(3) as ex:
+            futs = [ex.submit(cli.generate, p, max_new_tokens=m)
+                    for p, m in zip(prompts, MAX_NEW)]
+            results = [f.result(timeout=60) for f in futs]
+    for res, ref in zip(results, refs):
+        assert res.status == 200 and not res.degraded
+        assert res.tokens == ref                 # bit-exact end to end
+        assert res.finish_reason == "length"
+        assert res.ttft_s > 0 and res.latency_s >= res.ttft_s
+    eng.kv.check_integrity()
+    # ingress admission counter saw the three accepted streams
+    snap = eng.obs.registry.snapshot()
+    assert snap["repro_ingress_requests_total"]['outcome="accepted"'] >= 3
+
+
+def test_sse_eos_and_sampling_fields(setup, eng):
+    cfg, params, prompts, refs = setup
+    with _serve(eng) as (_, cli):
+        res = cli.generate(prompts[0], max_new_tokens=MAX_NEW[0],
+                           eos_id=refs[0][1])
+        assert res.tokens == refs[0][:2] and res.finish_reason == "eos"
+        # sampled stream: valid tokens, still per-step SSE
+        res = cli.generate(prompts[2], max_new_tokens=4,
+                           temperature=0.8, top_k=8, seed=3)
+        assert res.status == 200 and len(res.tokens) == 4
+        assert all(0 <= t < cfg.vocab_size for t in res.tokens)
+
+
+def test_request_validation(setup, eng):
+    cfg, params, prompts, _ = setup
+    with _serve(eng, max_body_bytes=256) as (srv, cli):
+        assert cli.generate([], max_new_tokens=4).status == 400
+        # over engine capacity -> submit's ValueError surfaces as a 400
+        assert cli.generate(prompts[0],
+                            max_new_tokens=100000).status == 400
+        # an oversized body is shed before parsing
+        assert cli.generate(list(range(300)),
+                            max_new_tokens=4).status == 413
+        import socket as _s
+        with _s.create_connection((srv.host, srv.port), 10) as sock:
+            sock.sendall(b"GET /nope HTTP/1.1\r\nHost: x\r\n\r\n")
+            assert b" 404 " in sock.makefile("rb").readline()
+        with _s.create_connection((srv.host, srv.port), 10) as sock:
+            sock.sendall(b"POST /generate HTTP/1.1\r\nHost: x\r\n"
+                         b"Content-Length: 9\r\n\r\nnot json!")
+            assert b" 400 " in sock.makefile("rb").readline()
+
+
+def test_disconnect_cancels_and_frees(setup, eng):
+    """A client that hangs up mid-stream cancels its request: the slot
+    and pages come back while the engine is still running (the output
+    stops well short of the budget), with the refcount audit clean."""
+    cfg, params, prompts, refs = setup
+    before = eng.stats()
+    with _serve(eng) as (srv, cli):
+        res = cli.generate(prompts[0], max_new_tokens=40,
+                           disconnect_after=2)
+        assert res.tokens == refs[0][:2]         # exact up to the hangup
+        assert _wait(lambda: eng.stats()["requests_cancelled"]
+                     == before["requests_cancelled"] + 1)
+        assert _wait(lambda: not eng.has_work)
+    victim = eng.cancelled[-1]
+    assert victim.finish_reason == "cancelled"
+    assert victim.slot == -1
+    assert len(victim.output) < 40               # freed mid-decode
+    stages = eng.stats()["cancelled_by_stage"]
+    assert stages.get("decode", 0) >= 1
+    eng.kv.check_integrity()
+    snap = eng.obs.registry.snapshot()
+    assert snap["repro_ingress_disconnects_total"] >= 1
+
+
+def test_disconnect_before_first_token(setup, eng):
+    """disconnect_after=0: the socket closes right after the response
+    headers — the request dies in whatever stage it reached."""
+    cfg, params, prompts, refs = setup
+    before = eng.stats()["requests_cancelled"]
+    with _serve(eng) as (srv, cli):
+        res = cli.generate(prompts[1], max_new_tokens=30,
+                           disconnect_after=0)
+        assert res.status == 200 and not res.tokens
+        assert _wait(lambda: eng.stats()["requests_cancelled"]
+                     == before + 1)
+        assert _wait(lambda: not eng.has_work)
+    eng.kv.check_integrity()
+
+
+def test_shed_reject(setup, eng):
+    """Past the admission bound, 'reject' answers 429 + Retry-After and
+    never touches the engine; capacity recovers once the queue drains."""
+    cfg, params, prompts, refs = setup
+    with _serve(eng, admission_queue=1,
+                shed_policy="reject") as (srv, cli):
+        with concurrent.futures.ThreadPoolExecutor(1) as ex:
+            blocker = ex.submit(cli.generate, prompts[1],
+                                max_new_tokens=35)
+            assert _wait(lambda: srv._inflight >= 1)
+            shed = cli.generate(prompts[0], max_new_tokens=4)
+            assert shed.status == 429 and not shed.tokens
+            assert shed.retry_after_s >= 1.0
+            assert blocker.result(timeout=60).tokens == \
+                ref_decode(params, cfg, prompts[1], 35)
+        # queue drained: admitted again
+        assert cli.generate(prompts[0],
+                            max_new_tokens=MAX_NEW[0]).tokens == refs[0]
+    snap = eng.obs.registry.snapshot()
+    assert snap["repro_ingress_requests_total"]['outcome="rejected"'] >= 1
+
+
+def test_shed_degrade(setup, eng):
+    """'degrade' admits past the bound with max_new_tokens clamped: the
+    client still gets tokens, and they are a prefix of exactly what the
+    unclamped run would have produced."""
+    cfg, params, prompts, refs = setup
+    with _serve(eng, admission_queue=1, shed_policy="degrade",
+                degrade_max_new=2) as (srv, cli):
+        with concurrent.futures.ThreadPoolExecutor(1) as ex:
+            blocker = ex.submit(cli.generate, prompts[1],
+                                max_new_tokens=35)
+            assert _wait(lambda: srv._inflight >= 1)
+            res = cli.generate(prompts[0], max_new_tokens=MAX_NEW[0])
+            assert res.status == 200 and res.degraded
+            assert res.tokens == refs[0][:2]     # clamped, still exact
+            assert res.finish_reason == "length"
+            blocker.result(timeout=60)
+    eng.kv.check_integrity()
+
+
+def test_ingress_spans(eng):
+    """STREAM spans land on the ingress pid with balanced begin/end."""
+    ev = eng.obs.tracer.export()["traceEvents"]
+    streams = [e for e in ev
+               if e.get("pid") == PID_INGRESS and e["name"] == "STREAM"]
+    assert sum(e["ph"] == "B" for e in streams) \
+        == sum(e["ph"] == "E" for e in streams) > 0
+    procs = {e["pid"]: e["args"]["name"] for e in ev
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert procs[PID_INGRESS] == "ingress"

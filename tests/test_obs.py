@@ -287,6 +287,47 @@ def test_metrics_server_agrees_with_stats(setup):
         s["free_units_by_shard"]["0"] == eng.kv.num_pages - 1
 
 
+def test_metrics_server_survives_midwrite_hangup():
+    """A scraper that hangs up mid-response (curl timeout, ^C) must not
+    traceback the handler thread — the write path is guarded."""
+    reg = Registry()
+    reg.counter("repro_x_total", "x").inc()
+    server = MetricsServer(reg, port=0)
+    try:
+        handler_cls = server._httpd.RequestHandlerClass
+
+        class Gone:
+            def write(self, *_):
+                raise BrokenPipeError
+
+            def flush(self):
+                pass
+
+        h = handler_cls.__new__(handler_cls)
+        h.path = "/metrics"
+        h.request_version = "HTTP/1.1"
+        h.requestline = "GET /metrics HTTP/1.1"
+        h.client_address = ("127.0.0.1", 0)
+        h.wfile = Gone()
+        h.do_GET()                         # must not raise
+        h.path = "/healthz"
+        h.do_GET()
+    finally:
+        server.stop()
+
+
+def test_metrics_server_stop_is_idempotent():
+    """CLI finally-blocks, tests and signal handlers may all call
+    stop(); the second call must be a no-op, not a hang or error."""
+    server = MetricsServer(Registry(), port=0).start()
+    assert urllib.request.urlopen(server.url + "/healthz",
+                                  timeout=10).read() == b"ok\n"
+    server.stop()
+    server.stop()                          # second shutdown: no-op
+    with pytest.raises(OSError):
+        urllib.request.urlopen(server.url + "/healthz", timeout=2)
+
+
 def test_stats_quantiles_use_shared_util(setup):
     cfg, params, prompts = setup
     eng = _run(cfg, params, prompts)

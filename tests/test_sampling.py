@@ -39,6 +39,21 @@ def test_top_k_one_is_argmax_at_any_temperature():
     assert (_sample(lg, temp=5.0, top_k=1) == lg.argmax(-1)).all()
 
 
+def test_top_k_strict_under_ties():
+    """Tied logits at the k-th rank: the keep set is decided by sort
+    rank (stable argsort -> lowest vocab index wins), never by a value
+    threshold that would admit every tied entry. Regression: top_k=1
+    over exact ties used to sample among all of them."""
+    lg = np.array([[1.0, 2.0, 2.0, 0.0]], np.float32)
+    for p in range(32):
+        assert _sample(lg, temp=1.0, top_k=1, pos=p)[0] == 1
+    # k=2 over a 3-way tie keeps exactly the two lowest tied indices
+    lg3 = np.array([[0.0, 5.0, 5.0, 5.0, -1.0]], np.float32)
+    seen = {int(_sample(lg3, temp=2.0, top_k=2, pos=p)[0])
+            for p in range(64)}
+    assert seen == {1, 2}
+
+
 def test_tiny_top_p_is_argmax():
     rng = np.random.Generator(np.random.Philox(key=3))
     lg = rng.standard_normal((4, 50)).astype(np.float32)

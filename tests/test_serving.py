@@ -235,6 +235,40 @@ def test_oversized_request_rejected(setup):
 
 
 # ---------------------------------------------------------------------------
+# Trace replay pacing
+# ---------------------------------------------------------------------------
+
+def test_replay_idles_in_few_sleeps(setup, monkeypatch):
+    """An idle gap before the next scheduled arrival is covered by a
+    handful of capped sleeps, not a 1 kHz busy-poll (regression: the
+    old 1 ms fixed sleep burned a core for the whole gap)."""
+    import time as _time
+
+    from repro.serve import TraceEntry, replay
+
+    cfg, params, prompts, refs = setup
+    eng = _engine(cfg, params)
+    trace = [TraceEntry(0.0, prompts[0], MAX_NEW[0]),
+             TraceEntry(0.4, prompts[2], MAX_NEW[2])]
+    calls = []
+    real_sleep = _time.sleep
+
+    def counting_sleep(s):
+        calls.append(s)
+        real_sleep(s)
+
+    monkeypatch.setattr(_time, "sleep", counting_sleep)
+    replay(eng, trace)
+    monkeypatch.undo()
+    outs = [r.output for r in sorted(eng.done, key=lambda r: r.rid)]
+    assert outs == [refs[0], refs[2]]
+    # the ~0.4s gap needs ~8 sleeps at the 0.05s cap; the old busy-poll
+    # took ~400. Generous headroom for engine-work jitter:
+    assert len(calls) <= 40, f"{len(calls)} sleeps — busy-polling again?"
+    assert all(s <= 0.05 + 1e-9 for s in calls)
+
+
+# ---------------------------------------------------------------------------
 # HW spec resolution (--hw flag / auto-detect)
 # ---------------------------------------------------------------------------
 

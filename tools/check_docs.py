@@ -48,10 +48,12 @@ REQUIRED_FLAGS = {
     "benchmarks/serving.py": ("--devices", "--smoke", "--overload",
                               "--kv-sharding", "--compare-arch",
                               "--obs-overhead", "--attn-kernel-compare",
-                              "--prefix-cache-compare"),
+                              "--prefix-cache-compare",
+                              "--ingress-loadgen"),
     "-m repro.launch.serve": ("--devices", "--engine", "--kv-sharding",
                               "--arch", "--metrics-port", "--trace-out",
-                              "--attn-kernel", "--prefix-cache"),
+                              "--attn-kernel", "--prefix-cache",
+                              "--http-port", "--shed-policy"),
 }
 
 

@@ -38,6 +38,7 @@ DEFAULT_TESTS = ["tests/test_serving.py", "tests/test_preemption.py",
                  "tests/test_state_cache.py", "tests/test_obs.py",
                  "tests/test_paged_attention.py",
                  "tests/test_prefix_cache.py",
+                 "tests/test_cancel.py", "tests/test_ingress.py",
                  "-m", "not slow", "-q"]
 
 
